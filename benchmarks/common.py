@@ -1,0 +1,53 @@
+"""Shared benchmark plumbing: run one DARIS sim config, cache JSON."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.core.scheduler import DarisScheduler, SchedulerConfig
+from repro.runtime.sim import FaultPlan, SimEngine
+from repro.serving.profiles import device
+from repro.serving.requests import mixed_taskset, ratio_taskset, table2_taskset
+
+ART = pathlib.Path("artifacts/bench")
+HORIZON_MS = 6000.0
+
+
+def run_sim(specs, sched_cfg: SchedulerConfig, *, horizon_ms: float = HORIZON_MS,
+            seed: int = 0, fault_plan=None) -> dict:
+    t0 = time.time()
+    sched = DarisScheduler(specs, sched_cfg, device())
+    eng = SimEngine(sched, horizon_ms=horizon_ms, seed=seed,
+                    fault_plan=fault_plan)
+    m = eng.run()
+    s = m.summary()
+    s["wall_s"] = time.time() - t0
+    return s
+
+
+def cache_json(name: str, payload: dict) -> None:
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def load_json(name: str):
+    p = ART / f"{name}.json"
+    if p.exists():
+        return json.loads(p.read_text())
+    return None
+
+
+def mps_cfg(nc: int, os_: float, **kw) -> SchedulerConfig:
+    return SchedulerConfig(n_contexts=nc, n_streams=1, oversubscription=os_,
+                           **kw)
+
+
+def str_cfg(ns: int, **kw) -> SchedulerConfig:
+    return SchedulerConfig(n_contexts=1, n_streams=ns, oversubscription=1.0,
+                           **kw)
+
+
+def mps_str_cfg(nc: int, ns: int, os_: float, **kw) -> SchedulerConfig:
+    return SchedulerConfig(n_contexts=nc, n_streams=ns, oversubscription=os_,
+                           **kw)

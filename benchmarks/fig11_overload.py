@@ -1,0 +1,50 @@
+"""Paper Fig 11 / §VI-I: HP:LP ratios, full load vs overload, Overload+HPA.
+
+Paper behaviour to reproduce: throughput stable across ratios; full load ->
+no misses (~5% throughput dip with LP present); overload without HP
+admission -> HP DMR explodes once HP load > 100%; Overload+HPA -> zero HP
+misses at the cost of HP rejections + higher LP DMR.
+"""
+from __future__ import annotations
+
+from repro.serving.profiles import TABLE1, t_alone_ms
+from repro.serving.requests import ratio_taskset
+
+from .common import cache_json, load_json, mps_cfg, run_sim
+
+
+def run() -> dict:
+    cached = load_json("fig11")
+    if cached:
+        return cached
+    out = {}
+    for dnn in ("resnet18", "unet"):
+        upper = TABLE1[dnn][1]
+        rows = []
+        for hp_frac in (0.33, 0.5, 0.66):
+            for load, tag in ((1.0, "full"), (1.5, "overload")):
+                total_tasks = 30 if dnn == "resnet18" else 12
+                jps = upper * load / total_tasks
+                for hpa in (False, True):
+                    if tag == "full" and hpa:
+                        continue
+                    specs = ratio_taskset(dnn, hp_frac, total_tasks, jps)
+                    s = run_sim(specs, mps_cfg(6, 6.0, overload_hpa=hpa))
+                    rows.append(dict(hp_frac=hp_frac, load=tag, hpa=hpa, **s))
+        out[dnn] = rows
+    cache_json("fig11", out)
+    return out
+
+
+def csv_lines(out) -> list:
+    lines = []
+    for dnn, rows in out.items():
+        over = [r for r in rows if r["load"] == "overload" and not r["hpa"]
+                and r["hp_frac"] > 0.6]
+        hpa = [r for r in rows if r["load"] == "overload" and r["hpa"]
+               and r["hp_frac"] > 0.6]
+        if over:
+            lines.append(f"fig11/{dnn}_overload_dmr_hp,0,{over[0]['dmr_hp']:.4f}")
+        if hpa:
+            lines.append(f"fig11/{dnn}_overload_hpa_dmr_hp,0,{hpa[0]['dmr_hp']:.4f}")
+    return lines

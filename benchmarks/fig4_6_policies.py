@@ -1,0 +1,62 @@
+"""Paper Figs 4-6: throughput + LP DMR per policy/config per DNN task set.
+
+Policies: MPS (Nc x 1, OS in {1, 2, Nc}), STR (1 x Ns), MPS+STR (Nc x Ns).
+Baselines per DNN: lower = single-stream JPS, upper = pure batching
+(Table I). The headline cells the paper quotes:
+  RN18:  MPS 6x1_6 -> 1158 JPS (13% over batching); UNet 6x1_2 -> 281 (+8%);
+  IncV3: 8x1_8 -> 87% of upper baseline.
+"""
+from __future__ import annotations
+
+from repro.serving.profiles import TABLE1
+from repro.serving.requests import table2_taskset
+
+from .common import cache_json, load_json, mps_cfg, mps_str_cfg, run_sim, str_cfg
+
+
+def run(fast: bool = False) -> dict:
+    cached = load_json("fig4_6")
+    if cached:
+        return cached
+    out = {}
+    ncs = (2, 4, 6, 8, 10) if fast else (2, 3, 4, 5, 6, 7, 8, 9, 10)
+    for dnn in ("resnet18", "unet", "inceptionv3"):
+        specs_fn = lambda: table2_taskset(dnn)
+        rows = []
+        for nc in ncs:
+            for os_ in (1.0, 2.0, float(nc)):
+                s = run_sim(specs_fn(), mps_cfg(nc, os_))
+                rows.append(dict(policy="MPS", nc=nc, ns=1, os=os_, **s))
+        for ns in ncs:
+            s = run_sim(specs_fn(), str_cfg(ns))
+            rows.append(dict(policy="STR", nc=1, ns=ns, os=1.0, **s))
+        for nc in (2, 3, 4):
+            for ns in (2, 3):
+                for os_ in (1.0, float(nc)):
+                    s = run_sim(specs_fn(), mps_str_cfg(nc, ns, os_))
+                    rows.append(dict(policy="MPS+STR", nc=nc, ns=ns, os=os_,
+                                     **s))
+        out[dnn] = {
+            "rows": rows,
+            "upper_baseline": TABLE1[dnn][1],
+            "lower_baseline": TABLE1[dnn][0],
+        }
+    cache_json("fig4_6", out)
+    return out
+
+
+def best_of(rows, policy):
+    cand = [r for r in rows if r["policy"] == policy]
+    return max(cand, key=lambda r: r["jps"]) if cand else None
+
+
+def csv_lines(out) -> list:
+    lines = []
+    for dnn, blob in out.items():
+        for pol in ("MPS", "STR", "MPS+STR"):
+            b = best_of(blob["rows"], pol)
+            if b:
+                lines.append(
+                    f"fig4_6/{dnn}_{pol}_best,{b['wall_s']*1e6:.0f},"
+                    f"{b['jps']:.0f}")
+    return lines

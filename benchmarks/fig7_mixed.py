@@ -1,0 +1,34 @@
+"""Paper Fig 7: mixed task set (all DNN types colocated)."""
+from __future__ import annotations
+
+from repro.serving.requests import mixed_taskset
+
+from .common import cache_json, load_json, mps_cfg, run_sim, str_cfg
+
+
+def run() -> dict:
+    cached = load_json("fig7")
+    if cached:
+        return cached
+    rows = []
+    for nc in (2, 4, 6, 8):
+        for os_ in (1.0, 2.0, float(nc)):
+            s = run_sim(mixed_taskset(), mps_cfg(nc, os_))
+            rows.append(dict(policy="MPS", nc=nc, os=os_, **s))
+    for ns in (2, 4, 6, 8):
+        s = run_sim(mixed_taskset(), str_cfg(ns))
+        rows.append(dict(policy="STR", ns=ns, **s))
+    out = {"rows": rows}
+    cache_json("fig7", out)
+    return out
+
+
+def csv_lines(out) -> list:
+    best_mps = max((r for r in out["rows"] if r["policy"] == "MPS"),
+                   key=lambda r: r["jps"])
+    best_str = max((r for r in out["rows"] if r["policy"] == "STR"),
+                   key=lambda r: r["jps"])
+    return [
+        f"fig7/mixed_MPS_best,{best_mps['wall_s']*1e6:.0f},{best_mps['jps']:.0f}",
+        f"fig7/mixed_STR_best,{best_str['wall_s']*1e6:.0f},{best_str['jps']:.0f}",
+    ]

@@ -1,0 +1,47 @@
+"""Paper Fig 8 / §VI-F: DARIS module ablations on ResNet18.
+
+  No Staging : whole-task units (paper: -33% throughput, 5.5%/22.5% DMR)
+  No Last    : last stage not boosted (paper: +38% HP worst response)
+  No Prior   : no missed-vdl boost (paper: higher mean responses)
+  No Fixed   : no HP/LP differentiation (paper: 2.5% DMR both classes)
+"""
+from __future__ import annotations
+
+from repro.serving.requests import table2_taskset
+
+from .common import cache_json, load_json, mps_cfg, run_sim
+
+BEST = dict(nc=8, os_=8.0)
+
+
+def run() -> dict:
+    cached = load_json("fig8")
+    if cached:
+        return cached
+    variants = {
+        "daris": {},
+        "no_staging": {"no_staging": True},
+        "no_last": {"no_last": True},
+        "no_prior": {"no_prior": True},
+        "no_fixed": {"no_fixed": True},
+    }
+    rows = {}
+    for name, kw in variants.items():
+        s = run_sim(table2_taskset("resnet18"),
+                    mps_cfg(BEST["nc"], BEST["os_"], **kw))
+        rows[name] = s
+    base = rows["daris"]["jps"]
+    for name in rows:
+        rows[name]["jps_vs_daris"] = rows[name]["jps"] / base
+    out = {"rows": rows, "config": BEST}
+    cache_json("fig8", out)
+    return out
+
+
+def csv_lines(out) -> list:
+    lines = []
+    for name, s in out["rows"].items():
+        lines.append(f"fig8/{name}_jps,{s['wall_s']*1e6:.0f},{s['jps']:.0f}")
+        lines.append(f"fig8/{name}_resp_hp_p99,0,"
+                     f"{s['resp_hp']['p99']:.2f}")
+    return lines

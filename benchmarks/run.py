@@ -1,0 +1,63 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract; each
+module also caches full JSON under artifacts/bench/ (EXPERIMENTS.md reads
+those). ``--fast`` trims sweep widths for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+
+    from . import (baselines, fig4_6_policies, fig7_mixed, fig8_ablation,
+                   fig9_mret, fig10_batching, fig11_overload, table1_batching)
+
+    lines = []
+    jobs = [
+        ("table1", lambda: table1_batching.csv_lines(table1_batching.run())),
+        ("fig4_6", lambda: fig4_6_policies.csv_lines(
+            fig4_6_policies.run(fast=args.fast))),
+        ("fig7", lambda: fig7_mixed.csv_lines(fig7_mixed.run())),
+        ("fig8", lambda: fig8_ablation.csv_lines(fig8_ablation.run())),
+        ("fig9", lambda: fig9_mret.csv_lines(fig9_mret.run())),
+        ("fig10", lambda: fig10_batching.csv_lines(fig10_batching.run())),
+        ("fig11", lambda: fig11_overload.csv_lines(fig11_overload.run())),
+        ("baselines", lambda: baselines.csv_lines(baselines.run())),
+    ]
+    for name, fn in jobs:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            lines.extend(fn())
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # keep the harness running
+            print(f"# {name} FAILED: {e!r}", file=sys.stderr)
+            lines.append(f"{name}/FAILED,0,0")
+
+    # roofline summary rows (from dry-run artifacts, if present)
+    try:
+        from repro.launch.roofline import build_table
+        rows = build_table()
+        for r in rows:
+            lines.append(
+                f"roofline/{r['arch']}__{r['shape']},0,"
+                f"{r['roofline_fraction']:.4f}")
+    except Exception as e:
+        print(f"# roofline rows skipped: {e!r}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for ln in lines:
+        print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table I: single-stream vs batched throughput per DNN.
+
+min JPS = single stream alone (by construction of the calibration);
+max JPS = large-batch single tenant. The batching CURVE (b = 1..32) is the
+model's prediction; min/max anchor the calibration inputs, the in-between
+shape is emergent. Also validates the sim agrees with the analytic profile
+(single batched task, single lane, saturation load).
+"""
+from __future__ import annotations
+
+from repro.core.task import HP, TaskSpec
+from repro.serving.profiles import (TABLE1, effective_batch_profile,
+                                    make_task, t_alone_ms)
+
+from .common import cache_json, run_sim, str_cfg
+
+PAPER = {"resnet18": (627, 1025, 1.63), "resnet50": (250, 433, 1.73),
+         "unet": (241, 260, 1.08), "inceptionv3": (142, 446, 3.13)}
+
+
+def run() -> list:
+    rows = []
+    for dnn, (mn, mx) in TABLE1.items():
+        curve = {}
+        for b in (1, 2, 4, 8, 16, 32):
+            t_b, _ = effective_batch_profile(dnn, b)
+            curve[b] = 1000.0 * b / t_b
+        # sim cross-check at b=8: one batched task saturating one lane
+        jps_target = curve[8] / 8 * 1.05
+        spec = make_task(dnn, priority=HP, jps=jps_target, batch=8)
+        s = run_sim([spec], str_cfg(1), horizon_ms=4000.0)
+        sim_jps = s["jps"] * 8          # jobs carry batch-8 payloads
+        gain = curve[32] / curve[1]
+        rows.append({
+            "dnn": dnn, "min_jps_model": curve[1], "max_jps_model": curve[32],
+            "gain_model": gain,
+            "paper_min": PAPER[dnn][0], "paper_max": PAPER[dnn][1],
+            "paper_gain": PAPER[dnn][2],
+            "sim_batched_jps_b8": sim_jps, "curve": curve,
+            "wall_s": s["wall_s"],
+        })
+    cache_json("table1", {"rows": rows})
+    return rows
+
+
+def csv_lines(rows) -> list:
+    out = []
+    for r in rows:
+        out.append(f"table1/{r['dnn']}_gain,{r['wall_s']*1e6:.0f},"
+                   f"{r['gain_model']:.2f}")
+    return out

@@ -1,0 +1,80 @@
+"""Zero-delay migration demo: move a staged LM job between two partitions
+(sub-meshes) at a stage boundary by resharding its inter-stage activation.
+
+Runs with 8 forced host devices (set before jax import) split into two
+4-device partitions — the TPU-pod mechanism at laptop scale (DESIGN.md §2).
+
+    PYTHONPATH=src python examples/migrate_zero_delay.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serving.staging import make_lm_stage_fns, migrate
+
+
+def main():
+    devs = np.array(jax.devices())
+    part_a = Mesh(devs[:4].reshape(4), ("data",))
+    part_b = Mesh(devs[4:].reshape(4), ("data",))
+    print(f"partition A: {[d.id for d in devs[:4]]}")
+    print(f"partition B: {[d.id for d in devs[4:]]}")
+
+    cfg = get_reduced("smollm-135m").replace(n_layers=8)
+    model = build_model(cfg)
+    params = model.init_params(0)
+    stages = make_lm_stage_fns(model, n_stages=4)
+    pos = jnp.arange(32, dtype=jnp.int32)
+    tokens = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (8, 32)))
+
+    # replicate weights on both partitions up front (candidate partitions
+    # pre-stage weights so migration only moves the activation)
+    rep_a = NamedSharding(part_a, P())
+    rep_b = NamedSharding(part_b, P())
+    params_a = jax.device_put(params, rep_a)
+    params_b = jax.device_put(params, rep_b)
+
+    # run stages 0-1 on partition A
+    x = jax.device_put(tokens, NamedSharding(part_a, P("data", None)))
+    for i in (0, 1):
+        x, _ = jax.jit(stages[i])(params_a, x, None, pos)
+    jax.block_until_ready(x)
+
+    # zero-delay migration at the stage boundary: reshard the activation
+    t0 = time.perf_counter()
+    x = migrate(x, NamedSharding(part_b, P("data", None, None)))
+    jax.block_until_ready(x)
+    mig_ms = (time.perf_counter() - t0) * 1000
+
+    for i in (2, 3):
+        x, _ = jax.jit(stages[i])(params_b, x, None, pos)
+    jax.block_until_ready(x)
+
+    # reference: whole model on partition A
+    ref = jax.device_put(tokens, NamedSharding(part_a, P("data", None)))
+    for i in range(4):
+        ref, _ = jax.jit(stages[i])(params_a, ref, None, pos)
+
+    err = float(jnp.max(jnp.abs(x - jax.device_put(ref, rep_b))))
+    stage_ms = 50.0  # representative stage time at this scale
+    print(f"\nmigration (activation reshard A->B): {mig_ms:.2f} ms")
+    print(f"logits max |A-then-B minus all-A| = {err:.2e}  (bit-exact path)")
+    print("no running program was interrupted: migration happened between "
+          "stage programs — the paper's 'zero-delay' property (§I).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end driver: REAL JAX execution of staged CNNs under DARIS.
+
+Three DNN families (the paper's benchmarks, reduced size for CPU), staged
+into 4 sub-tasks each, scheduled by the full DARIS stack — MRET estimation
+from *measured* wall times, admission, priorities, migration — on wall-
+clock time with one worker thread per lane.
+
+    PYTHONPATH=src python examples/serve_realtime.py [--seconds 4]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.scheduler import DarisScheduler, SchedulerConfig
+from repro.core.task import HP, LP
+from repro.models.cnn import build_inception, build_resnet, build_unet
+from repro.runtime.contention import DeviceModel
+from repro.serving.engine import RealtimeEngine, staged_cnn_taskspec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=float, default=4.0)
+    ap.add_argument("--hw", type=int, default=32)
+    args = ap.parse_args()
+
+    print("building + calibrating staged CNNs (AFET measurement)...")
+    rn = build_resnet(18, width=8)
+    un = build_unet(width=8)
+    iv = build_inception(width=8)
+    specs = [
+        staged_cnn_taskspec(rn, priority=HP, jps=12.0, input_hw=args.hw,
+                            tag="-hp0"),
+        staged_cnn_taskspec(rn, priority=LP, jps=12.0, input_hw=args.hw,
+                            tag="-lp0"),
+        staged_cnn_taskspec(un, priority=LP, jps=8.0, input_hw=args.hw,
+                            tag="-lp0"),
+        staged_cnn_taskspec(iv, priority=HP, jps=8.0, input_hw=args.hw,
+                            tag="-hp0"),
+    ]
+    for s in specs:
+        mret = sum(st.t_alone_ms for st in s.stages)
+        print(f"  {s.name:18s} prio={'HP' if s.priority == HP else 'LP'} "
+              f"measured t_alone={mret:6.1f}ms period={s.period_ms:.0f}ms")
+
+    sched = DarisScheduler(
+        specs, SchedulerConfig(n_contexts=2, n_streams=1,
+                               oversubscription=2.0),
+        DeviceModel(n_units=2.0))
+    eng = RealtimeEngine(sched, horizon_ms=args.seconds * 1000.0,
+                         input_hw=args.hw)
+    print(f"\nserving for {args.seconds:.0f}s of wall clock...")
+    m = eng.run()
+    s = m.summary()
+    print(f"\ncompleted: HP {m.completed[HP]}  LP {m.completed[LP]} "
+          f"({s['jps']:.1f} JPS)")
+    print(f"deadline miss rate: HP {s['dmr_hp']:.1%}  LP {s['dmr_lp']:.1%}")
+    print(f"response ms: HP mean {s['resp_hp']['mean']:.1f} "
+          f"p95 {s['resp_hp']['p95']:.1f} | LP mean "
+          f"{s['resp_lp']['mean']:.1f} p95 {s['resp_lp']['p95']:.1f}")
+    print(f"rejected (admission): LP {s['rejected_lp']}  HP {s['rejected_hp']}")
+    print("\nMRET adapted from measured stage times (ws=5); HP responses "
+          "should sit well below LP.")
+
+
+if __name__ == "__main__":
+    main()

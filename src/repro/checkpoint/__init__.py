@@ -1,0 +1,2 @@
+from .ckpt import (load_pytree, load_scheduler_state, save_pytree,
+                   save_scheduler_state)  # noqa: F401

@@ -1,0 +1,106 @@
+"""Lightweight atomic checkpointer (orbax is unavailable offline).
+
+Pytrees save as one .npz (flattened '/'-joined paths) + a json manifest;
+writes go to a tmp dir and rename atomically, so a crash mid-save never
+corrupts the latest checkpoint. Scheduler state (MRET windows, context
+assignments — what lets a restarted server skip the AFET cold-start,
+DESIGN.md §7) serializes via msgpack.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+from typing import Optional
+
+import msgpack
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(tree, path: str, step: Optional[int] = None) -> str:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "leaves": {k: {"shape": list(v.shape),
+                                             "dtype": str(v.dtype)}
+                                         for k, v in flat.items()}}
+    with tempfile.TemporaryDirectory(dir=p.parent) as tmp:
+        tmp_npz = pathlib.Path(tmp) / "data.npz"
+        np.savez(tmp_npz, **{k: v for k, v in flat.items()})
+        (pathlib.Path(tmp) / "manifest.json").write_text(
+            json.dumps(manifest, indent=1))
+        final = p.with_suffix(".ckpt")
+        staging = p.parent / (p.name + ".tmp")
+        if staging.exists():
+            import shutil
+            shutil.rmtree(staging)
+        os.rename(tmp, staging)
+    if final.exists():
+        import shutil
+        shutil.rmtree(final)
+    os.rename(staging, final)
+    return str(final)
+
+
+def load_pytree(template, path: str):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    final = pathlib.Path(path).with_suffix(".ckpt")
+    data = np.load(final / "data.npz")
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in p)
+        arr = data[key]
+        assert arr.shape == tuple(np.shape(leaf)), (key, arr.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+# ------------------------------------------------------- scheduler state
+def save_scheduler_state(sched, path: str) -> str:
+    state = {
+        "tasks": [
+            {
+                "name": t.name, "ctx": t.ctx, "fixed": t.fixed_ctx,
+                "mret_windows": [list(s.window) for s in t.mret.stages],
+                "afets": [s.afet_ms for s in t.mret.stages],
+            }
+            for t in sched.tasks
+        ],
+        "migrations": sched.migrations,
+    }
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_suffix(".tmp")
+    tmp.write_bytes(msgpack.packb(state))
+    os.replace(tmp, p)
+    return str(p)
+
+
+def load_scheduler_state(sched, path: str) -> None:
+    state = msgpack.unpackb(pathlib.Path(path).read_bytes())
+    by_name = {t["name"]: t for t in state["tasks"]}
+    for t in sched.tasks:
+        if t.name not in by_name:
+            continue
+        rec = by_name[t.name]
+        t.ctx = rec["ctx"]
+        t.fixed_ctx = rec["fixed"]
+        for s, win in zip(t.mret.stages, rec["mret_windows"]):
+            s.window.clear()
+            s.window.extend(win)

@@ -1,0 +1,66 @@
+"""JPS / DMR / response-time metrics (paper §V-VI conventions).
+
+DMR = missed deadlines / accepted jobs, per priority class. A job that
+finishes after its deadline still completes (soft real-time); rejected
+jobs are counted separately (admission).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from .task import HP, LP
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    horizon_ms: float
+    completed: Dict[int, int]
+    missed: Dict[int, int]
+    rejected: Dict[int, int]
+    response_ms: Dict[int, List[float]]
+    migrations: int = 0
+    stragglers: int = 0
+    faults: int = 0
+
+    @property
+    def jps(self) -> float:
+        return sum(self.completed.values()) / (self.horizon_ms / 1000.0)
+
+    def jps_by(self, p: int) -> float:
+        return self.completed[p] / (self.horizon_ms / 1000.0)
+
+    def dmr(self, p: int) -> float:
+        acc = self.completed[p]
+        return self.missed[p] / acc if acc else 0.0
+
+    def resp_stats(self, p: int) -> Dict[str, float]:
+        r = self.response_ms[p]
+        if not r:
+            return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0,
+                    "min": 0.0, "max": 0.0}
+        a = np.asarray(r)
+        return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
+                "p95": float(np.percentile(a, 95)),
+                "p99": float(np.percentile(a, 99)),
+                "min": float(a.min()), "max": float(a.max())}
+
+    def summary(self) -> Dict:
+        return {
+            "jps": self.jps,
+            "jps_hp": self.jps_by(HP), "jps_lp": self.jps_by(LP),
+            "dmr_hp": self.dmr(HP), "dmr_lp": self.dmr(LP),
+            "rejected_hp": self.rejected[HP], "rejected_lp": self.rejected[LP],
+            "resp_hp": self.resp_stats(HP), "resp_lp": self.resp_stats(LP),
+            "migrations": self.migrations, "stragglers": self.stragglers,
+            "faults": self.faults,
+        }
+
+
+def empty_metrics(horizon_ms: float) -> RunMetrics:
+    return RunMetrics(horizon_ms=horizon_ms,
+                      completed={HP: 0, LP: 0}, missed={HP: 0, LP: 0},
+                      rejected={HP: 0, LP: 0},
+                      response_ms={HP: [], LP: []})

@@ -1,0 +1,52 @@
+"""MRET — Maximum Recent Execution Time (paper §III-B2, Eq. 1-2).
+
+Per-stage sliding-window maximum over the last ``ws`` completed executions;
+task MRET is the sum over stages (Eq. 2). Before any history exists the
+estimator is seeded with AFET (average full-load execution time, §IV-A1),
+the paper's pessimistic offline initialization.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Sequence
+
+
+class StageMret:
+    def __init__(self, afet_ms: float, ws: int = 5):
+        self.ws = ws
+        self.window: deque = deque(maxlen=ws)
+        self.afet_ms = afet_ms
+
+    def observe(self, et_ms: float) -> None:
+        self.window.append(et_ms)
+
+    def value(self) -> float:
+        """Eq. 1: max over the recent window (AFET until history exists)."""
+        if not self.window:
+            return self.afet_ms
+        return max(self.window)
+
+
+class TaskMret:
+    """Eq. 2: mret_i = sum_j mret_{i,j}; plus Eq. 8 virtual-deadline split."""
+
+    def __init__(self, stage_afets_ms: Sequence[float], ws: int = 5):
+        self.stages = [StageMret(a, ws) for a in stage_afets_ms]
+
+    def observe(self, stage_idx: int, et_ms: float) -> None:
+        self.stages[stage_idx].observe(et_ms)
+
+    def stage_mret(self, stage_idx: int, now_ms: float = 0.0) -> float:
+        return self.stages[stage_idx].value()
+
+    def task_mret(self, now_ms: float = 0.0) -> float:
+        return sum(s.value() for s in self.stages)
+
+    def virtual_deadlines(self, deadline_ms: float) -> List[float]:
+        """Eq. 8: D_{i,j} = (mret_{i,j} / mret_i) * D_i  (relative slice
+        widths; caller accumulates to absolute deadlines)."""
+        total = self.task_mret()
+        if total <= 0:
+            n = len(self.stages)
+            return [deadline_ms / n] * n
+        return [s.value() / total * deadline_ms for s in self.stages]

@@ -1,0 +1,51 @@
+"""Spatial partitioning with oversubscription (paper Eq. 9).
+
+N_SM = ceil_even(OS * N_SM,max / N_c), 1 <= OS <= N_c. Units are SMs on the
+paper's GPU and chips on a TPU pod slice (DESIGN.md §2) — the geometry is
+identical. With OS > 1 the wrap-around allocation makes contexts overlap,
+so idle capacity in one context is usable by its neighbours (the core
+oversubscription benefit the paper measures).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Set
+
+
+def ceil_even(x: float) -> int:
+    v = math.ceil(x)
+    return v + (v % 2)if v % 2 else v
+
+
+@dataclasses.dataclass
+class Context:
+    index: int
+    units: Set[int]                 # unit ids (overlapping when OS > 1)
+    n_streams: int
+    alive: bool = True
+
+    @property
+    def cap(self) -> float:
+        return float(len(self.units))
+
+
+def make_contexts(n_contexts: int, n_streams: int, oversubscription: float,
+                  n_units: int) -> List[Context]:
+    """Eq. 9 allocation. OS=1 -> disjoint partitions; OS=N_c -> full
+    sharing; intermediate values overlap neighbours (wrap-around)."""
+    os_v = min(max(oversubscription, 1.0), float(n_contexts))
+    per_ctx = min(ceil_even(os_v * n_units / n_contexts), n_units)
+    out = []
+    stride = n_units / n_contexts
+    for k in range(n_contexts):
+        start = int(round(k * stride)) % n_units
+        units = {(start + i) % n_units for i in range(per_ctx)}
+        out.append(Context(index=k, units=units, n_streams=n_streams))
+    return out
+
+
+def overlap_matrix(contexts: List[Context]) -> List[List[int]]:
+    n = len(contexts)
+    return [[len(contexts[a].units & contexts[b].units) for b in range(n)]
+            for a in range(n)]

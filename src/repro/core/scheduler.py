@@ -1,0 +1,249 @@
+"""DARIS scheduler: offline phase (AFET + Algorithm 1) + online phase
+(admission Eq. 11-12, migration, 8-level stage dispatch) — paper §IV.
+
+The scheduler is engine-agnostic: the discrete-event simulator
+(runtime/sim.py) and the real JAX executor (serving/engine.py) both drive
+it through the same callbacks:
+
+    on_release(task, now)        periodic job release -> admission test
+    on_stage_finish(inst, now)   MRET update, vdl bookkeeping, next stage
+    next_for_lane(ctx, now)      dispatch decision for a free lane
+
+Policies (paper §V): STR = 1 context x N_s streams (single global queue);
+MPS = N_c x 1; MPS+STR = N_c x N_s. Oversubscription per Eq. 9.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from ..runtime.contention import ContentionModel, DeviceModel
+from .mret import TaskMret
+from .partition import Context, make_contexts
+from .stage_queue import QueueConfig, StageQueue
+from .task import HP, LP, Job, StageInstance, Task, TaskSpec
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    n_contexts: int = 4
+    n_streams: int = 1
+    oversubscription: float = 2.0
+    mret_window: int = 5
+    overload_hpa: bool = False        # admission-test HP too (paper §VI-I)
+    no_staging: bool = False          # ablations (paper §VI-F)
+    no_last: bool = False
+    no_prior: bool = False
+    no_fixed: bool = False
+    straggler_kappa: float = 3.0      # beyond-paper: straggler threshold
+
+    @property
+    def queue_cfg(self) -> QueueConfig:
+        return QueueConfig(no_last=self.no_last, no_prior=self.no_prior,
+                           no_fixed=self.no_fixed)
+
+
+@dataclasses.dataclass
+class Rejection:
+    task: str
+    t_ms: float
+    priority: int
+
+
+class DarisScheduler:
+    def __init__(self, specs: List[TaskSpec], cfg: SchedulerConfig,
+                 device: Optional[DeviceModel] = None):
+        self.cfg = cfg
+        self.device = device or DeviceModel()
+        self.contention = ContentionModel(self.device)
+        if cfg.no_staging:
+            specs = [self._merge_stages(s) for s in specs]
+        self.tasks: List[Task] = [Task(spec=s, index=i)
+                                  for i, s in enumerate(specs)]
+        self.contexts: List[Context] = make_contexts(
+            cfg.n_contexts, cfg.n_streams, cfg.oversubscription,
+            int(self.device.n_units))
+        self.queues: Dict[int, StageQueue] = {
+            c.index: StageQueue(cfg.queue_cfg) for c in self.contexts}
+        # lane occupancy: (ctx, slot) -> StageInstance | None
+        self.lanes: Dict[tuple, Optional[StageInstance]] = {
+            (c.index, s): None for c in self.contexts
+            for s in range(c.n_streams)}
+        self.active_jobs: Dict[int, List[Job]] = {c.index: []
+                                                  for c in self.contexts}
+        self.rejections: List[Rejection] = []
+        self.migrations = 0
+        self._offline_phase()
+
+    # ------------------------------------------------------------- offline
+    @staticmethod
+    def _merge_stages(spec: TaskSpec) -> TaskSpec:
+        from .task import StageProfile
+        st = spec.stages
+        merged = StageProfile(
+            name=f"{spec.name}/whole",
+            t_alone_ms=sum(s.t_alone_ms for s in st),
+            n_sat=max(s.n_sat for s in st),
+            mem_frac=sum(s.mem_frac * s.t_alone_ms for s in st)
+            / max(sum(s.t_alone_ms for s in st), 1e-9),
+            overhead_ms=st[0].overhead_ms,   # one sync instead of n_i
+        )
+        return dataclasses.replace(spec, stages=[merged])
+
+    def _offline_phase(self) -> None:
+        """AFET seeding (§IV-A1) + Algorithm 1 context population."""
+        n_p = self.cfg.n_contexts * self.cfg.n_streams
+        cap0 = self.contexts[0].cap
+        for t in self.tasks:
+            afets = [self.contention.full_load_time(
+                p, cap0, self.cfg.n_streams, n_p) for p in t.spec.stages]
+            t.mret = TaskMret(afets, ws=self.cfg.mret_window)
+        # Algorithm 1: HP first, then LP, each to the min-utilization context
+        util = {c.index: 0.0 for c in self.contexts}
+        for t in sorted([t for t in self.tasks if t.priority == HP],
+                        key=lambda t: -t.utilization(0.0)):
+            k = min(util, key=util.get)
+            t.ctx = k
+            t.fixed_ctx = True
+            util[k] += t.utilization(0.0)
+        for t in sorted([t for t in self.tasks if t.priority == LP],
+                        key=lambda t: -t.utilization(0.0)):
+            k = min(util, key=util.get)
+            t.ctx = k
+            util[k] += t.utilization(0.0)
+
+    # ----------------------------------------------------- utilization (Eq. 4-7)
+    def util_hp_total(self, k: int, now: float) -> float:
+        return sum(t.utilization(now) for t in self.tasks
+                   if t.ctx == k and t.priority == HP)
+
+    def util_lp_active(self, k: int, now: float) -> float:
+        return sum(j.task.utilization(now) for j in self.active_jobs[k]
+                   if j.task.priority == LP)
+
+    def remaining_util(self, k: int, now: float) -> float:
+        """Eq. 11: U_r = N_s - U_h,t."""
+        ctx = self.contexts[k]
+        return ctx.n_streams - self.util_hp_total(k, now)
+
+    def admits(self, k: int, task: Task, now: float) -> bool:
+        """Eq. 12: U_l,a + u_j < U_r."""
+        if not self.contexts[k].alive:
+            return False
+        return (self.util_lp_active(k, now) + task.utilization(now)
+                < self.remaining_util(k, now))
+
+    def predicted_finish(self, k: int, now: float) -> float:
+        """Backlog-based earliest-finish estimate for migration targets."""
+        ctx = self.contexts[k]
+        running = [i for (c, _), i in self.lanes.items()
+                   if c == k and i is not None]
+        rem = 0.0
+        for inst in running:
+            mret = inst.task.mret.stage_mret(inst.job.stage_idx)
+            rem += max(mret - inst.work_done, 0.0)
+        rem += self.queues[k].backlog_ms()
+        return now + rem / max(ctx.n_streams, 1)
+
+    # --------------------------------------------------------------- online
+    def on_release(self, task: Task, now: float) -> Optional[Job]:
+        """Admission test + (possibly migrated) enqueue. None = rejected."""
+        job = Job(task=task, release_ms=now)
+        needs_test = task.priority == LP or self.cfg.overload_hpa
+        k = task.ctx
+        if needs_test and not self.admits(k, task, now):
+            # migration candidates: every other context (Eq. 12), earliest
+            # predicted finish wins (paper §IV-B1)
+            cands = [c.index for c in self.contexts
+                     if c.index != k and self.admits(c.index, task, now)]
+            if not cands:
+                self.rejections.append(Rejection(task.name, now, task.priority))
+                return None
+            k = min(cands, key=lambda c: self.predicted_finish(c, now))
+            if task.priority == LP and not task.fixed_ctx:
+                task.ctx = k          # sticky migration (zero-delay: the job
+                self.migrations += 1  # simply enqueues on the new partition)
+        job.ctx = k
+        self.active_jobs[k].append(job)
+        self._enqueue_stage(job, now)
+        return job
+
+    def _enqueue_stage(self, job: Job, now: float) -> StageInstance:
+        vdls = job.task.mret.virtual_deadlines(job.task.spec.deadline_ms)
+        abs_vdl = job.release_ms + sum(vdls[:job.stage_idx + 1])
+        inst = StageInstance(job=job, enqueue_ms=now,
+                             virtual_deadline_ms=abs_vdl)
+        self.queues[job.ctx].push(inst)
+        return inst
+
+    def on_stage_finish(self, inst: StageInstance, now: float,
+                        et_ms: float) -> Optional[Job]:
+        """MRET update + vdl bookkeeping. Returns the job if it completed."""
+        job = inst.job
+        job.task.mret.observe(job.stage_idx, et_ms)
+        missed_vdl = now > inst.virtual_deadline_ms
+        if job.is_last_stage():
+            job.finish_ms = now
+            self.active_jobs[job.ctx].remove(job)
+            return job
+        job.stage_idx += 1
+        job.vdl_missed_prev = missed_vdl     # §IV-B2 priority boost
+        self._enqueue_stage(job, now)
+        return None
+
+    def next_for_lane(self, ctx_idx: int, now: float) -> Optional[StageInstance]:
+        return self.queues[ctx_idx].pop()
+
+    def free_lanes(self) -> List[tuple]:
+        return [lane for lane, inst in self.lanes.items()
+                if inst is None and self.contexts[lane[0]].alive]
+
+    # ------------------------------------------------------ fault / elastic
+    def fail_context(self, k: int, now: float) -> List[StageInstance]:
+        """Partition loss: survivors inherit tasks via Algorithm 1 re-run;
+        in-flight stages replay (stage granularity bounds lost work)."""
+        self.contexts[k].alive = False
+        orphans = self.queues[k].drain()
+        for lane, inst in list(self.lanes.items()):
+            if lane[0] == k and inst is not None:
+                orphans.append(inst)
+                self.lanes[lane] = None
+        alive = [c.index for c in self.contexts if c.alive]
+        if not alive:
+            raise RuntimeError("all contexts failed")
+        util = {a: self.util_hp_total(a, now) + self.util_lp_active(a, now)
+                for a in alive}
+        for t in self.tasks:
+            if t.ctx == k:
+                tgt = min(util, key=util.get)
+                t.ctx = tgt
+                util[tgt] += t.utilization(now)
+        requeued = []
+        for inst in orphans:
+            job = inst.job
+            if job in self.active_jobs[k]:
+                self.active_jobs[k].remove(job)
+                self.active_jobs[job.task.ctx].append(job)
+            job.ctx = job.task.ctx
+            inst.work_done = 0.0      # replay from stage start
+            inst.lane = None
+            self.queues[job.ctx].push(inst)
+            requeued.append(inst)
+        return requeued
+
+    def add_context(self, now: float) -> Context:
+        """Elastic scale-out: new context; Eq. 9 re-derivation is the
+        caller's choice (units reused from the dead/average geometry)."""
+        idx = len(self.contexts)
+        per = int(self.contexts[0].cap)
+        units = set(range(int(self.device.n_units)))
+        if per < len(units):
+            units = set(list(units)[:per])
+        ctx = Context(index=idx, units=units,
+                      n_streams=self.cfg.n_streams)
+        self.contexts.append(ctx)
+        self.queues[idx] = StageQueue(self.cfg.queue_cfg)
+        self.active_jobs[idx] = []
+        for s in range(ctx.n_streams):
+            self.lanes[(idx, s)] = None
+        return ctx

@@ -1,0 +1,72 @@
+"""Stage-level ready queue: 8 fixed priority levels + EDF inside each level
+(paper §IV-B2).
+
+Level bits (0 = most urgent first):
+  bit2  task priority   (HP above LP)            -- ablation: no_fixed
+  bit1  last stage of the task                   -- ablation: no_last
+  bit0  predecessor stage missed its virtual dl  -- ablation: no_prior
+EDF tie-break on the stage's absolute virtual deadline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Optional
+
+from .task import HP, StageInstance
+
+_seq = itertools.count()
+
+
+@dataclasses.dataclass
+class QueueConfig:
+    no_last: bool = False
+    no_prior: bool = False
+    no_fixed: bool = False
+
+
+def stage_level(inst: StageInstance, qcfg: QueueConfig) -> int:
+    hp_bit = 0 if (inst.task.priority == HP or qcfg.no_fixed) else 1
+    if qcfg.no_fixed:
+        hp_bit = 0
+    last_bit = 0 if (inst.job.is_last_stage() and not qcfg.no_last) else 1
+    prior_bit = 0 if (inst.job.vdl_missed_prev and not qcfg.no_prior) else 1
+    return hp_bit * 4 + last_bit * 2 + prior_bit
+
+
+class StageQueue:
+    """One ready queue (per context for MPS*, global for STR)."""
+
+    def __init__(self, qcfg: Optional[QueueConfig] = None):
+        self.qcfg = qcfg or QueueConfig()
+        self._heap = []
+
+    def push(self, inst: StageInstance) -> None:
+        key = (stage_level(inst, self.qcfg), inst.virtual_deadline_ms,
+               next(_seq))
+        heapq.heappush(self._heap, (key, inst))
+
+    def pop(self) -> Optional[StageInstance]:
+        if not self._heap:
+            return None
+        return heapq.heappop(self._heap)[1]
+
+    def peek(self) -> Optional[StageInstance]:
+        return self._heap[0][1] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def drain(self):
+        """Remove and return all queued stages (fault recovery path)."""
+        items = [inst for _, inst in self._heap]
+        self._heap = []
+        return items
+
+    def backlog_ms(self) -> float:
+        """Sum of MRET of queued stages (migration target estimation)."""
+        total = 0.0
+        for _, inst in self._heap:
+            total += inst.task.mret.stage_mret(inst.job.stage_idx)
+        return total

@@ -1,0 +1,114 @@
+"""DARIS task model (paper §III-A).
+
+τ_i(T_i, D_i, mret_i(t), p_i, ctx_i(t)) — periodic task = one DNN, divided
+into n_i sequential stages. Two priority levels (HP/LP). D_i = T_i.
+
+``Job`` is one periodic release; ``StageInstance`` is one stage of one job
+(the schedulable unit). Virtual deadlines (Eq. 8) split the job deadline
+across stages proportionally to per-stage MRET.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional
+
+HP = 0   # high priority
+LP = 1   # low priority
+
+_job_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class StageProfile:
+    """Execution profile of one stage (drives the contention model and,
+    in real mode, maps to a jitted stage function)."""
+    name: str
+    t_alone_ms: float          # single-stream, idle-device execution time
+    n_sat: float               # device units the stage can actually use
+    mem_frac: float            # memory-bandwidth-bound fraction
+    overhead_ms: float = 0.05  # dispatch/sync overhead (staging cost)
+    payload: Optional[object] = None   # real-mode callable
+
+
+@dataclasses.dataclass
+class TaskSpec:
+    """Static description of a periodic task."""
+    name: str
+    period_ms: float
+    priority: int                     # HP | LP
+    stages: List[StageProfile]
+    batch: int = 1
+
+    @property
+    def deadline_ms(self) -> float:   # D_i = T_i
+        return self.period_ms
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+
+@dataclasses.dataclass
+class Task:
+    """Runtime task state: MRET estimates + context assignment."""
+    spec: TaskSpec
+    index: int
+    ctx: int = -1                     # current context (ctx_i(t))
+    fixed_ctx: bool = False           # HP tasks get fixed contexts
+    # paper Eq. 1-2 estimators are attached by the scheduler (core.mret)
+    mret: Optional[object] = None
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def priority(self) -> int:
+        return self.spec.priority
+
+    def utilization(self, now_ms: float) -> float:
+        """Eq. 3 / Eq. 10: u_i = mret_i / T_i (AFET-seeded before history)."""
+        return self.mret.task_mret(now_ms) / self.spec.period_ms
+
+
+@dataclasses.dataclass
+class Job:
+    """One periodic release of a task."""
+    task: Task
+    release_ms: float
+    job_id: int = dataclasses.field(default_factory=lambda: next(_job_counter))
+    ctx: int = -1                     # context this job was admitted to
+    stage_idx: int = 0
+    start_ms: Optional[float] = None
+    finish_ms: Optional[float] = None
+    vdl_missed_prev: bool = False     # did the previous stage miss its vdl?
+
+    @property
+    def abs_deadline_ms(self) -> float:
+        return self.release_ms + self.task.spec.deadline_ms
+
+    def stage_profile(self) -> StageProfile:
+        return self.task.spec.stages[self.stage_idx]
+
+    def is_last_stage(self) -> bool:
+        return self.stage_idx == self.task.spec.n_stages - 1
+
+
+@dataclasses.dataclass
+class StageInstance:
+    """The schedulable unit: stage ``job.stage_idx`` of ``job``."""
+    job: Job
+    enqueue_ms: float
+    virtual_deadline_ms: float        # absolute (Eq. 8 slice end)
+    work_done: float = 0.0            # device-seconds already executed
+    lane: Optional[tuple] = None      # (ctx, slot) while running
+    start_ms: Optional[float] = None
+
+    @property
+    def profile(self) -> StageProfile:
+        return self.job.stage_profile()
+
+    @property
+    def task(self) -> Task:
+        return self.job.task

@@ -1,0 +1,104 @@
+"""Flash-decode Pallas TPU kernel: one new token against a long KV cache.
+
+q [B, H, Dh] (q_len folded to 1), k/v [B, KV, S, Dh]. Grid = (B, H, S/bk)
+with the KV axis innermost-sequential; f32 VMEM scratch carries the online
+softmax, exactly like the prefill kernel but with a 1-row query tile padded
+to the 8-sublane minimum (the row dim of the q tile is replicated 8x and
+row 0 is written out). Positions arrive as a per-slot vector so ring
+buffers / partially-filled caches mask correctly (slot_pos < 0 = invalid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+QROWS = 8    # sublane padding for the single query row
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                   softcap: float, bk: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [QROWS, dh]
+    k = k_ref[0, 0].astype(jnp.float32)               # [bk, dh]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    kp = pos_ref[0]                                   # [bk] absolute slot pos
+    qp = qpos_ref[0]                                  # [1] query position
+    ok = (kp >= 0) & (kp <= qp)
+    if window > 0:
+        ok = ok & (qp - kp < window)
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "scale", "block_k", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_pos: jax.Array, q_pos: jax.Array, *,
+                     window: int = 0, softcap: float = 0.0,
+                     scale: float | None = None, block_k: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q: [B, H, Dh]; k/v: [B, KV, S, Dh]; kv_pos: [S] (−1 invalid);
+    q_pos: [B] -> out [B, H, Dh]."""
+    b, h, dh = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = dh ** -0.5
+    bk = min(block_k, s)
+    assert s % bk == 0
+    nk = s // bk
+    qr = jnp.broadcast_to(q[:, :, None, :], (b, h, QROWS, dh))
+    kv_pos2 = jnp.broadcast_to(kv_pos[None], (b, s))
+    qp2 = q_pos.reshape(b, 1).astype(jnp.int32)
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               softcap=softcap, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, QROWS, dh), lambda b_, h_, ki: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, ki: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, ki: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, bk), lambda b_, h_, ki: (b_, ki)),
+            pl.BlockSpec((1, 1), lambda b_, h_, ki: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, QROWS, dh),
+                               lambda b_, h_, ki: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, QROWS, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((QROWS, 1), jnp.float32),
+            pltpu.VMEM((QROWS, 1), jnp.float32),
+            pltpu.VMEM((QROWS, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, k, v, kv_pos2, qp2)
+    return out[:, :, 0, :]

@@ -1,0 +1,76 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU (or interpret-mode
+validation), pure-jnp reference everywhere else.
+
+``mode``: "auto" (kernel on TPU, ref otherwise), "kernel" (force kernel —
+interpret-mode on CPU), "ref".
+"""
+from __future__ import annotations
+
+import jax
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import rmsnorm as _rms
+from . import ref as _ref
+from . import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_kernel(mode: str) -> bool:
+    if mode == "kernel":
+        return True
+    if mode == "ref":
+        return False
+    return _on_tpu()
+
+
+def rmsnorm(x, weight, *, eps: float = 1e-6, plus_one: bool = False,
+            mode: str = "auto"):
+    if _use_kernel(mode):
+        return _rms.rmsnorm(x, weight, eps=eps, plus_one=plus_one,
+                            interpret=not _on_tpu())
+    return _ref.rmsnorm_ref(x, weight, eps, plus_one)
+
+
+def rmsnorm_residual(x, residual, weight, *, eps: float = 1e-6,
+                     plus_one: bool = False, mode: str = "auto"):
+    if _use_kernel(mode):
+        return _rms.rmsnorm_residual(x, residual, weight, eps=eps,
+                                     plus_one=plus_one,
+                                     interpret=not _on_tpu())
+    return _ref.rmsnorm_residual_ref(x, residual, weight, eps, plus_one)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale=None, block_q: int = 128,
+                    block_k: int = 128, mode: str = "auto"):
+    if _use_kernel(mode):
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=not _on_tpu())
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale)
+
+
+def decode_attention(q, k, v, kv_pos, q_pos, *, window: int = 0,
+                     softcap: float = 0.0, scale=None, block_k: int = 512,
+                     mode: str = "auto"):
+    if _use_kernel(mode):
+        return _dec.decode_attention(q, k, v, kv_pos, q_pos, window=window,
+                                     softcap=softcap, scale=scale,
+                                     block_k=block_k,
+                                     interpret=not _on_tpu())
+    return _ref.decode_attention_ref(q, k, v, kv_pos, q_pos, window=window,
+                                     softcap=softcap, scale=scale)
+
+
+def ssd(x, dt, a_log, b, c, chunk: int = 256, init_state=None,
+        mode: str = "auto"):
+    if _use_kernel(mode):
+        return _ssd.ssd(x, dt, a_log, b, c, chunk, init_state,
+                        interpret=not _on_tpu())
+    return _ref.ssd_ref(x, dt, a_log, b, c, chunk, init_state)

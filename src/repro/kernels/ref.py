@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+                plus_one: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (y * w).astype(x.dtype)
+
+
+def rmsnorm_residual_ref(x, residual, weight, eps: float = 1e-6,
+                         plus_one: bool = False):
+    s = (x.astype(jnp.float32) + residual.astype(jnp.float32)).astype(x.dtype)
+    return rmsnorm_ref(s, weight, eps, plus_one), s
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0, softcap: float = 0.0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q [B,H,S,Dh], k/v [B,KV,S,Dh] -> [B,H,S,Dh]; f32 softmax."""
+    b, h, s, dh = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    if scale is None:
+        scale = dh ** -0.5
+    qg = q.reshape(b, kvh, g, s, dh)
+    logits = jnp.einsum("bkgqd,bktd->bkgqt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window > 0:
+        ok = ok & (qpos - kpos < window)
+    logits = jnp.where(ok[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_pos: jax.Array, q_pos: jax.Array, *,
+                         window: int = 0, softcap: float = 0.0,
+                         scale: Optional[float] = None) -> jax.Array:
+    """q [B,H,Dh], k/v [B,KV,S,Dh], kv_pos [S], q_pos [B] -> [B,H,Dh]."""
+    b, h, dh = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = dh ** -0.5
+    qg = q.reshape(b, kvh, g, dh)
+    logits = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    ok = (kv_pos[None] >= 0) & (kv_pos[None] <= q_pos[:, None])
+    if window > 0:
+        ok = ok & (q_pos[:, None] - kv_pos[None] < window)
+    logits = jnp.where(ok[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a_log, b, c, chunk: int = 256, init_state=None):
+    """Chunked SSD oracle (the model's reference implementation)."""
+    from ..models.mamba2 import ssd_reference
+    return ssd_reference(x, dt, a_log, b, c, chunk, init_state)

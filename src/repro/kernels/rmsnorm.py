@@ -1,0 +1,99 @@
+"""Fused (residual-add +) RMSNorm Pallas TPU kernel.
+
+Tokens are flattened to [M, D]; the grid tiles M into ``bm``-row blocks that
+stream HBM->VMEM; the full feature dim D stays resident per block (D <= a
+few k for every assigned arch, well inside VMEM). f32 accumulation in VREGs
+regardless of IO dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, plus_one: bool):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    o_ref[...] = (y * w[None]).astype(o_ref.dtype)
+
+
+def _rmsnorm_res_kernel(x_ref, r_ref, w_ref, o_ref, res_ref, *, eps: float,
+                        plus_one: bool):
+    s = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    res_ref[...] = s.astype(res_ref.dtype)
+    var = jnp.mean(jnp.square(s), axis=-1, keepdims=True)
+    y = s * jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    o_ref[...] = (y * w[None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "plus_one", "block_m",
+                                             "interpret"))
+def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
+            plus_one: bool = False, block_m: int = 256,
+            interpret: bool = True) -> jax.Array:
+    """x: [..., D] -> normalized [..., D]."""
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    m = xf.shape[0]
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    grid = (xf.shape[0] // bm,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps, plus_one=plus_one),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, weight)
+    if pad:
+        out = out[:m]
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "plus_one", "block_m",
+                                             "interpret"))
+def rmsnorm_residual(x: jax.Array, residual: jax.Array, weight: jax.Array, *,
+                     eps: float = 1e-6, plus_one: bool = False,
+                     block_m: int = 256, interpret: bool = True):
+    """Fused y = rmsnorm(x + residual); returns (y, x + residual)."""
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    rf = residual.reshape(-1, d)
+    m = xf.shape[0]
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        rf = jnp.pad(rf, ((0, pad), (0, 0)))
+    grid = (xf.shape[0] // bm,)
+    out, res = pl.pallas_call(
+        functools.partial(_rmsnorm_res_kernel, eps=eps, plus_one=plus_one),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct(xf.shape, x.dtype),
+                   jax.ShapeDtypeStruct(xf.shape, x.dtype)],
+        interpret=interpret,
+    )(xf, rf, weight)
+    if pad:
+        out, res = out[:m], res[:m]
+    return out.reshape(shape), res.reshape(shape)

@@ -1,0 +1,109 @@
+"""Mamba2 SSD chunk-scan Pallas TPU kernel.
+
+One kernel does the whole SSD: grid = (B, H, n_chunks) with the chunk axis
+innermost-sequential; the running state [P, N] lives in f32 VMEM scratch and
+carries across chunks (the inter-chunk recurrence), while each grid step
+computes the intra-chunk quadratic term with MXU dots:
+
+    y_intra = (tril(C B^T * segsum-decay) * dt) X
+    y_inter = (C . state_prev) * decay_from_start
+    state   = state_prev * total_decay + (B * decay_to_end * dt)^T X
+
+Per-block working set (Q=256, P=64, N<=128) is a few hundred KB — well
+inside VMEM. Groups are pre-broadcast to heads outside the kernel (G is 1
+for every assigned arch, so this costs nothing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref,
+                y_ref, sf_ref, state_scr, *, q: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)            # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)          # [Q]
+    a = a_ref[0]                                      # scalar A_log (this head)
+    bm = b_ref[0, :, 0].astype(jnp.float32)           # [Q, N]
+    cm = c_ref[0, :, 0].astype(jnp.float32)           # [Q, N]
+
+    neg_a = -jnp.exp(a.astype(jnp.float32))           # scalar, negative
+    da = dt * neg_a                                   # [Q]
+    cum = jnp.cumsum(da)                              # [Q]
+    # segsum decay: exp(cum_i - cum_j) masked to j <= i
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(jj <= ii, jnp.exp(seg), 0.0)    # [Q, Q]
+
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)  # [Q, Q]
+    w = cb * decay * dt[None, :]
+    y_intra = jnp.dot(w, x, preferred_element_type=jnp.float32)     # [Q, P]
+
+    prev = state_scr[...]                              # [P, N]
+    decay_from_start = jnp.exp(cum)                    # [Q]
+    y_inter = jnp.dot(cm, prev.T,
+                      preferred_element_type=jnp.float32) * decay_from_start[:, None]
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)              # [Q]
+    bw = bm * (decay_to_end * dt)[:, None]             # [Q, N]
+    new_state = prev * jnp.exp(cum[-1]) + jnp.dot(
+        x.T, bw, preferred_element_type=jnp.float32)   # [P, N]
+    state_scr[...] = new_state
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        sf_ref[0, 0] = new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array, b: jax.Array,
+        c: jax.Array, chunk: int = 256, init_state: jax.Array | None = None,
+        *, interpret: bool = True):
+    """x [B,L,H,P]; dt [B,L,H] (post-softplus); a_log [H]; b/c [B,L,G,N].
+
+    Returns (y [B,L,H,P], final_state [B,H,P,N] f32)."""
+    bs, ln, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    assert ln % chunk == 0
+    nc = ln // chunk
+    bh = jnp.repeat(b, rep, axis=2) if rep > 1 else b   # [B,L,H,N]
+    ch = jnp.repeat(c, rep, axis=2) if rep > 1 else c
+    if init_state is None:
+        init_state = jnp.zeros((bs, h, p, n), jnp.float32)
+    kernel = functools.partial(_ssd_kernel, q=chunk, nc=nc)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(bs, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, ci: (b_, ci, h_)),
+            pl.BlockSpec((1,), lambda b_, h_, ci: (h_,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, ci: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, ci: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((bs, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, bh, ch, init_state)
+    return y, sf

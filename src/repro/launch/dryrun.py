@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init. Tiny-mesh subprocess tests override via env.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this emits a JSON artifact with
+  * memory_analysis()   -- per-device bytes (proves the cell fits 16 GB HBM)
+  * cost_analysis()     -- per-device HLO FLOPs / bytes for §Roofline
+  * collective bytes    -- parsed from the post-SPMD HLO text per collective
+                           op kind (roofline collective term)
+  * compile wall time
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-32b --shape decode_32k --mesh multi
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+from collections import defaultdict
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, cells, get_config, shape_by_name
+from repro.launch.mesh import make_production_mesh, make_tiny_mesh
+from repro.models import build_model
+from repro.parallel.sharding import ShardingRules
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import make_train_step
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_INSTR_RE = re.compile(r"%?([\w.\-]+) = \(?([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+# bytes-moved multiplier per op (ring algorithms, (n-1)/n ~= 1):
+#   all-reduce moves ~2x the buffer; others ~1x of the measured side
+_COLL_SIDE = {"all-reduce": ("operand", 2.0), "all-gather": ("result", 1.0),
+              "reduce-scatter": ("operand", 1.0), "all-to-all": ("result", 1.0),
+              "collective-permute": ("result", 1.0)}
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-device bytes moved per collective kind (post-SPMD HLO text)."""
+    sizes = {}
+    pending = []
+    for line in hlo.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        name, dtype, dims = m.groups()
+        sizes[name] = _shape_bytes(dtype, dims)
+        for op in _COLL_OPS:
+            # match plain and -start forms; skip -done (operand forwarding)
+            if re.search(rf"= \S+ {op}(-start)?\(", line):
+                pending.append((name, op, line))
+    out = defaultdict(float)
+    counts = defaultdict(int)
+    for name, op, line in pending:
+        side, mult = _COLL_SIDE[op]
+        if side == "result":
+            b = sizes.get(name, 0.0)
+        else:
+            args = line.split("(", 1)[1]
+            ops = re.findall(r"%?([\w.\-]+)", args)
+            b = sum(sizes.get(o, 0.0) for o in ops if o in sizes)
+        out[op] += b * mult
+        counts[op] += 1
+    return {"bytes_by_op": dict(out), "counts": dict(counts),
+            "total_bytes": float(sum(out.values()))}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+def build_cell(arch_id: str, shape_name: str, mesh, *,
+               moe_ep: bool = True, extra: dict | None = None):
+    """Returns (fn, args_sds, in_shardings, out_shardings, model, cell)."""
+    extra = extra or {}
+    cell = shape_by_name(shape_name)
+    cfg = get_config(arch_id)
+    if extra.get("kv_dtype"):
+        cfg = cfg.replace(kv_cache_dtype=extra["kv_dtype"])
+    tp = mesh.shape["model"]
+    dp_only = bool(extra.get("dp_only"))
+    no_fsdp = bool(extra.get("no_fsdp"))
+    model0 = build_model(cfg, pad_for_tp=1 if dp_only else tp)
+    rules = ShardingRules(model0.cfg, mesh, no_fsdp=no_fsdp,
+                          dp_only=dp_only,
+                          mlp_fsdp=bool(extra.get("mlp_fsdp"))
+                          ).for_batch(cell.global_batch)
+    dist = rules.dist_ctx()
+    if (cell.kind == "train" or extra.get("serve_seq_shard"))             and not extra.get("no_seq_shard"):
+        dist["seq_shard"] = True      # Megatron-style sequence parallelism
+    model = build_model(cfg, pad_for_tp=1 if dp_only else tp, dist=dist)
+    ns = lambda spec: jax.sharding.NamedSharding(mesh, spec)
+
+    specs = model.input_specs(cell)
+    q_chunk = extra.get("q_chunk", 512 if cell.seq_len >= 32768 else (1024 if cell.kind == "train" and cell.seq_len >= 4096 else 0))
+    remat = extra.get("remat", "dots")
+
+    def batch_shardings(sp):
+        out = {}
+        for k, v in sp.items():
+            if k == "tokens":
+                out[k] = ns(rules.tokens_spec() if rules.dp else
+                            jax.sharding.PartitionSpec(None, None))
+            elif k in ("frames", "image_embeds", "enc_out"):
+                out[k] = ns(rules.embeds_spec() if rules.dp else
+                            jax.sharding.PartitionSpec(None, None, None))
+            elif k == "cache":
+                out[k] = rules.cache_tree(v)
+            else:
+                raise KeyError(k)
+        return out
+
+    if cell.kind == "train":
+        # bf16 first moment + bf16 grad accumulation for very large MoE
+        # (deepseek-v2 236B): ZeRO-sharded state still dominates 16 GB/chip
+        low_mem = model.param_counts()["total"] > 1e11
+        opt_cfg = (AdamWConfig(m_dtype="bfloat16") if low_mem
+                   else AdamWConfig())
+        params_sds = jax.eval_shape(lambda: model.init_params(0))
+        opt_sds = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_sds)
+        params_sh = rules.params_tree(params_sds)
+        opt_sh = rules.params_tree(opt_sds)
+        batch_sh = batch_shardings(specs)
+        # microbatched grad accumulation bounds saved activations; full remat
+        # keeps only the per-layer scan carries (DESIGN.md §5)
+        accum = extra.get("accum", max(1, min(16, cell.global_batch
+                                              // rules._dp_size)))
+        remat = extra.get("remat", "full")
+        step = make_train_step(model, opt_cfg, q_chunk=q_chunk, remat=remat,
+                               accum=accum,
+                               accum_dtype="bfloat16" if low_mem else "float32")
+        metrics_sh = {"grad_norm": ns(jax.sharding.PartitionSpec()),
+                      "lr": ns(jax.sharding.PartitionSpec()),
+                      "loss": ns(jax.sharding.PartitionSpec())}
+        jitted = jax.jit(step,
+                         in_shardings=(params_sh, opt_sh, batch_sh),
+                         out_shardings=(params_sh, opt_sh, metrics_sh),
+                         donate_argnums=(0, 1))
+        return jitted, (params_sds, opt_sds, specs), model, cell
+
+    # serving cells
+    params_sds = jax.eval_shape(lambda: model.init_params(0))
+    params_sh = rules.params_tree(params_sds)
+    batch_sh = batch_shardings(specs)
+    logits_sp = (rules.logits_spec() if rules.dp else
+                 jax.sharding.PartitionSpec(None, None, "model"))
+    if model.cfg.vocab_size % mesh.shape["model"] != 0:
+        logits_sp = jax.sharding.PartitionSpec(*logits_sp[:-1], None)
+    if cell.kind == "prefill":
+        fn = lambda p, b: model.prefill(p, b, q_chunk=q_chunk)
+    else:
+        fn = model.decode_step
+    jitted = jax.jit(fn,
+                     in_shardings=(params_sh, batch_sh),
+                     out_shardings=(ns(logits_sp), batch_sh["cache"]),
+                     donate_argnums=(1,))
+    return jitted, (params_sds, specs), model, cell
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             out_dir: pathlib.Path, *, hlo_dir=None,
+             extra: dict | None = None) -> dict:
+    multi = mesh_kind in ("multi", "tiny-multi")
+    if mesh_kind.startswith("tiny"):
+        mesh = make_tiny_mesh(multi_pod=multi)
+    else:
+        mesh = make_production_mesh(multi_pod=multi)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    jitted, args, model, cell = build_cell(arch_id, shape_name, mesh,
+                                           extra=extra)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    mem_d = {a: int(getattr(mem, a)) for a in
+             ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes") if hasattr(mem, a)}
+    peak = (mem_d.get("argument_size_in_bytes", 0)
+            + mem_d.get("temp_size_in_bytes", 0)
+            + mem_d.get("output_size_in_bytes", 0)
+            - mem_d.get("alias_size_in_bytes", 0))
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "transcendentals",
+               "utilization operand", "bytes accessed output")}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    from repro.launch.hlo_cost import analyze as hlo_analyze
+    try:
+        hc = hlo_analyze(hlo)
+    except Exception as e:
+        hc = {"error": repr(e)}
+    accum_used = 1
+    if cell.kind == "train":
+        accum_used = (extra or {}).get("accum", max(1, min(16,
+            cell.global_batch // int(np.prod([mesh.shape[a] for a in
+            mesh.axis_names if a != "model"])))))
+    analytic_bytes = model.analytic_hbm_bytes(cell, accum=accum_used)
+    if hlo_dir:
+        hlo_dir = pathlib.Path(hlo_dir)
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        (hlo_dir / f"{arch_id}__{shape_name}__{mesh_kind}.hlo.txt"
+         ).write_text(hlo)
+
+    art = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "n_chips": n_chips,
+        "extra": extra or {},
+        "status": "ok",
+        "memory": mem_d,
+        "peak_bytes_per_device": int(peak),
+        "fits_16gb": bool(peak <= 16 * 1024 ** 3),
+        "cost_per_device": cost_d,
+        "collectives_per_device": coll,
+        "hlo_cost_per_device": hc,
+        "analytic_hbm_bytes_global": analytic_bytes,
+        "model_flops": model.model_flops(cell),
+        "param_counts": model.param_counts(),
+        "lower_s": t_lower, "compile_s": t_compile,
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = (extra or {}).get("tag", "")
+    suffix = f"__{tag}" if tag else ""
+    fname = out_dir / f"{arch_id}__{shape_name}__{mesh_kind}{suffix}.json"
+    fname.write_text(json.dumps(art, indent=1))
+    return art
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "tiny", "tiny-multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--q-chunk", type=int, default=-1)
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--accum", type=int, default=0)
+    ap.add_argument("--dp_only", action="store_true")
+    ap.add_argument("--no_fsdp", action="store_true")
+    ap.add_argument("--serve_seq_shard", action="store_true")
+    ap.add_argument("--no_seq_shard", action="store_true")
+    ap.add_argument("--mlp_fsdp", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for cell, runnable, reason in cells(arch):
+            if args.shape != "all" and cell.name not in args.shape.split(","):
+                continue
+            for mk in meshes:
+                tagsuf = f"__{args.tag}" if args.tag else ""
+                fname = out_dir / f"{arch}__{cell.name}__{mk}{tagsuf}.json"
+                if not runnable:
+                    out_dir.mkdir(parents=True, exist_ok=True)
+                    fname.write_text(json.dumps({
+                        "arch": arch, "shape": cell.name, "mesh": mk,
+                        "status": "skipped", "reason": reason}, indent=1))
+                    print(f"SKIP {arch} {cell.name} {mk}: {reason}")
+                    n_skip += 1
+                    continue
+                if args.skip_existing and fname.exists():
+                    try:
+                        if json.loads(fname.read_text()).get("status") == "ok":
+                            print(f"CACHED {arch} {cell.name} {mk}")
+                            n_ok += 1
+                            continue
+                    except Exception:
+                        pass
+                extra = {"tag": args.tag} if args.tag else {}
+                if args.q_chunk >= 0:
+                    extra["q_chunk"] = args.q_chunk
+                if args.remat:
+                    extra["remat"] = args.remat
+                if args.accum:
+                    extra["accum"] = args.accum
+                for flag in ("dp_only", "no_fsdp", "serve_seq_shard",
+                             "no_seq_shard", "mlp_fsdp"):
+                    if getattr(args, flag):
+                        extra[flag] = True
+                try:
+                    art = run_cell(arch, cell.name, mk, out_dir,
+                                   hlo_dir=args.save_hlo or None,
+                                   extra=extra or None)
+                    gb = art["peak_bytes_per_device"] / 2 ** 30
+                    print(f"OK {arch} {cell.name} {mk}: peak {gb:.2f} GiB/dev"
+                          f" fits={art['fits_16gb']}"
+                          f" flops/dev={art['cost_per_device'].get('flops', 0):.3e}"
+                          f" coll={art['collectives_per_device']['total_bytes']:.3e}B"
+                          f" compile={art['compile_s']:.1f}s", flush=True)
+                    n_ok += 1
+                except Exception as e:  # record failures as artifacts too
+                    out_dir.mkdir(parents=True, exist_ok=True)
+                    fname.write_text(json.dumps({
+                        "arch": arch, "shape": cell.name, "mesh": mk,
+                        "status": "error", "error": repr(e),
+                        "traceback": traceback.format_exc()[-4000:]}, indent=1))
+                    print(f"FAIL {arch} {cell.name} {mk}: {e!r}", flush=True)
+                    n_fail += 1
+    print(f"dry-run done: ok={n_ok} skipped={n_skip} failed={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

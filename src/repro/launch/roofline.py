@@ -1,0 +1,120 @@
+"""Roofline analysis from dry-run artifacts (no real TPU — compile-only).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)
+    memory term     = HLO_bytes / (chips * 819 GB/s)
+    collective term = collective_bytes / (chips * 50 GB/s per link)
+
+cost_analysis() and the parsed HLO are per-device (post-SPMD), so the
+per-chip terms divide by peak rates directly; global HLO_FLOPs multiplies
+back by chip count. CPU-backend caveats (documented in EXPERIMENTS.md):
+XLA:CPU promotes bf16 dots to f32 and its "bytes accessed" over-counts
+fused traffic, so the memory term is an upper bound; the collective byte
+model uses ring multipliers (AR 2x operand, AG/RS/A2A ~1x, (n-1)/n ~ 1).
+
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference), from the
+*published* config — the HLO/MODEL ratio therefore exposes remat recompute,
+capacity-factor slack and head/vocab padding honestly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (ICI)
+
+
+def load_artifacts(art_dir: str) -> List[dict]:
+    out = []
+    for p in sorted(pathlib.Path(art_dir).glob("*.json")):
+        try:
+            out.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return out
+
+
+def roofline_row(art: dict) -> Dict:
+    chips = art["n_chips"]
+    cost = art.get("cost_per_device", {})
+    hc = art.get("hlo_cost_per_device", {})
+    # while-aware HLO walk (hlo_cost.py); XLA cost_analysis counts loop
+    # bodies once and is kept only as a cross-check
+    flops_dev = hc.get("flops") or cost.get("flops", 0.0)
+    bytes_dev = (art.get("analytic_hbm_bytes_global", 0.0) / chips
+                 or cost.get("bytes accessed", 0.0))
+    coll_dev = (hc.get("coll_total_bytes")
+                or art.get("collectives_per_device", {}).get("total_bytes", 0.0))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = art.get("model_flops", 0.0)
+    hlo_flops_global = flops_dev * chips
+    bound = max(t_compute, t_memory, t_coll)
+    # fraction of roofline: useful work per chip-second at the binding rate
+    roofline_frac = ((model_flops / chips / PEAK_FLOPS) / bound
+                     if bound > 0 else 0.0)
+    return {
+        "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": model_flops / hlo_flops_global if hlo_flops_global else 0.0,
+        "roofline_fraction": roofline_frac,
+        "peak_gib": art.get("peak_bytes_per_device", 0) / 2 ** 30,
+        "fits": art.get("fits_16gb"),
+    }
+
+
+def build_table(art_dir: str = "artifacts/dryrun", mesh: str = "single",
+                include_tagged: bool = False) -> List[Dict]:
+    rows = []
+    for art in load_artifacts(art_dir):
+        if art.get("status") != "ok" or art.get("mesh") != mesh:
+            continue
+        if not include_tagged and art.get("extra", {}).get("tag"):
+            continue
+        rows.append(roofline_row(art))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':18s} {'shape':12s} {'Tcomp(s)':>10s} {'Tmem(s)':>10s} "
+           f"{'Tcoll(s)':>10s} {'dom':>5s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'GiB/dev':>8s} fits")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:18s} {r['shape']:12s} {r['t_compute_s']:10.3e} "
+            f"{r['t_memory_s']:10.3e} {r['t_collective_s']:10.3e} "
+            f"{r['dominant'][:4]:>5s} {r['useful_ratio']:7.2f} "
+            f"{100*r['roofline_fraction']:6.1f}% {r['peak_gib']:8.2f} "
+            f"{'Y' if r['fits'] else 'N'}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default="artifacts/roofline.json")
+    args = ap.parse_args()
+    rows = build_table(args.art, args.mesh)
+    print(fmt_table(rows))
+    pathlib.Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(args.json_out).write_text(json.dumps(rows, indent=1))
+    print(f"\n{len(rows)} cells -> {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serving launcher: DARIS over partitions of the local device set.
+
+Laptop-scale entrypoint (real execution; the pod-scale story is the same
+scheduler over sub-meshes — DESIGN.md §2):
+
+    PYTHONPATH=src python -m repro.launch.serve --contexts 2 --os 2.0 \
+        --seconds 4 --dnns resnet18,unet
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--contexts", type=int, default=2)
+    ap.add_argument("--streams", type=int, default=1)
+    ap.add_argument("--os", type=float, default=2.0, dest="oversub")
+    ap.add_argument("--seconds", type=float, default=4.0)
+    ap.add_argument("--dnns", default="resnet18,inceptionv3")
+    ap.add_argument("--jps", type=float, default=10.0)
+    ap.add_argument("--hw", type=int, default=32)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    from ..core.scheduler import DarisScheduler, SchedulerConfig
+    from ..core.task import HP, LP
+    from ..models.cnn import BUILDERS
+    from ..runtime.contention import DeviceModel
+    from ..serving.engine import RealtimeEngine, staged_cnn_taskspec
+
+    specs = []
+    for name in args.dnns.split(","):
+        model = BUILDERS[name](width=8)
+        specs.append(staged_cnn_taskspec(model, priority=HP, jps=args.jps,
+                                         input_hw=args.hw, tag="-hp"))
+        specs.append(staged_cnn_taskspec(model, priority=LP, jps=args.jps,
+                                         input_hw=args.hw, tag="-lp"))
+    sched = DarisScheduler(
+        specs, SchedulerConfig(n_contexts=args.contexts,
+                               n_streams=args.streams,
+                               oversubscription=args.oversub),
+        DeviceModel(n_units=float(args.contexts)))
+    if args.ckpt:
+        import os
+        from ..checkpoint import load_scheduler_state, save_scheduler_state
+        if os.path.exists(args.ckpt):
+            load_scheduler_state(sched, args.ckpt)
+            print(f"resumed scheduler state from {args.ckpt} "
+                  f"(AFET cold-start skipped)")
+    eng = RealtimeEngine(sched, horizon_ms=args.seconds * 1000.0,
+                         input_hw=args.hw)
+    m = eng.run()
+    s = m.summary()
+    print(f"JPS {s['jps']:.1f} | DMR HP {s['dmr_hp']:.1%} LP {s['dmr_lp']:.1%}"
+          f" | resp HP {s['resp_hp']['mean']:.1f}ms LP "
+          f"{s['resp_lp']['mean']:.1f}ms | rejected LP {s['rejected_lp']}")
+    if args.ckpt:
+        from ..checkpoint import save_scheduler_state
+        save_scheduler_state(sched, args.ckpt)
+        print(f"scheduler state saved -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .api import Model, build_model, pad_heads_for_tp  # noqa: F401

@@ -1,0 +1,336 @@
+"""Uniform Model API over every assigned architecture.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions
+suitable for jit/pjit:
+
+    init_params(seed)                 -> params pytree
+    loss(params, batch)               -> scalar  (train cells)
+    prefill(params, batch)            -> (logits, cache)
+    decode_step(params, batch)        -> (logits, cache)
+    init_cache(batch_size, max_len)   -> cache pytree
+    input_specs(cell, max_len=None)   -> ShapeDtypeStruct tree per shape cell
+    model_flops(cell)                 -> MODEL_FLOPS per the roofline contract
+                                         (6·N_active·D train, 2·N_active·D
+                                         inference; N excludes embeddings)
+
+Head padding for tensor parallelism (qwen1.5 40->48) happens here: the
+padded config drives params/compute, the published config drives
+MODEL_FLOPS, so the roofline ratio exposes the padding waste honestly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import encdec, transformer
+from ..configs.base import ArchConfig, ShapeCell
+
+
+def pad_heads_for_tp(cfg: ArchConfig, tp: int = 16) -> ArchConfig:
+    """TP-alignment padding.
+
+    * heads: pad up to a multiple of tp when close (qwen1.5 40->48); tiny
+      archs (smollm 9H, whisper 6H) stay unpadded -> replicated attention.
+    * vocab: pad to a multiple of tp (whisper 51865->51872, mamba2
+      50280->50288) so logits/embedding shard — dummy tokens are never
+      emitted by the data pipeline and their logits are dead weight.
+    The published config (``Model.orig``) drives MODEL_FLOPS so padding
+    waste shows up honestly in the roofline ratio."""
+    if cfg.vocab_size % tp:
+        cfg = cfg.replace(vocab_size=cfg.vocab_size
+                          + (tp - cfg.vocab_size % tp))
+    if cfg.n_heads == 0 or cfg.n_heads % tp == 0:
+        return cfg
+    padded = cfg.n_heads + (tp - cfg.n_heads % tp)
+    if padded <= cfg.n_heads * 1.25:   # accept <=25% head padding
+        kv = cfg.n_kv_heads
+        if kv == cfg.n_heads:
+            kv = padded
+        return cfg.replace(n_heads=padded, n_kv_heads=kv,
+                           head_dim=cfg.resolved_head_dim)
+    return cfg
+
+
+def _loss_from_logits(logits: jax.Array, targets: jax.Array,
+                      mask: Optional[jax.Array] = None) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+class Model:
+    """LM families (dense/vlm/moe/ssm/hybrid) + encdec, one interface."""
+
+    AUX_WEIGHT = 0.01
+
+    def __init__(self, cfg: ArchConfig, orig_cfg: Optional[ArchConfig] = None,
+                 dist: Optional[dict] = None):
+        self.cfg = cfg
+        self.orig = orig_cfg or cfg
+        # distribution context (ShardingRules.dist_ctx()): activation
+        # sharding constraints + shard_map expert parallelism
+        self.dist = dist
+
+    # ------------------------------------------------------------------ init
+    def init_params(self, seed: int = 0) -> dict:
+        key = jax.random.PRNGKey(seed)
+        if self.cfg.family == "encdec":
+            return encdec.init_encdec(key, self.cfg)
+        return transformer.init_lm(key, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        if self.cfg.family == "encdec":
+            return encdec.init_dec_cache(self.cfg, batch, max_len)
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    def _cons(self):
+        if self.dist is None:
+            return None
+        from ..parallel.sharding import ActConstraint
+        return ActConstraint(self.dist)
+
+    # --------------------------------------------------------------- forward
+    def _lm_forward(self, params, batch, cache=None, **kw):
+        cfg = self.cfg
+        kw.setdefault("dist", self.dist)
+        if cfg.family == "vlm":
+            tok_emb = params["embed"][batch["tokens"]]
+            if "image_embeds" in batch and cache is None:
+                embeds = jnp.concatenate(
+                    [batch["image_embeds"].astype(tok_emb.dtype), tok_emb], axis=1)
+            else:
+                embeds = tok_emb
+            return transformer.forward(params, cfg, embeds=embeds,
+                                       cache=cache, **kw)
+        return transformer.forward(params, cfg, batch["tokens"],
+                                   cache=cache, **kw)
+
+    def loss(self, params: dict, batch: Dict[str, jax.Array], *,
+             q_chunk: int = 0, remat: str = "none") -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            cons = self._cons()
+            enc_out = encdec.encode(params, batch["frames"], cfg, cons=cons)
+            logits, _ = encdec.decode(params, batch["tokens"][:, :-1], enc_out,
+                                      cfg, q_chunk=q_chunk, remat=remat,
+                                      cons=cons)
+            return _loss_from_logits(logits, batch["tokens"][:, 1:])
+        logits, _, aux = self._lm_forward(params, batch, q_chunk=q_chunk,
+                                          remat=remat)
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":
+            n_img = batch["image_embeds"].shape[1] if "image_embeds" in batch else 0
+            logits = logits[:, n_img:]
+        loss = _loss_from_logits(logits[:, :-1], tokens[:, 1:])
+        if cfg.n_experts:
+            loss = loss + self.AUX_WEIGHT * aux / max(cfg.n_layers, 1)
+        return loss
+
+    def prefill(self, params: dict, batch: Dict[str, jax.Array], *,
+                q_chunk: int = 0):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            cons = self._cons()
+            enc_out = encdec.encode(params, batch["frames"], cfg, cons=cons)
+            cache = batch["cache"]
+            logits, new_cache = encdec.decode(params, batch["tokens"], enc_out,
+                                              cfg, cache=cache,
+                                              q_chunk=q_chunk, cons=cons)
+            return logits, new_cache
+        logits, new_cache, _ = self._lm_forward(params, batch,
+                                                cache=batch["cache"],
+                                                q_chunk=q_chunk)
+        return logits, new_cache
+
+    def decode_step(self, params: dict, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, new_cache = encdec.decode(params, batch["tokens"],
+                                              batch["enc_out"], cfg,
+                                              cache=batch["cache"],
+                                              cons=self._cons())
+            return logits, new_cache
+        logits, new_cache, _ = self._lm_forward(params, batch,
+                                                cache=batch["cache"])
+        return logits, new_cache
+
+    # ---------------------------------------------------------------- specs
+    def input_specs(self, cell: ShapeCell) -> Dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b, s = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        sd = jax.ShapeDtypeStruct
+        if cfg.family == "encdec":
+            frames = sd((b, cfg.encoder_frames, cfg.d_model), dt)
+            if cell.kind == "train":
+                return {"frames": frames, "tokens": sd((b, s), i32)}
+            cache = jax.eval_shape(lambda: self.init_cache(b, s))
+            if cell.kind == "prefill":
+                return {"frames": frames, "tokens": sd((b, s), i32),
+                        "cache": cache}
+            return {"tokens": sd((b, 1), i32), "cache": cache,
+                    "enc_out": frames}
+        if cfg.family == "vlm":
+            n_img = cfg.n_image_tokens
+            if cell.kind == "train":
+                return {"tokens": sd((b, s - n_img), i32),
+                        "image_embeds": sd((b, n_img, cfg.d_model), dt)}
+            if cell.kind == "prefill":
+                cache = jax.eval_shape(lambda: self.init_cache(b, s))
+                return {"tokens": sd((b, s - n_img), i32),
+                        "image_embeds": sd((b, n_img, cfg.d_model), dt),
+                        "cache": cache}
+            cache = jax.eval_shape(lambda: self.init_cache(b, s))
+            return {"tokens": sd((b, 1), i32), "cache": cache}
+        # plain LM families
+        if cell.kind == "train":
+            return {"tokens": sd((b, s), i32)}
+        cache = jax.eval_shape(lambda: self.init_cache(b, s))
+        if cell.kind == "prefill":
+            return {"tokens": sd((b, s), i32), "cache": cache}
+        return {"tokens": sd((b, 1), i32), "cache": cache}
+
+    # --------------------------------------------------------------- flops
+    def param_counts(self) -> Dict[str, float]:
+        """Analytic param counts from the *published* config."""
+        c = self.orig
+        d = c.d_model
+        counts = {"embed": c.vocab_size * d * (1 if c.tie_embeddings else 2)}
+        hd = c.resolved_head_dim
+        attn = d * hd * (c.n_heads * 2 + c.n_kv_heads * 2) if c.n_heads else 0
+        if c.use_mla:
+            qk = c.qk_nope_head_dim + c.qk_rope_head_dim
+            attn = (d * c.q_lora_rank + c.q_lora_rank * c.n_heads * qk
+                    + d * (c.kv_lora_rank + c.qk_rope_head_dim)
+                    + c.kv_lora_rank * c.n_heads * (c.qk_nope_head_dim
+                                                    + c.v_head_dim)
+                    + c.n_heads * c.v_head_dim * d)
+        mlp = 3 * d * c.d_ff
+        ssm = 0
+        if c.ssm_state:
+            di = c.d_inner
+            ssm = (2 * d * di + d * 2 * c.ssm_ngroups * c.ssm_state
+                   + d * c.ssm_nheads + di * d)
+        if c.family == "dense" or c.family == "vlm":
+            per_layer = attn + mlp
+            layers = c.n_layers * per_layer
+            active = layers
+        elif c.family == "moe":
+            routed = 3 * d * c.moe_d_ff
+            shared = 3 * d * c.shared_d_ff if c.shared_d_ff else 0
+            moe_layer = attn + routed * c.n_experts + shared + d * c.n_experts
+            dense_layer = attn + mlp
+            n_moe = c.n_layers - c.n_dense_layers
+            layers = n_moe * moe_layer + c.n_dense_layers * dense_layer
+            active = (n_moe * (attn + routed * c.n_experts_active + shared
+                               + d * c.n_experts)
+                      + c.n_dense_layers * dense_layer)
+        elif c.family == "ssm":
+            layers = c.n_layers * ssm
+            active = layers
+        elif c.family == "hybrid":
+            d2 = 2 * d
+            shared_attn = (d2 * hd * (c.n_heads + 2 * c.n_kv_heads)
+                           + c.n_heads * hd * d + d * d + 3 * d * c.d_ff)
+            layers = c.n_layers * ssm + shared_attn
+            n_apps = c.n_layers // c.attn_every
+            active = c.n_layers * ssm + n_apps * shared_attn
+        elif c.family == "encdec":
+            enc_layer = attn + 2 * d * c.d_ff
+            layers = (c.n_encoder_layers * enc_layer
+                      + c.n_layers * (2 * attn + 2 * d * c.d_ff))
+            active = layers
+        else:
+            raise ValueError(c.family)
+        counts["layers"] = float(layers)
+        counts["active"] = float(active)
+        counts["total"] = float(layers) + counts["embed"]
+        return counts
+
+    def model_flops(self, cell: ShapeCell) -> float:
+        """MODEL_FLOPS per the roofline contract: 6·N·D train, 2·N·D infer
+        (N = active non-embedding params, D = tokens processed)."""
+        n_active = self.param_counts()["active"]
+        if cell.kind == "train":
+            tokens = cell.global_batch * cell.seq_len
+            return 6.0 * n_active * tokens
+        if cell.kind == "prefill":
+            tokens = cell.global_batch * cell.seq_len
+            return 2.0 * n_active * tokens
+        return 2.0 * n_active * cell.global_batch   # one decode step
+
+    def param_bytes(self) -> float:
+        itemsize = jnp.dtype(self.cfg.dtype).itemsize
+        return self.param_counts()["total"] * itemsize
+
+    def kv_cache_bytes(self, batch: int, seq: int) -> float:
+        """Total KV/state cache bytes for the whole batch."""
+        c = self.cfg
+        if c.family == "ssm":
+            per = (c.ssm_nheads * c.ssm_headdim * c.ssm_state * 4
+                   + (c.ssm_conv_width - 1)
+                   * (c.d_inner + 2 * c.ssm_ngroups * c.ssm_state) * 2)
+            return batch * c.n_layers * per
+        kb = 1 if c.kv_cache_dtype == "int8" else jnp.dtype(c.kv_cache_dtype).itemsize
+        hd = c.resolved_head_dim
+        if c.use_mla:
+            per_tok = (c.kv_lora_rank + c.qk_rope_head_dim) * kb
+            return batch * seq * c.n_layers * per_tok
+        if c.family == "hybrid":
+            n_apps = c.n_layers // max(c.attn_every, 1)
+            ssm = c.ssm_nheads * c.ssm_headdim * c.ssm_state * 4
+            return (batch * c.n_layers * ssm
+                    + batch * seq * n_apps * 2 * c.n_kv_heads * hd * kb)
+        per_tok = 2 * c.n_kv_heads * hd * kb
+        if c.local_global_alternating and c.sliding_window:
+            half = c.n_layers // 2
+            return (batch * seq * half * per_tok
+                    + batch * min(seq, c.sliding_window) * half * per_tok)
+        return batch * seq * c.n_layers * per_tok
+
+    def analytic_hbm_bytes(self, cell: ShapeCell, accum: int = 1) -> float:
+        """Napkin per-step HBM traffic (whole job, summed over chips) for
+        the roofline memory term. Weights/grads/optimizer traffic +
+        activation read/write + cache traffic. Used instead of XLA:CPU's
+        'bytes accessed' (not TPU-representative; see EXPERIMENTS.md)."""
+        c = self.cfg
+        p_bytes = self.param_bytes()
+        tokens = cell.global_batch * cell.seq_len
+        d = c.d_model
+        act_unit = tokens * d * jnp.dtype(c.dtype).itemsize
+        depth = max(c.n_layers, 1)
+        if cell.kind == "train":
+            w_traffic = 3.0 * p_bytes * accum       # fwd+bwd+remat reads
+            g_traffic = 4.0 * p_bytes * accum       # grad arena rw (f32-ish)
+            opt_traffic = 10.0 * p_bytes            # adam m/v rw + update
+            act_traffic = 16.0 * act_unit * depth
+            return w_traffic + g_traffic + opt_traffic + act_traffic
+        if cell.kind == "prefill":
+            cache_w = self.kv_cache_bytes(cell.global_batch, cell.seq_len)
+            return p_bytes + 12.0 * act_unit * depth + cache_w
+        # decode: params + full cache read dominate one step
+        cache_r = self.kv_cache_bytes(cell.global_batch, cell.seq_len)
+        act_dec = (cell.global_batch * d * depth * 12
+                   * jnp.dtype(c.dtype).itemsize)
+        return p_bytes + cache_r + act_dec
+
+
+def build_model(arch_cfg: ArchConfig, *, pad_for_tp: Optional[int] = None,
+                dist: Optional[dict] = None) -> Model:
+    cfg = arch_cfg
+    if pad_for_tp:
+        cfg = pad_heads_for_tp(arch_cfg, pad_for_tp)
+        if cfg.n_experts:
+            cfg = cfg.replace(ep_shards=pad_for_tp)
+    return Model(cfg, orig_cfg=arch_cfg, dist=dist)

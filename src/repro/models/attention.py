@@ -1,0 +1,307 @@
+"""GQA attention: rope, qkv-bias, logit softcap, sliding window, KV caches.
+
+One generic core ``mha`` drives prefill, decode and cross-attention; masking
+is derived from explicit query/key *positions* (never a materialized [S,T]
+mask tensor) so 32k/500k cells stay compile-able. ``q_chunk`` blocks the
+query axis through ``lax.map`` to bound the score-matrix working set for
+long-sequence prefill.
+
+KV caches are dicts ``{"k", "v", "length"}`` (+ ``"k_scale"/"v_scale"`` for
+int8). int8 KV (per-token-per-head scales) is the beyond-paper optimization
+that lets qwen1.5-32b decode_32k fit a 256x16GB pod (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import InitCtx, apply_rope, dense_init, zeros_init
+
+NEG_INF = -2.0e38
+
+
+def init_attention(ctx: InitCtx, d: int, n_heads: int, n_kv: int,
+                   head_dim: int, qkv_bias: bool = False,
+                   out_bias: bool = False) -> dict:
+    p = {
+        "wq": dense_init(ctx, (d, n_heads, head_dim)),
+        "wk": dense_init(ctx, (d, n_kv, head_dim)),
+        "wv": dense_init(ctx, (d, n_kv, head_dim)),
+        "wo": dense_init(ctx, (n_heads, head_dim, d), scale=1.0 / (n_heads * head_dim) ** 0.5),
+    }
+    if qkv_bias:
+        p["bq"] = zeros_init(ctx, (n_heads, head_dim))
+        p["bk"] = zeros_init(ctx, (n_kv, head_dim))
+        p["bv"] = zeros_init(ctx, (n_kv, head_dim))
+    if out_bias:
+        p["bo"] = zeros_init(ctx, (d,))
+    return p
+
+
+def _mask_bias(q_pos, kv_pos, causal: bool, window: int) -> jax.Array:
+    """Additive f32 mask [.., Sq, Skv] from positions. kv_pos < 0 = invalid."""
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = kv_pos[..., None, :].astype(jnp.int32)
+    ok = kp >= 0
+    if causal:
+        ok = ok & (kp <= qp)
+    if window > 0:
+        ok = ok & (qp - kp < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend(q, k, v, q_pos, kv_pos, *, causal, window, cap, scale):
+    """q:[B,Sq,H,D] k/v:[B,Skv,KV,D] -> [B,Sq,H,D]. f32 softmax."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32) * scale
+    if cap > 0.0:
+        s = cap * jnp.tanh(s / cap)
+    s = s + _mask_bias(q_pos, kv_pos, causal, window)[:, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, dh)
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, q_positions: jax.Array,
+        kv_positions: jax.Array, causal: bool = True, window: int = 0,
+        attn_softcap: float = 0.0, scale: Optional[float] = None,
+        q_chunk: int = 0) -> jax.Array:
+    """Generic attention core. Positions are [B, S] (or [S] broadcast)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (q.shape[0], q.shape[1]))
+    if kv_positions.ndim == 1:
+        kv_positions = jnp.broadcast_to(kv_positions[None], (k.shape[0], k.shape[1]))
+    sq = q.shape[1]
+    if q_chunk and sq > q_chunk and sq % q_chunk == 0:
+        nb = sq // q_chunk
+        qb = q.reshape(q.shape[0], nb, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+        pb = q_positions.reshape(q.shape[0], nb, q_chunk).swapaxes(0, 1)
+        out = jax.lax.map(
+            lambda args: _attend(args[0], k, v, args[1], kv_positions,
+                                 causal=causal, window=window,
+                                 cap=attn_softcap, scale=scale),
+            (qb, pb))
+        return out.swapaxes(0, 1).reshape(q.shape)
+    return _attend(q, k, v, q_positions, kv_positions, causal=causal,
+                   window=window, cap=attn_softcap, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (bf16 or int8 with per-token-per-head scales)
+# ---------------------------------------------------------------------------
+def make_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype: str = "bfloat16", ring: bool = False) -> dict:
+    """``ring=True`` makes a rolling window buffer (sliding-window layers):
+    slot = position % max_len, per-slot absolute positions kept in
+    ``slots_pos`` so masking stays position-exact. Ring caches are what cap
+    gemma2 local layers at window size for the long_500k cell."""
+    del ring  # slot arithmetic below is modulo max_len, which covers both
+    cache = {
+        "length": jnp.zeros((), jnp.int32),
+        "slots_pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+    if dtype == "int8":
+        cache.update({
+            "k": jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
+            "v": jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, n_kv), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_len, n_kv), jnp.float32),
+        })
+    else:
+        cache.update({
+            "k": jnp.zeros((batch, max_len, n_kv, head_dim), jnp.dtype(dtype)),
+            "v": jnp.zeros((batch, max_len, n_kv, head_dim), jnp.dtype(dtype)),
+        })
+    return cache
+
+
+def _quant(x: jax.Array):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None]).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                    start: jax.Array) -> dict:
+    """Write k/v [B, S_new, KV, D] at absolute position ``start``.
+
+    Ring caches map to slot ``start % max_len`` (single-token or
+    non-wrapping block writes, which is all decode needs)."""
+    out = dict(cache)
+    s_new = k_new.shape[1]
+    s_max = cache["k"].shape[1]
+    length_new = start + s_new
+    if s_new > s_max:
+        # ring cache smaller than the prefill: keep only the window tail
+        k_new = k_new[:, -s_max:]
+        v_new = v_new[:, -s_max:]
+        start = start + (s_new - s_max)
+        s_new = s_max
+        slot = jnp.zeros((), jnp.int32)
+    else:
+        slot = start % s_max
+    pos_new = start + jnp.arange(s_new, dtype=jnp.int32)
+
+    def upd(buf, val):
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, slot, 1)
+
+    if cache["k"].dtype == jnp.int8:
+        kq, ks = _quant(k_new)
+        vq, vs = _quant(v_new)
+        out["k"], out["v"] = upd(cache["k"], kq), upd(cache["v"], vq)
+        out["k_scale"] = upd(cache["k_scale"], ks)
+        out["v_scale"] = upd(cache["v_scale"], vs)
+    else:
+        out["k"] = upd(cache["k"], k_new.astype(cache["k"].dtype))
+        out["v"] = upd(cache["v"], v_new.astype(cache["v"].dtype))
+    out["slots_pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["slots_pos"], pos_new, slot, 0)
+    out["length"] = length_new
+    return out
+
+
+def read_kv_cache(cache: dict, compute_dtype) -> tuple:
+    """Full-cache k/v in compute dtype + kv positions (-1 where invalid)."""
+    if cache["k"].dtype == jnp.int8:
+        k = _dequant(cache["k"], cache["k_scale"], compute_dtype)
+        v = _dequant(cache["v"], cache["v_scale"], compute_dtype)
+    else:
+        k = cache["k"].astype(compute_dtype)
+        v = cache["v"].astype(compute_dtype)
+    return k, v, cache["slots_pos"]
+
+
+def attend_cache_chunked(q: jax.Array, cache: dict, q_positions: jax.Array,
+                         *, causal: bool = True, window: int = 0,
+                         attn_softcap: float = 0.0, scale: float = 1.0,
+                         kv_chunk: int = 4096) -> jax.Array:
+    """Flash-decode over the KV cache: online softmax across KV chunks.
+
+    Never materializes the full (dequantized) cache or the full score
+    matrix — per-chunk slices only, f32 running (m, l, acc). This is what
+    keeps qwen1.5-32b decode_32k inside 16 GB/chip."""
+    b, sq, h, dh = q.shape
+    kvh = cache["k"].shape[2]
+    g = h // kvh
+    t = cache["k"].shape[1]
+    nc = max(t // kv_chunk, 1)
+    kv_chunk = t // nc
+    qg = q.reshape(b, sq, kvh, g, dh)
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (b, sq))
+    is_int8 = cache["k"].dtype == jnp.int8
+
+    def step(carry, idx):
+        m, l, acc = carry
+        off = idx * kv_chunk
+        ks = jax.lax.dynamic_slice_in_dim(cache["k"], off, kv_chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(cache["v"], off, kv_chunk, 1)
+        if is_int8:
+            kss = jax.lax.dynamic_slice_in_dim(cache["k_scale"], off, kv_chunk, 1)
+            vss = jax.lax.dynamic_slice_in_dim(cache["v_scale"], off, kv_chunk, 1)
+            ks = _dequant(ks, kss, q.dtype)
+            vs = _dequant(vs, vss, q.dtype)
+        else:
+            ks = ks.astype(q.dtype)
+            vs = vs.astype(q.dtype)
+        kp = jax.lax.dynamic_slice_in_dim(cache["slots_pos"], off, kv_chunk, 0)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, ks).astype(jnp.float32) * scale
+        if attn_softcap > 0.0:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        s = s + _mask_bias(q_positions, jnp.broadcast_to(kp[None], (b, kv_chunk)),
+                           causal, window)[:, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vs.dtype),
+                                vs).astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  jnp.arange(nc, dtype=jnp.int32))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (projections + rope + core + output)
+# ---------------------------------------------------------------------------
+def attention_block(params: dict, x: jax.Array, *, positions: jax.Array,
+                    rope_theta: float = 10000.0, causal: bool = True,
+                    window: int = 0, attn_softcap: float = 0.0,
+                    scale: Optional[float] = None, q_chunk: int = 0,
+                    cache: Optional[dict] = None,
+                    x_kv: Optional[jax.Array] = None, cons=None) -> tuple:
+    """Returns (out [B,S,d], new_cache | None).
+
+    - self-attention prefill: cache=None or fresh cache to fill.
+    - decode: cache holds history; x is the new token block.
+    - cross-attention: pass x_kv (encoder states), causal=False, cache=None.
+    """
+    src = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if rope_theta > 0.0 and x_kv is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if cons is not None:
+        q = cons.heads(q)
+        k = cons.kv_heads(k)
+        v = cons.kv_heads(v)
+
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    new_cache = None
+    if cache is not None:
+        start = cache["length"]
+        new_cache = update_kv_cache(cache, k, v, start)
+        if q.shape[1] > 1:
+            # Prefill-from-scratch: attend on the *fresh* k/v (ring caches
+            # hold only the window tail; reading back would also double the
+            # working set). Chunked continuation-prefill is unsupported.
+            out = mha(q, k, v, q_positions=positions, kv_positions=positions,
+                      causal=causal, window=window, attn_softcap=attn_softcap,
+                      scale=scale, q_chunk=q_chunk)
+        elif new_cache["k"].shape[1] > 8192:
+            out = attend_cache_chunked(q, new_cache, positions, causal=causal,
+                                       window=window, attn_softcap=attn_softcap,
+                                       scale=scale)
+        else:
+            kc, vc, kv_pos = read_kv_cache(new_cache, x.dtype)
+            out = mha(q, kc, vc, q_positions=positions, kv_positions=kv_pos,
+                      causal=causal, window=window, attn_softcap=attn_softcap,
+                      scale=scale)
+    else:
+        if x_kv is not None:
+            kv_pos = jnp.arange(src.shape[1], dtype=jnp.int32)
+        else:
+            kv_pos = positions
+        out = mha(q, k, v, q_positions=positions, kv_positions=kv_pos,
+                  causal=causal and x_kv is None, window=window,
+                  attn_softcap=attn_softcap, scale=scale, q_chunk=q_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if "bo" in params:
+        y = y + params["bo"]
+    return y, new_cache

@@ -1,0 +1,147 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+``input_specs`` provides precomputed frame embeddings [B, F, d] (the conv
+frontend is a stub per the assignment); the encoder adds sinusoidal
+positions and runs bidirectional layers. The decoder is the DARIS-staged /
+scheduled path: causal self-attention (+cache) and cross-attention to the
+encoder output. Whisper uses LayerNorm + plain-GELU MLPs with biases;
+positions are sinusoidal (no rope). Layers are python-unrolled (4 layers,
+tiny model — scan would save nothing).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_block, init_attention, make_kv_cache
+from .layers import (InitCtx, dense_init, embed_init, init_mlp, layer_norm,
+                     mlp, ones_init, sinusoidal_positions, zeros_init)
+
+
+def _init_ln(ctx, d):
+    return {"w": ones_init(ctx, (d,)), "b": zeros_init(ctx, (d,))}
+
+
+def _init_enc_layer(key, cfg):
+    ctx = InitCtx(key, jnp.dtype(cfg.dtype))
+    d = cfg.d_model
+    return {
+        "ln1": _init_ln(ctx, d),
+        "attn": init_attention(ctx, d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.resolved_head_dim, qkv_bias=True,
+                               out_bias=True),
+        "ln2": _init_ln(ctx, d),
+        "mlp": init_mlp(ctx, d, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ctx = InitCtx(key, jnp.dtype(cfg.dtype))
+    d = cfg.d_model
+    return {
+        "ln1": _init_ln(ctx, d),
+        "self_attn": init_attention(ctx, d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.resolved_head_dim, qkv_bias=True,
+                                    out_bias=True),
+        "ln_x": _init_ln(ctx, d),
+        "cross_attn": init_attention(ctx, d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.resolved_head_dim, qkv_bias=True,
+                                     out_bias=True),
+        "ln2": _init_ln(ctx, d),
+        "mlp": init_mlp(ctx, d, cfg.d_ff),
+    }
+
+
+def init_encdec(key: jax.Array, cfg) -> dict:
+    ctx = InitCtx(key, jnp.dtype(cfg.dtype))
+    enc_keys = jax.random.split(ctx.next(), cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ctx.next(), cfg.n_layers)
+    return {
+        "embed": embed_init(ctx, cfg.vocab_size, cfg.d_model),
+        "enc_layers": [_init_enc_layer(k, cfg) for k in enc_keys],
+        "enc_norm": _init_ln(ctx, cfg.d_model),
+        "dec_layers": [_init_dec_layer(k, cfg) for k in dec_keys],
+        "dec_norm": _init_ln(ctx, cfg.d_model),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg, cons=None) -> jax.Array:
+    """frames: [B, F, d] stub embeddings -> encoder states [B, F, d]."""
+    pos = sinusoidal_positions(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    x = frames + pos[None]
+    f_pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+    for lp in params["enc_layers"]:
+        h = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+        a, _ = attention_block(lp["attn"], h, positions=f_pos, rope_theta=0.0,
+                               causal=False, cons=cons)
+        x = x + a
+        h = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+        x = x + mlp(lp["mlp"], h, cfg.mlp_act)
+        if cons is not None:
+            x = cons.hidden(x)
+    return layer_norm(x, params["enc_norm"]["w"], params["enc_norm"]["b"])
+
+
+def init_dec_cache(cfg, batch: int, max_len: int) -> dict:
+    return {
+        "self": [make_kv_cache(batch, max_len, cfg.n_kv_heads,
+                               cfg.resolved_head_dim, cfg.kv_cache_dtype)
+                 for _ in range(cfg.n_layers)],
+    }
+
+
+def decode(params: dict, tokens: jax.Array, enc_out: jax.Array, cfg,
+           cache: Optional[dict] = None,
+           positions: Optional[jax.Array] = None,
+           q_chunk: int = 0, remat: str = "none", cons=None
+           ) -> Tuple[jax.Array, Optional[dict]]:
+    """Decoder forward. tokens [B, S]; enc_out [B, F, d]."""
+    x = params["embed"][tokens]
+    if cons is not None:
+        x = cons.hidden(x)
+    if positions is None:
+        start = cache["self"][0]["length"] if cache is not None else 0
+        positions = start + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x = x + _pos_embed(positions, cfg.d_model).astype(x.dtype)[None]
+    new_cache = {"self": []} if cache is not None else None
+
+    def dec_layer(x, lp, ca):
+        h = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+        a, nc = attention_block(lp["self_attn"], h, positions=positions,
+                                rope_theta=0.0, causal=True, cache=ca,
+                                q_chunk=q_chunk, cons=cons)
+        x = x + a
+        h = layer_norm(x, lp["ln_x"]["w"], lp["ln_x"]["b"])
+        a, _ = attention_block(lp["cross_attn"], h, positions=positions,
+                               rope_theta=0.0, causal=False, x_kv=enc_out,
+                               q_chunk=q_chunk, cons=cons)
+        x = x + a
+        h = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+        x = x + mlp(lp["mlp"], h, cfg.mlp_act)
+        if cons is not None:
+            x = cons.hidden(x)
+        return x, nc
+
+    if remat != "none":
+        dec_layer = jax.checkpoint(
+            dec_layer, policy=jax.checkpoint_policies.nothing_saveable)
+    for i, lp in enumerate(params["dec_layers"]):
+        ca = cache["self"][i] if cache is not None else None
+        x, nc = dec_layer(x, lp, ca)
+        if cache is not None:
+            new_cache["self"].append(nc)
+    x = layer_norm(x, params["dec_norm"]["w"], params["dec_norm"]["b"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    if cons is not None:
+        logits = cons.logits(logits)
+    return logits, new_cache
+
+
+def _pos_embed(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding for arbitrary (possibly traced) positions [S]."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = 1.0 / (10000 ** (dim / max(d // 2 - 1, 1)))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

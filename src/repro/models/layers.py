@@ -1,0 +1,149 @@
+"""Common model primitives: norms, MLPs, rope, embeddings, init helpers.
+
+Everything is a pure function over explicit param pytrees (nested dicts of
+jnp arrays). Initializers take an ``InitCtx`` carrying the rng stream and
+target dtype so builders stay compact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class InitCtx:
+    """Sequential rng-splitting helper for param init."""
+    key: jax.Array
+    dtype: jnp.dtype
+
+    def next(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+def dense_init(ctx: InitCtx, shape, scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal init with 1/sqrt(fan_in) scaling (fan_in = shape[0])."""
+    fan_in = shape[0]
+    std = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    w = jax.random.truncated_normal(ctx.next(), -2.0, 2.0, shape, jnp.float32) * std
+    return w.astype(ctx.dtype)
+
+
+def embed_init(ctx: InitCtx, vocab: int, d: int) -> jax.Array:
+    w = jax.random.normal(ctx.next(), (vocab, d), jnp.float32) * 0.02
+    return w.astype(ctx.dtype)
+
+
+def zeros_init(ctx: InitCtx, shape) -> jax.Array:
+    return jnp.zeros(shape, ctx.dtype)
+
+
+def ones_init(ctx: InitCtx, shape) -> jax.Array:
+    return jnp.ones(shape, ctx.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms (f32 accumulation regardless of param dtype)
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:                       # gemma-style (1 + w) parameterization
+        w = 1.0 + w
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "gelu_tanh":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name}")
+
+
+def init_gated_mlp(ctx: InitCtx, d: int, d_ff: int) -> dict:
+    return {
+        "w_gate": dense_init(ctx, (d, d_ff)),
+        "w_up": dense_init(ctx, (d, d_ff)),
+        "w_down": dense_init(ctx, (d_ff, d)),
+    }
+
+
+def gated_mlp(params: dict, x: jax.Array, act: str = "silu",
+              cons=None) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = act_fn(act)(g) * u
+    if cons is not None:
+        h = cons.ffn(h)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def init_mlp(ctx: InitCtx, d: int, d_ff: int) -> dict:
+    """Plain 2-layer MLP (whisper)."""
+    return {
+        "w_in": dense_init(ctx, (d, d_ff)),
+        "b_in": zeros_init(ctx, (d_ff,)),
+        "w_out": dense_init(ctx, (d_ff, d)),
+        "b_out": zeros_init(ctx, (d,)),
+    }
+
+
+def mlp(params: dict, x: jax.Array, act: str = "gelu") -> jax.Array:
+    h = act_fn(act)(jnp.einsum("...d,df->...f", x, params["w_in"]) + params["b_in"])
+    return jnp.einsum("...f,fd->...d", h, params["w_out"]) + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # [Dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(ang)[..., :, None, :]                  # [..., S, 1, Dh/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal position table [n, d] (f32)."""
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = 1.0 / (10000 ** (dim / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=1),
+                       dtype=jnp.float32)

@@ -1,0 +1,219 @@
+"""Mamba2 (state-space duality) block: chunked SSD prefill + O(1) decode.
+
+Projections are split (z / x / BC / dt) instead of one fused in_proj so the
+tensor-parallel sharding is clean: x/z/dt shard over ssm heads (``model``
+axis), the small B/C group projections stay replicated (DESIGN.md §5).
+
+SSD follows the chunked algorithm of the Mamba2 paper (intra-chunk
+quadratic term + inter-chunk state recurrence via lax.scan); the Pallas
+kernel in ``repro.kernels.ssd_scan`` implements the same contraction with
+VMEM tiling and is validated against ``ssd_reference`` here.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import InitCtx, dense_init, ones_init, rms_norm, zeros_init
+
+
+def init_mamba2(ctx: InitCtx, cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_nheads
+    g = cfg.ssm_ngroups
+    n = cfg.ssm_state
+    w = cfg.ssm_conv_width
+    return {
+        "w_z": dense_init(ctx, (d, di)),
+        "w_x": dense_init(ctx, (d, di)),
+        "w_bc": dense_init(ctx, (d, 2 * g * n)),
+        "w_dt": dense_init(ctx, (d, h)),
+        "dt_bias": zeros_init(ctx, (h,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(ctx.dtype),
+        "D": ones_init(ctx, (h,)),
+        "conv_x": dense_init(ctx, (w, di), scale=0.5),
+        "conv_x_b": zeros_init(ctx, (di,)),
+        "conv_bc": dense_init(ctx, (w, 2 * g * n), scale=0.5),
+        "conv_bc_b": zeros_init(ctx, (2 * g * n,)),
+        "norm": ones_init(ctx, (di,)),
+        "w_out": dense_init(ctx, (di, d), scale=1.0 / di ** 0.5),
+    }
+
+
+def make_ssm_cache(batch: int, cfg, dtype: str = "bfloat16") -> dict:
+    w = cfg.ssm_conv_width
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, cfg.d_inner), jnp.dtype(dtype)),
+        "conv_bc": jnp.zeros((batch, w - 1, 2 * cfg.ssm_ngroups * cfg.ssm_state),
+                             jnp.dtype(dtype)),
+        "state": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def causal_conv(x: jax.Array, kernel: jax.Array, bias: jax.Array,
+                history: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv via W shifted adds. x: [B,L,C], kernel: [W,C].
+
+    Returns (y [B,L,C], new_history [B,W-1,C])."""
+    w = kernel.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    ln = x.shape[1]
+    y = sum(xp[:, i:i + ln] * kernel[i][None, None] for i in range(w))
+    y = jax.nn.silu(y + bias)
+    return y, xp[:, -(w - 1):]
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: [..., Q] -> [..., Q, Q] with out[i,j] = sum_{j<k<=i} dA[k], -inf for j>i."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_reference(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                  b: jax.Array, c: jax.Array, chunk: int,
+                  init_state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. x:[B,L,H,P] dt:[B,L,H] (post-softplus) b/c:[B,L,G,N].
+
+    Returns (y [B,L,H,P], final_state [B,H,P,N] f32)."""
+    bs, ln, h, p = x.shape
+    g = b.shape[2]
+    n = b.shape[3]
+    assert ln % chunk == 0, f"L={ln} not divisible by chunk={chunk}"
+    nc = ln // chunk
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))               # [H], negative
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h).astype(jnp.float32)
+    bc = jnp.repeat(b.reshape(bs, nc, chunk, g, n), rep, axis=3)  # [B,nc,Q,H,N]
+    cc = jnp.repeat(c.reshape(bs, nc, chunk, g, n), rep, axis=3)
+    da = dtc * a[None, None, None]                        # [B,nc,Q,H]
+    da_hq = jnp.moveaxis(da, -1, 2)                       # [B,nc,H,Q]
+    seg = _segsum(da_hq)                                  # [B,nc,H,Q,Q]
+    decay = jnp.exp(seg)
+    # intra-chunk (quadratic within chunk)
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc).astype(jnp.float32)
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", cb * decay, dtc,
+                         xc.astype(jnp.float32))
+    # per-chunk final states
+    cum = jnp.cumsum(da_hq, axis=-1)                      # [B,nc,H,Q]
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)           # [B,nc,H,Q]
+    states = jnp.einsum("bckhn,bchk,bckh,bckhp->bchpn", bc, decay_to_end,
+                        dtc, xc.astype(jnp.float32))
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])                   # [B,nc,H]
+    s0 = (jnp.zeros((bs, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(prev, inp):
+        st, cdk = inp                                     # [B,H,P,N], [B,H]
+        new = prev * cdk[:, :, None, None] + st
+        return new, prev
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # [B,nc,H,P,N]
+    decay_from_start = jnp.exp(cum)                       # [B,nc,H,Q]
+    y_inter = jnp.einsum("bcqhn,bchq,bchpn->bcqhp", cc, decay_from_start,
+                         prev_states)
+    y = (y_intra + y_inter).reshape(bs, ln, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    a_log: jax.Array, b: jax.Array, c: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. x:[B,H,P] dt:[B,H] b/c:[B,G,N].
+
+    state' = state * exp(dt*A) + dt * (B outer x);  y = C . state'"""
+    h = x.shape[1]
+    g = b.shape[1]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)   # [B,H,N]
+    ch = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a[None])                        # [B,H]
+    xt = x.astype(jnp.float32)
+    new_state = (state * decay[:, :, None, None]
+                 + dtf[:, :, None, None] * xt[:, :, :, None] * bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    return y.astype(x.dtype), new_state
+
+
+def mamba2_block(params: dict, x: jax.Array, *, cfg,
+                 cache: Optional[dict] = None,
+                 use_kernel: bool = False,
+                 cons=None) -> Tuple[jax.Array, Optional[dict]]:
+    """[B,L,d] -> ([B,L,d], new_cache). Decode when cache is given and L==1
+    uses the recurrent step; otherwise chunked SSD."""
+    bsz, ln, _ = x.shape
+    h, p, g, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    z = jnp.einsum("bld,di->bli", x, params["w_z"])
+    xin = jnp.einsum("bld,di->bli", x, params["w_x"])
+    bc = jnp.einsum("bld,dj->blj", x, params["w_bc"])
+    if cons is not None:
+        z = cons.ssm_inner(z)
+        xin = cons.ssm_inner(xin)
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))
+
+    hist_x = cache["conv_x"] if cache is not None else None
+    hist_bc = cache["conv_bc"] if cache is not None else None
+    xin, new_hist_x = causal_conv(xin, params["conv_x"], params["conv_x_b"], hist_x)
+    bc, new_hist_bc = causal_conv(bc, params["conv_bc"], params["conv_bc_b"], hist_bc)
+
+    xh = xin.reshape(bsz, ln, h, p)
+    bmat = bc[..., :g * n].reshape(bsz, ln, g, n)
+    cmat = bc[..., g * n:].reshape(bsz, ln, g, n)
+
+    if cache is not None and ln == 1:
+        y1, new_state = ssd_decode_step(
+            cache["state"], xh[:, 0], dt[:, 0], params["A_log"],
+            bmat[:, 0], cmat[:, 0])
+        y = y1[:, None]
+    else:
+        init_state = cache["state"] if cache is not None else None
+        # pad to a chunk multiple with dt=0 tokens: zero dt means zero
+        # state update and unit decay, so the SSD recurrence is invariant
+        pad = (-ln) % cfg.ssm_chunk
+        xp, dtp, bp, cp = xh, dt, bmat, cmat
+        if pad:
+            pad3 = [(0, 0), (0, pad)] + [(0, 0)] * 2
+            xp = jnp.pad(xh, pad3)
+            dtp = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+            bp = jnp.pad(bmat, pad3)
+            cp = jnp.pad(cmat, pad3)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            y, new_state = kops.ssd(xp, dtp, params["A_log"], bp, cp,
+                                    cfg.ssm_chunk, init_state)
+        else:
+            y, new_state = ssd_reference(xp, dtp, params["A_log"], bp, cp,
+                                         cfg.ssm_chunk, init_state)
+        if pad:
+            y = y[:, :ln]
+
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, ln, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], eps=cfg.norm_eps)
+    out = jnp.einsum("bli,id->bld", y, params["w_out"])
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv_x": new_hist_x, "conv_bc": new_hist_bc,
+                     "state": new_state,
+                     "length": cache["length"] + ln}
+    return out, new_cache

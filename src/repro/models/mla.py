@@ -1,0 +1,137 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Two execution paths:
+  * naive  -- latent is up-projected to per-head K/V (train / prefill).
+  * absorbed -- w_uk / w_uv are absorbed into the query / output projections
+    so decode attends directly against the (kv_lora + rope) latent cache.
+    This is what makes the MLA decode cache tiny: 512+64 values per token
+    regardless of the 128 heads.
+
+Cache: {"latent": [B, S, kv_lora], "k_rope": [B, S, rope_dim] (post-rope),
+        "length", "slots_pos"}.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import _mask_bias
+from .layers import InitCtx, apply_rope, dense_init, ones_init, rms_norm
+
+
+def init_mla(ctx: InitCtx, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "q_down": dense_init(ctx, (d, cfg.q_lora_rank)),
+        "q_norm": ones_init(ctx, (cfg.q_lora_rank,)),
+        "q_up": dense_init(ctx, (cfg.q_lora_rank, h, qk)),
+        "kv_down": dense_init(ctx, (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim)),
+        "kv_norm": ones_init(ctx, (cfg.kv_lora_rank,)),
+        "k_up": dense_init(ctx, (cfg.kv_lora_rank, h, cfg.qk_nope_head_dim)),
+        "v_up": dense_init(ctx, (cfg.kv_lora_rank, h, cfg.v_head_dim)),
+        "wo": dense_init(ctx, (h, cfg.v_head_dim, d),
+                         scale=1.0 / (h * cfg.v_head_dim) ** 0.5),
+    }
+
+
+def make_mla_cache(batch: int, max_len: int, cfg, dtype: str = "bfloat16") -> dict:
+    dt = jnp.dtype(dtype)
+    return {
+        "latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dt),
+        "length": jnp.zeros((), jnp.int32),
+        "slots_pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def _project_q(params, x, cfg, positions):
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["q_down"]), params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["q_up"])
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_latent(params, x, cfg, positions):
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["kv_down"])
+    latent = rms_norm(ckv[..., :cfg.kv_lora_rank], params["kv_norm"])
+    # shared single-head rope key
+    k_rope = apply_rope(ckv[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)[..., 0, :]
+    return latent, k_rope
+
+
+def mla_block(params: dict, x: jax.Array, *, cfg, positions: jax.Array,
+              cache: Optional[dict] = None, q_chunk: int = 0,
+              cons=None) -> tuple:
+    """Returns (out, new_cache | None). Decode (with history) runs absorbed."""
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _project_q(params, x, cfg, positions)
+    latent, k_rope = _project_latent(params, x, cfg, positions)
+    if cons is not None:
+        q_nope = cons.heads(q_nope)
+        q_rope = cons.heads(q_rope)
+        latent = cons.hidden(latent)
+
+    new_cache = None
+    if cache is not None:
+        start = cache["length"]
+        s_max = cache["latent"].shape[1]
+        slot = start % s_max
+        new_cache = dict(cache)
+        new_cache["latent"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent.astype(cache["latent"].dtype), slot, 1)
+        new_cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), slot, 1)
+        pos_new = start + jnp.arange(x.shape[1], dtype=jnp.int32)
+        new_cache["slots_pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["slots_pos"], pos_new, slot, 0)
+        new_cache["length"] = start + x.shape[1]
+
+    if cache is not None and x.shape[1] == 1:
+        # ----- absorbed decode path over the latent cache -----
+        lat = new_cache["latent"].astype(x.dtype)          # [B,T,R]
+        kr = new_cache["k_rope"].astype(x.dtype)           # [B,T,Rr]
+        kv_pos = new_cache["slots_pos"]
+        # absorb k_up into q:  q_lat[b,s,h,r] = sum_k q_nope * k_up[r,h,k]
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["k_up"])
+        s = (jnp.einsum("bshr,btr->bhst", q_lat, lat)
+             + jnp.einsum("bshk,btk->bhst", q_rope, kr)).astype(jnp.float32) * scale
+        s = s + _mask_bias(
+            jnp.broadcast_to(positions[None] if positions.ndim == 1 else positions,
+                             (x.shape[0], x.shape[1])),
+            jnp.broadcast_to(kv_pos[None], (x.shape[0], kv_pos.shape[0])),
+            True, 0)[:, None]
+        p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        out_lat = jnp.einsum("bhst,btr->bshr", p, lat)
+        # absorb v_up into the output projection
+        o = jnp.einsum("bshr,rhv->bshv", out_lat, params["v_up"])
+        y = jnp.einsum("bshv,hvd->bsd", o, params["wo"])
+        return y, new_cache
+
+    # ----- naive path (train / prefill; attends on fresh latents) -----
+    k_nope = jnp.einsum("bsr,rhk->bshk", latent, params["k_up"])
+    v = jnp.einsum("bsr,rhv->bshv", latent, params["v_up"])
+    h = cfg.n_heads
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_rope.shape[:2], h, k_rope.shape[-1]))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    from .attention import mha  # local import to avoid cycle at module load
+    # v may have fewer dims than qk: pad v to qk dim is wasteful; attend manually
+    out = mha(q, k, _pad_v(v, q.shape[-1]), q_positions=positions,
+              kv_positions=positions, causal=True, scale=scale, q_chunk=q_chunk)
+    out = out[..., :cfg.v_head_dim]
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def _pad_v(v: jax.Array, dim: int) -> jax.Array:
+    if v.shape[-1] == dim:
+        return v
+    pad = [(0, 0)] * (v.ndim - 1) + [(0, dim - v.shape[-1])]
+    return jnp.pad(v, pad)

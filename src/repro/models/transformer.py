@@ -1,0 +1,536 @@
+"""Decoder-only LM assembly for all LM families.
+
+Layers are **stacked** (leading L axis on every leaf) and driven by
+``lax.scan`` so a 64-layer model compiles like one layer — essential for the
+single-core dry-run of 40 (arch x shape) cells. Families:
+
+  dense   : [attn, mlp] x L            (qwen1.5, stablelm, smollm, pixtral backbone)
+  gemma2  : [(local attn, mlp), (global attn, mlp)] x L/2, softcaps, post-norms
+  moe     : [attn|mla, moe] x L with optional leading dense layers (deepseek)
+  ssm     : [mamba2] x L               (mamba2-2.7b)
+  hybrid  : [mamba2] x L with a weight-tied shared attention block applied
+            every ``attn_every`` layers (zamba2; lax.cond inside the scan)
+
+Caches are pytrees with the same leading L axis, threaded through the scan
+as xs/ys. ``mode`` is implied: cache=None -> train/loss forward;
+cache given -> prefill (L>1) or decode (L==1) with absolute positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_block, init_attention, make_kv_cache
+from .layers import (InitCtx, dense_init, embed_init, gated_mlp,
+                     init_gated_mlp, ones_init, rms_norm, softcap)
+from .mamba2 import init_mamba2, make_ssm_cache, mamba2_block
+from .mla import init_mla, make_mla_cache, mla_block
+from .moe import init_moe, moe_capacity, moe_dense_oracle, moe_ep_shardmap
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+def _init_dense_layer(key, cfg, is_local: bool = False) -> dict:
+    ctx = InitCtx(key, jnp.dtype(cfg.dtype))
+    p = {
+        "ln1": ones_init(ctx, (cfg.d_model,)),
+        "attn": init_attention(ctx, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.resolved_head_dim, cfg.qkv_bias),
+        "ln2": ones_init(ctx, (cfg.d_model,)),
+        "mlp": init_gated_mlp(ctx, cfg.d_model, cfg.d_ff),
+    }
+    if cfg.post_block_norms:
+        p["ln1_post"] = ones_init(ctx, (cfg.d_model,))
+        p["ln2_post"] = ones_init(ctx, (cfg.d_model,))
+    return p
+
+
+def _init_moe_layer(key, cfg, n_experts_padded: int) -> dict:
+    ctx = InitCtx(key, jnp.dtype(cfg.dtype))
+    p = {"ln1": ones_init(ctx, (cfg.d_model,)),
+         "ln2": ones_init(ctx, (cfg.d_model,))}
+    if cfg.use_mla:
+        p["attn"] = init_mla(ctx, cfg)
+    else:
+        p["attn"] = init_attention(ctx, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.resolved_head_dim,
+                                   cfg.qkv_bias)
+    p["moe"] = init_moe(ctx, cfg.d_model, n_experts_padded, cfg.moe_d_ff,
+                        cfg.shared_d_ff)
+    return p
+
+
+def _init_ssm_layer(key, cfg) -> dict:
+    ctx = InitCtx(key, jnp.dtype(cfg.dtype))
+    return {"ln": ones_init(ctx, (cfg.d_model,)),
+            "mamba": init_mamba2(ctx, cfg)}
+
+
+def _init_shared_attn(key, cfg) -> dict:
+    """zamba2 weight-tied block: attention over concat(x, x_emb0) [2d],
+    output projected straight back to d."""
+    ctx = InitCtx(key, jnp.dtype(cfg.dtype))
+    d2 = 2 * cfg.d_model
+    p = {
+        "ln1": ones_init(ctx, (d2,)),
+        "attn": init_attention(ctx, d2, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.resolved_head_dim),
+        "ln2": ones_init(ctx, (cfg.d_model,)),
+        "mlp": init_gated_mlp(ctx, cfg.d_model, cfg.d_ff),
+    }
+    hd = cfg.resolved_head_dim
+    p["attn"]["wo"] = dense_init(ctx, (cfg.n_heads, hd, cfg.d_model),
+                                 scale=1.0 / (cfg.n_heads * hd) ** 0.5)
+    return p
+
+
+def moe_padded_experts(cfg) -> int:
+    """Pad expert count to a multiple of the EP shard width (qwen2 60->64
+    when ep_shards=16). Dummy experts are masked from routing."""
+    e, w = cfg.n_experts, max(cfg.ep_shards, 1)
+    return e if e % w == 0 else e + (w - e % w)
+
+
+def init_lm(key: jax.Array, cfg) -> dict:
+    ctx = InitCtx(key, jnp.dtype(cfg.dtype))
+    params = {"embed": embed_init(ctx, cfg.vocab_size, cfg.d_model),
+              "final_norm": ones_init(ctx, (cfg.d_model,))}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ctx, (cfg.d_model, cfg.vocab_size))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global_alternating:
+            nb = cfg.n_layers // 2
+            keys = jax.random.split(ctx.next(), nb)
+            params["layers"] = jax.vmap(lambda k: {
+                "local": _init_dense_layer(k, cfg, True),
+                "global": _init_dense_layer(jax.random.fold_in(k, 1), cfg),
+            })(keys)
+        else:
+            keys = jax.random.split(ctx.next(), cfg.n_layers)
+            params["layers"] = jax.vmap(
+                lambda k: _init_dense_layer(k, cfg))(keys)
+    elif fam == "moe":
+        ep = moe_padded_experts(cfg)
+        if cfg.n_dense_layers:
+            dense_cfg_keys = jax.random.split(ctx.next(), cfg.n_dense_layers)
+            params["dense_layers"] = [
+                _init_dense_layer(k, cfg.replace(use_mla=False), False)
+                if not cfg.use_mla else _init_mla_dense_layer(k, cfg)
+                for k in dense_cfg_keys]
+        n_moe = cfg.n_layers - cfg.n_dense_layers
+        keys = jax.random.split(ctx.next(), n_moe)
+        params["layers"] = jax.vmap(
+            lambda k: _init_moe_layer(k, cfg, ep))(keys)
+    elif fam == "ssm":
+        keys = jax.random.split(ctx.next(), cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_ssm_layer(k, cfg))(keys)
+    elif fam == "hybrid":
+        keys = jax.random.split(ctx.next(), cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_ssm_layer(k, cfg))(keys)
+        params["shared_attn"] = _init_shared_attn(ctx.next(), cfg)
+    else:
+        raise ValueError(f"init_lm does not handle family {fam}")
+    return params
+
+
+def _init_mla_dense_layer(key, cfg) -> dict:
+    """deepseek leading dense layer: MLA attention + plain gated MLP."""
+    ctx = InitCtx(key, jnp.dtype(cfg.dtype))
+    return {
+        "ln1": ones_init(ctx, (cfg.d_model,)),
+        "attn": init_mla(ctx, cfg),
+        "ln2": ones_init(ctx, (cfg.d_model,)),
+        "mlp": init_gated_mlp(ctx, cfg.d_model, cfg.d_ff),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def _stack(make_one, n: int):
+    one = make_one()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n, *a.shape)).copy()
+                        if hasattr(a, "shape") else a, one)
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    fam = cfg.family
+    kvd = cfg.kv_cache_dtype
+    hd = cfg.resolved_head_dim
+    if fam in ("dense", "vlm"):
+        if cfg.local_global_alternating:
+            nb = cfg.n_layers // 2
+            local_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+            return {
+                "local": _stack(lambda: make_kv_cache(
+                    batch, local_len, cfg.n_kv_heads, hd, kvd), nb),
+                "global": _stack(lambda: make_kv_cache(
+                    batch, max_len, cfg.n_kv_heads, hd, kvd), nb),
+            }
+        return _stack(lambda: make_kv_cache(
+            batch, max_len, cfg.n_kv_heads, hd, kvd), cfg.n_layers)
+    if fam == "moe":
+        make_one = ((lambda: make_mla_cache(batch, max_len, cfg, kvd))
+                    if cfg.use_mla else
+                    (lambda: make_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                           hd, kvd)))
+        out = {"layers": _stack(make_one, cfg.n_layers - cfg.n_dense_layers)}
+        if cfg.n_dense_layers:
+            out["dense_layers"] = [make_one() for _ in range(cfg.n_dense_layers)]
+        return out
+    if fam == "ssm":
+        return _stack(lambda: make_ssm_cache(batch, cfg, cfg.dtype), cfg.n_layers)
+    if fam == "hybrid":
+        n_apps = cfg.n_layers // cfg.attn_every
+        return {
+            "mamba": _stack(lambda: make_ssm_cache(batch, cfg, cfg.dtype),
+                            cfg.n_layers),
+            "attn": _stack(lambda: make_kv_cache(batch, max_len,
+                                                 cfg.n_kv_heads, hd, kvd),
+                           n_apps),
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+def _dense_body(lp, x, cfg, positions, cache, window: int, q_chunk: int,
+                cons=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps, plus_one=cfg.embed_scale)
+    a, new_cache = attention_block(
+        lp["attn"], h, positions=positions, rope_theta=cfg.rope_theta,
+        window=window, attn_softcap=cfg.attn_softcap,
+        scale=cfg.resolved_head_dim ** -0.5, q_chunk=q_chunk, cache=cache,
+        cons=cons)
+    if cfg.post_block_norms:
+        a = rms_norm(a, lp["ln1_post"], cfg.norm_eps, plus_one=cfg.embed_scale)
+    x = x + a
+    if cons is not None:
+        x = cons.hidden(x)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps, plus_one=cfg.embed_scale)
+    m = gated_mlp(lp["mlp"], h, cfg.mlp_act, cons=cons)
+    if cfg.post_block_norms:
+        m = rms_norm(m, lp["ln2_post"], cfg.norm_eps, plus_one=cfg.embed_scale)
+    x = x + m
+    if cons is not None:
+        x = cons.hidden(x)
+    return x, new_cache
+
+
+def _moe_body(lp, x, cfg, positions, cache, q_chunk, use_oracle: bool,
+              ep=None, cons=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, new_cache = mla_block(lp["attn"], h, cfg=cfg, positions=positions,
+                                 cache=cache, q_chunk=q_chunk, cons=cons)
+    else:
+        a, new_cache = attention_block(
+            lp["attn"], h, positions=positions, rope_theta=cfg.rope_theta,
+            scale=cfg.resolved_head_dim ** -0.5, q_chunk=q_chunk, cache=cache,
+            cons=cons)
+    x = x + a
+    if cons is not None:
+        x = cons.hidden(x)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    n_valid = cfg.n_experts
+    if ep is not None and ep.get("mesh") is not None:
+        mo, aux = moe_ep_shardmap(lp["moe"], h, topk=cfg.n_experts_active,
+                                  mesh=ep["mesh"], dp_axes=ep["dp"],
+                                  tp_axis=ep.get("tp", "model"),
+                                  norm_topk=cfg.router_norm_topk,
+                                  act=cfg.mlp_act, n_valid=n_valid)
+    elif use_oracle:
+        mo, aux = moe_dense_oracle(lp["moe"], h, cfg.n_experts_active,
+                                   cfg.router_norm_topk, cfg.mlp_act, n_valid)
+    else:
+        mo, aux = moe_capacity(lp["moe"], h, cfg.n_experts_active,
+                               norm_topk=cfg.router_norm_topk,
+                               act=cfg.mlp_act, n_valid=n_valid)
+    if "shared" in lp["moe"]:
+        mo = mo + gated_mlp(lp["moe"]["shared"], h, cfg.mlp_act, cons=cons)
+    x = x + mo
+    if cons is not None:
+        x = cons.hidden(x)
+    return x, new_cache, aux
+
+
+def _ssm_body(lp, x, cfg, cache, use_kernel: bool, cons=None):
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    y, new_cache = mamba2_block(lp["mamba"], h, cfg=cfg, cache=cache,
+                                use_kernel=use_kernel, cons=cons)
+    x = x + y
+    if cons is not None:
+        x = cons.hidden(x)
+    return x, new_cache
+
+
+def _shared_attn_body(sp, x, x0, cfg, positions, cache, q_chunk, cons=None):
+    """zamba2 shared block on concat(x, original embedding)."""
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(cat, sp["ln1"], cfg.norm_eps)
+    a, new_cache = attention_block(
+        sp["attn"], h, positions=positions, rope_theta=cfg.rope_theta,
+        scale=cfg.resolved_head_dim ** -0.5, q_chunk=q_chunk, cache=cache,
+        cons=cons)
+    x = x + a
+    if cons is not None:
+        x = cons.hidden(x)
+    h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + gated_mlp(sp["mlp"], h2, cfg.mlp_act, cons=cons), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _embed(params, cfg, tokens=None, embeds=None):
+    if embeds is None:
+        embeds = params["embed"][tokens]
+    if cfg.embed_scale:
+        embeds = embeds * jnp.asarray(cfg.d_model ** 0.5, embeds.dtype)
+    return embeds
+
+
+def _logits(params, cfg, h):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps, plus_one=cfg.embed_scale)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w)
+    if cfg.logit_softcap > 0:
+        logits = softcap(logits, cfg.logit_softcap)
+    return logits
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def forward(params: dict, cfg, tokens=None, *, embeds=None,
+            cache: Optional[dict] = None, positions=None,
+            q_chunk: int = 0, remat: str = "none",
+            moe_oracle: Optional[bool] = None, dist=None,
+            use_ssd_kernel: bool = False) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (logits, new_cache|None, aux_loss).
+
+    cache=None: pure forward (training). cache given: prefill/decode; token
+    positions default to cache length offset.
+    """
+    from ..parallel.sharding import ActConstraint
+    cons = ActConstraint(dist) if dist else None
+    ep = (dist if (dist and dist.get("mesh") is not None and cfg.n_experts
+                   and dist.get("tp"))
+          else None)
+    x = _embed(params, cfg, tokens, embeds)
+    if cons is not None:
+        x = cons.hidden(x)
+    bsz, sq = x.shape[0], x.shape[1]
+    if positions is None:
+        if cache is None:
+            positions = jnp.arange(sq, dtype=jnp.int32)
+        else:
+            start = _cache_length(cfg, cache)
+            positions = start + jnp.arange(sq, dtype=jnp.int32)
+    if moe_oracle is None:
+        moe_oracle = cfg.n_experts > 0 and cfg.n_experts <= 16
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        if cfg.local_global_alternating:
+            def block(carry, xs):
+                xx, aux = carry
+                lp, ca = xs
+                xx, nc_local = _dense_body(lp["local"], xx, cfg, positions,
+                                           None if ca is None else ca["local"],
+                                           cfg.sliding_window, q_chunk, cons)
+                xx, nc_global = _dense_body(lp["global"], xx, cfg, positions,
+                                            None if ca is None else ca["global"],
+                                            0, q_chunk, cons)
+                nc = None if ca is None else {"local": nc_local, "global": nc_global}
+                return (xx, aux), nc
+            x, new_cache, aux_total = _scan_layers(
+                block, x, params["layers"], cache, remat)
+        else:
+            def block(carry, xs):
+                xx, aux = carry
+                lp, ca = xs
+                xx, nc = _dense_body(lp, xx, cfg, positions, ca, 0, q_chunk,
+                                     cons)
+                return (xx, aux), nc
+            x, new_cache, aux_total = _scan_layers(
+                block, x, params["layers"], cache, remat)
+
+    elif fam == "moe":
+        new_dense_caches = []
+        for i in range(cfg.n_dense_layers):
+            lp = params["dense_layers"][i]
+            ca = None if cache is None else cache["dense_layers"][i]
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, nc = mla_block(lp["attn"], h, cfg=cfg, positions=positions,
+                                  cache=ca, q_chunk=q_chunk, cons=cons)
+            else:
+                a, nc = attention_block(
+                    lp["attn"], h, positions=positions,
+                    rope_theta=cfg.rope_theta, q_chunk=q_chunk, cache=ca,
+                    cons=cons)
+            x = x + a
+            x = x + gated_mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                              cfg.mlp_act, cons=cons)
+            if cons is not None:
+                x = cons.hidden(x)
+            new_dense_caches.append(nc)
+
+        def block(carry, xs):
+            xx, aux = carry
+            lp, ca = xs
+            xx, nc, a = _moe_body(lp, xx, cfg, positions, ca, q_chunk,
+                                  moe_oracle, ep, cons)
+            return (xx, aux + a), nc
+        x, new_layer_cache, aux_total = _scan_layers(
+            block, x, params["layers"],
+            None if cache is None else cache["layers"], remat)
+        if cache is None:
+            new_cache = None
+        else:
+            new_cache = {"layers": new_layer_cache}
+            if cfg.n_dense_layers:
+                new_cache["dense_layers"] = new_dense_caches
+
+    elif fam == "ssm":
+        def block(carry, xs):
+            xx, aux = carry
+            lp, ca = xs
+            xx, nc = _ssm_body(lp, xx, cfg, ca, use_ssd_kernel, cons)
+            return (xx, aux), nc
+        x, new_cache, aux_total = _scan_layers(
+            block, x, params["layers"], cache, remat)
+
+    elif fam == "hybrid":
+        x0 = x
+        sp = params["shared_attn"]
+        n_apps = cfg.n_layers // cfg.attn_every
+
+        def block(carry, xs):
+            xx, attn_caches, aux = carry
+            lp, ca, li = xs
+            xx, nc = _ssm_body(lp, xx, cfg, ca, use_ssd_kernel, cons)
+            is_app = (li % cfg.attn_every) == cfg.attn_every - 1
+            app_idx = jnp.minimum(li // cfg.attn_every, n_apps - 1)
+
+            def with_attn(args):
+                xx, caches = args
+                if caches is None:
+                    y, _ = _shared_attn_body(sp, xx, x0, cfg, positions,
+                                             None, q_chunk, cons)
+                    return y, caches
+                ca_i = jax.tree.map(
+                    lambda l: jax.lax.dynamic_index_in_dim(l, app_idx, 0,
+                                                           keepdims=False),
+                    caches)
+                y, nc_i = _shared_attn_body(sp, xx, x0, cfg, positions,
+                                            ca_i, q_chunk, cons)
+                caches = jax.tree.map(
+                    lambda l, u: jax.lax.dynamic_update_index_in_dim(
+                        l, u.astype(l.dtype), app_idx, 0),
+                    caches, nc_i)
+                return y, caches
+
+            def without_attn(args):
+                return args
+
+            xx, attn_caches = jax.lax.cond(is_app, with_attn, without_attn,
+                                           (xx, attn_caches))
+            return (xx, attn_caches, aux), nc
+
+        li_axis = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        mamba_caches = None if cache is None else cache["mamba"]
+        attn_caches0 = None if cache is None else cache["attn"]
+        body = _maybe_remat(block, remat)
+        if cache is None:
+            (x, aux_total), _ = jax.lax.scan(
+                functools.partial(_hybrid_nocache_step, body),
+                (x, aux_total), (params["layers"], li_axis))
+            new_cache = None
+        else:
+            (x, new_attn_caches, aux_total), new_mamba = jax.lax.scan(
+                body, (x, attn_caches0, aux_total),
+                (params["layers"], mamba_caches, li_axis))
+            new_cache = {"mamba": new_mamba, "attn": new_attn_caches}
+    else:
+        raise ValueError(fam)
+
+    logits = _logits(params, cfg, x)
+    if cons is not None:
+        logits = cons.logits(logits)
+    return logits, new_cache, aux_total
+
+
+def _hybrid_nocache_step(body, carry, xs):
+    """Adapter: run the hybrid block without caches (training path)."""
+    x, aux = carry
+    lp, li = xs
+    (x, _, aux), _ = body((x, None, aux), (lp, None, li))
+    return (x, aux), None
+
+
+def _scan_layers(block, x, layers, cache, remat: str):
+    """scan over stacked layers.
+
+    Caches ride in the scan CARRY (indexed dynamic-update per layer) rather
+    than as xs/ys: XLA keeps while-loop carries in place, so the multi-GB KV
+    cache exists once instead of being double-buffered through the ys
+    stream (halves decode-cell peak memory)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    body = _maybe_remat(block, remat)
+    if cache is None:
+        def nocache(carry, lp):
+            (xx, aux), _ = body(carry, (lp, None))
+            return (xx, aux), None
+        (x, aux), _ = jax.lax.scan(nocache, (x, aux0), layers)
+        return x, None, aux
+
+    n_layers = jax.tree.leaves(layers)[0].shape[0]
+
+    def cached(carry, xs):
+        xx, aux, caches = carry
+        lp, li = xs
+        ca = jax.tree.map(
+            lambda l: jax.lax.dynamic_index_in_dim(l, li, 0, keepdims=False),
+            caches)
+        (xx, aux), nc = body((xx, aux), (lp, ca))
+        caches = jax.tree.map(
+            lambda l, u: jax.lax.dynamic_update_index_in_dim(
+                l, u.astype(l.dtype), li, 0),
+            caches, nc)
+        return (xx, aux, caches), None
+
+    li_axis = jnp.arange(n_layers, dtype=jnp.int32)
+    (x, aux, new_cache), _ = jax.lax.scan(cached, (x, aux0, cache),
+                                          (layers, li_axis))
+    return x, new_cache, aux
+
+
+def _cache_length(cfg, cache) -> jax.Array:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global_alternating:
+            return cache["global"]["length"][0]
+        return cache["length"][0]
+    if fam == "moe":
+        return cache["layers"]["length"][0]
+    if fam == "ssm":
+        return cache["length"][0]
+    if fam == "hybrid":
+        return cache["mamba"]["length"][0]
+    raise ValueError(fam)

@@ -1,0 +1,334 @@
+"""Sharding rules: param / activation / cache PartitionSpecs per arch.
+
+Strategy (DESIGN.md §5): FSDP over ("pod","data"), tensor/expert parallel
+over "model".
+
+  * 2D weights [d, f]      -> P(fsdp, "model") (transposed for *_down/out)
+  * attention [d, H, dh]   -> heads over "model" when n_heads % tp == 0,
+                              replicated otherwise (tiny archs)
+  * KV caches              -> kv-heads over "model" when divisible; else the
+                              *sequence* axis shards over "model" so big
+                              caches still fit (einsum attention contracts a
+                              sharded axis -> GSPMD inserts the psum; the
+                              shard_map flash-decode path in §Perf removes
+                              the resulting all-gathers)
+  * MoE experts [E, d, f]  -> E over "model" (expert parallelism)
+
+Rules are path-pattern based so they apply to stacked layer params (leading
+L axis gets None prepended automatically by rank matching).
+"""
+from __future__ import annotations
+
+import copy
+import math
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _join(*axes):
+    """Combine axis names into one PartitionSpec entry, skipping Nones."""
+    flat = []
+    for a in axes:
+        if a is None:
+            continue
+        if isinstance(a, (tuple, list)):
+            flat.extend(a)
+        else:
+            flat.append(a)
+    if not flat:
+        return None
+    return tuple(flat) if len(flat) > 1 else flat[0]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+class ShardingRules:
+    def __init__(self, cfg, mesh, *, fsdp_axes=None, tp_axis: str = "model",
+                 no_fsdp: bool = False, dp_only: bool = False,
+                 mlp_fsdp: bool = False):
+        """no_fsdp: params replicate across data (weight-stationary serving —
+        kills per-step FSDP all-gathers). dp_only: the ``model`` axis joins
+        data parallelism (tiny archs where TP-16 is pure collective waste)."""
+        self.cfg = cfg
+        self.mesh = mesh
+        axis_names = mesh.axis_names
+        if dp_only:
+            tp_axis = "__none__"
+            fsdp_axes = tuple(a for a in ("pod", "data", "model")
+                              if a in axis_names)
+        if fsdp_axes is None:
+            fsdp_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+        dp_axes = fsdp_axes
+        if no_fsdp:
+            fsdp_axes = ()
+        self.fsdp = (None if not fsdp_axes else
+                     (fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]))
+        self.tp = tp_axis if tp_axis in axis_names else None
+        tp_size = mesh.shape[tp_axis] if self.tp else 1
+        self.tp_size = tp_size
+        self.shard_heads = bool(self.tp) and cfg.n_heads > 0 and cfg.n_heads % tp_size == 0
+        self.shard_kv = bool(self.tp) and cfg.n_kv_heads > 0 and cfg.n_kv_heads % tp_size == 0
+        self.shard_ssm_heads = (bool(self.tp) and cfg.ssm_state > 0
+                                and cfg.ssm_nheads % tp_size == 0)
+        self.mlp_fsdp = mlp_fsdp
+        self.dp = (dp_axes if len(dp_axes) > 1 else dp_axes[0])  # batch axes
+        self._dp_size = math.prod(
+            mesh.shape[a] for a in ((self.dp,) if isinstance(self.dp, str)
+                                    else self.dp))
+
+    def for_batch(self, global_batch: int) -> "ShardingRules":
+        """Batch-indivisible cells (long_500k B=1): batch replicates and the
+        cache *sequence* axis takes over the data axes."""
+        if global_batch % self._dp_size == 0:
+            return self
+        r = copy.copy(self)
+        r.dp = None
+        return r
+
+    # -- parameters ---------------------------------------------------------
+    def param_spec(self, path: str, ndim: int) -> P:
+        spec = self._base_param_spec(path)
+        if spec is None:
+            return P()
+        # stacked layers prepend L axes; pad spec with None on the left
+        pad = ndim - len(spec)
+        if pad > 0:
+            spec = P(*([None] * pad), *spec)
+        return spec
+
+    def _base_param_spec(self, path: str) -> Optional[P]:
+        c = self.cfg
+        f, t = self.fsdp, self.tp
+        heads = t if self.shard_heads else None
+        kv = t if self.shard_kv else None
+        ssm_h = t if self.shard_ssm_heads else None
+
+        table = [
+            # vocab-parallel embedding / head: d replicated so the logits
+            # contraction needs no resharding (embedding tables are small
+            # relative to HBM; FSDP-ing their d axis makes GSPMD unshard
+            # the activation batch instead of gathering weights)
+            (r"embed$", P(t, None)),
+            (r"lm_head$", P(None, t)),
+            # attention
+            (r"attn/wq$", P(f, heads, None)),
+            (r"attn/wk$", P(f, kv, None)),
+            (r"attn/wv$", P(f, kv, None)),
+            (r"attn/wo$", P(heads, None, f)),
+            (r"attn/bq$", P(heads, None)),
+            (r"attn/bk$", P(kv, None)),
+            (r"attn/bv$", P(kv, None)),
+            (r"attn/bo$", P(None,)),
+            # MLA
+            (r"attn/q_down$", P(f, None)),
+            (r"attn/q_up$", P(None, heads, None)),
+            (r"attn/kv_down$", P(f, None)),
+            (r"attn/k_up$", P(None, heads, None)),
+            (r"attn/v_up$", P(None, heads, None)),
+            (r"attn/(q_norm|kv_norm)$", P(None,)),
+            # mlp (gated + plain); mlp_fsdp = weight-gather MLP: weights
+            # shard over BOTH axes on d, activations stay full-d batch-
+            # sharded -> no TP all-reduce after the MLP (weight all-gather
+            # traffic replaces the larger activation all-reduce)
+            (r"mlp/w_gate$", P(_join(f, t), None) if self.mlp_fsdp else P(f, t)),
+            (r"mlp/w_up$", P(_join(f, t), None) if self.mlp_fsdp else P(f, t)),
+            (r"mlp/w_down$", P(None, _join(f, t)) if self.mlp_fsdp else P(t, f)),
+            (r"mlp/w_in$", P(f, t)),
+            (r"mlp/w_out$", P(t, f)),
+            (r"mlp/b_in$", P(t,)),
+            (r"mlp/b_out$", P(None,)),
+            # MoE
+            (r"moe/router$", P(f, None)),
+            (r"moe/experts/w_gate$", P(t, f, None)),
+            (r"moe/experts/w_up$", P(t, f, None)),
+            (r"moe/experts/w_down$", P(t, None, f)),
+            (r"moe/shared/w_gate$", P(f, t)),
+            (r"moe/shared/w_up$", P(f, t)),
+            (r"moe/shared/w_down$", P(t, f)),
+            # mamba2
+            (r"mamba/w_z$", P(f, ssm_h)),
+            (r"mamba/w_x$", P(f, ssm_h)),
+            (r"mamba/w_bc$", P(f, None)),
+            (r"mamba/w_dt$", P(f, ssm_h)),
+            (r"mamba/(dt_bias|A_log|D)$", P(ssm_h,)),
+            (r"mamba/conv_x$", P(None, ssm_h)),
+            (r"mamba/conv_x_b$", P(ssm_h,)),
+            (r"mamba/conv_bc$", P(None, None)),
+            (r"mamba/conv_bc_b$", P(None,)),
+            (r"mamba/norm$", P(ssm_h,)),
+            (r"mamba/w_out$", P(ssm_h, f)),
+            # zamba2 shared block extras
+            (r"shared_attn/wo_down$", P(f, None)),
+            # norms and leftovers
+            (r"(ln\w*|norm|final_norm|enc_norm|dec_norm)(/[wb])?$", P(None,)),
+        ]
+        for pat, spec in table:
+            if re.search(pat, path):
+                return spec
+        return P()
+
+    def _sanitize(self, spec: P, shape) -> P:
+        """Drop axes whose mesh-size doesn't divide the dim (e.g. vocab
+        50280 % 16 != 0 -> embed vocab axis replicates instead)."""
+        out = []
+        for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = math.prod(self.mesh.shape[a] for a in axes)
+            out.append(entry if dim % size == 0 else None)
+        return P(*out)
+
+    def params_tree(self, params):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, leaf: jax.sharding.NamedSharding(
+                self.mesh, self._sanitize(
+                    self.param_spec(_path_str(p), leaf.ndim), leaf.shape)),
+            params)
+
+    # -- activations / inputs ----------------------------------------------
+    def tokens_spec(self) -> P:
+        return P(self.dp, None)
+
+    def embeds_spec(self) -> P:
+        return P(self.dp, None, None)
+
+    def logits_spec(self) -> P:
+        return P(self.dp, None, self.tp)
+
+    # -- caches --------------------------------------------------------------
+    def cache_spec(self, path: str, ndim: int) -> P:
+        """Stacked caches: leading L axis, then [B, S, KV, dh] etc."""
+        t, dp = self.tp, self.dp
+        # when batch is replicated (B=1 cells) the sequence axis absorbs the
+        # data axes so the cache still shards across the whole pod
+        seq_extra = self.fsdp if dp is None else None
+        if re.search(r"(^|/)(k|v)$", path):
+            if self.shard_kv:
+                spec = P(dp, seq_extra, t, None)
+            else:
+                spec = P(dp, _join(seq_extra, t), None, None)  # seq-sharded KV
+            return self._pad(spec, ndim)
+        if re.search(r"(k_scale|v_scale)$", path):
+            spec = (P(dp, seq_extra, t) if self.shard_kv
+                    else P(dp, _join(seq_extra, t), None))
+            return self._pad(spec, ndim)
+        if re.search(r"latent$", path):
+            return self._pad(P(dp, _join(seq_extra, t), None), ndim)
+        if re.search(r"k_rope$", path):
+            return self._pad(P(dp, _join(seq_extra, t), None), ndim)
+        if re.search(r"state$", path):                # ssm state [B,H,P,N]
+            h = t if self.shard_ssm_heads else None
+            return self._pad(P(dp, h, None, None), ndim)
+        if re.search(r"conv_(x|bc)$", path):
+            h = t if self.shard_ssm_heads else None
+            if path.endswith("conv_bc"):
+                h = None
+            return self._pad(P(dp, None, h), ndim)
+        return self._pad(P(), ndim)                    # length, slots_pos
+
+    def _pad(self, spec: P, ndim: int) -> P:
+        pad = ndim - len(spec)
+        if pad > 0:
+            return P(*([None] * pad), *spec)
+        return spec
+
+    def cache_tree(self, cache):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, leaf: jax.sharding.NamedSharding(
+                self.mesh, self._sanitize(
+                    self.cache_spec(_path_str(p), leaf.ndim), leaf.shape)),
+            cache)
+
+    def dist_ctx(self) -> dict:
+        """Context dict the model threads through its forward passes:
+        activation sharding constraints + shard_map MoE (DESIGN.md §5)."""
+        return {
+            "mesh": self.mesh, "dp": self.dp, "tp": self.tp,
+            "tp_size": self.tp_size,
+            "shard_heads": self.shard_heads, "shard_kv": self.shard_kv,
+            "shard_ssm": self.shard_ssm_heads,
+            "mlp_fsdp": self.mlp_fsdp,
+            "vocab_tp": self.cfg.vocab_size % self.tp_size == 0,
+            "dff_tp": (self.cfg.d_ff % self.tp_size == 0
+                       if self.cfg.d_ff else False),
+        }
+
+
+class ActConstraint:
+    """Activation sharding constraints at block boundaries — pins the
+    layouts GSPMD would otherwise trade away (batch stays on dp, heads/ffn
+    on tp), forcing weight all-gather FSDP instead of batch resharding."""
+
+    def __init__(self, dist: Optional[dict]):
+        self.d = dist
+
+    def _c(self, x, *spec):
+        if not self.d or self.d.get("mesh") is None:
+            return x
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.d["mesh"], P(*spec)))
+
+    def hidden(self, x):            # [B, S, d]
+        if not self.d:
+            return x
+        # sequence parallelism (train cells): the residual stream shards its
+        # seq axis over tp between blocks, so per-layer backward arenas
+        # shard 16-way; GSPMD inserts the all-gather before attention and
+        # the reduce-scatter after (Megatron SP pattern)
+        if self.d.get("seq_shard") and x.ndim == 3 and                 x.shape[1] % self.d.get("tp_size", 1) == 0:
+            return self._c(x, self.d["dp"], self.d["tp"], None)
+        return self._c(x, self.d["dp"], None, None)
+
+    def heads(self, x):             # [B, S, H, dh]
+        if not self.d:
+            return x
+        tp = self.d["tp"] if self.d.get("shard_heads") else None
+        return self._c(x, self.d["dp"], None, tp, None)
+
+    def kv_heads(self, x):          # [B, S, KV, dh]
+        if not self.d:
+            return x
+        tp = self.d["tp"] if self.d.get("shard_kv") else None
+        return self._c(x, self.d["dp"], None, tp, None)
+
+    def ffn(self, x):               # [B, S, d_ff]
+        if not self.d:
+            return x
+        if self.d.get("mlp_fsdp"):
+            return self._c(x, self.d["dp"], None, None)
+        tp = self.d["tp"] if self.d.get("dff_tp") else None
+        return self._c(x, self.d["dp"], None, tp)
+
+    def logits(self, x):            # [B, S, V]
+        if not self.d:
+            return x
+        tp = self.d["tp"] if self.d.get("vocab_tp") else None
+        return self._c(x, self.d["dp"], None, tp)
+
+    def ssm_heads(self, x):         # [B, L, H, P]
+        if not self.d:
+            return x
+        tp = self.d["tp"] if self.d.get("shard_ssm") else None
+        return self._c(x, self.d["dp"], None, tp, None)
+
+    def ssm_inner(self, x):         # [B, L, d_inner]
+        if not self.d:
+            return x
+        tp = self.d["tp"] if self.d.get("shard_ssm") else None
+        return self._c(x, self.d["dp"], None, tp)

@@ -1,0 +1,100 @@
+"""Processor-sharing contention model (roofline-flavoured, DESIGN.md §2).
+
+Each stage has a profile (t_alone, n_sat, mem_frac): ``n_sat`` is the
+number of device units the stage's kernels can actually occupy (narrow
+DNNs like InceptionV3 saturate few; wide ones like UNet use all), and
+``mem_frac`` its bandwidth-bound fraction. Rates for the running set:
+
+  1. context shares: u_i = cap_k / n_active_k  (cap_k from Eq. 9)
+  2. device cap:     sum u_i <= N  (proportional scale-down -> this is
+                     where oversubscription interference lives)
+  3. width:          rc_i = min(u_i, n_sat_i) / n_sat_i
+  4. bubbles:        multi-tenancy fills single-stream issue gaps:
+                     speed_i = min(1, rc_i * (1 - beta/m) / (1 - beta))
+  5. bandwidth:      phi = sum mem_frac_j * speed_j; if phi > 1,
+                     speed_i /= (1 - mf_i) + mf_i * phi   (Amdahl-style)
+
+Calibration inputs are the paper's own Table I only (min JPS -> t_alone,
+batching gain -> n_sat; see serving/profiles.py). The model reproduces the
+phenomena the paper measures: OS=1 strands idle capacity, full sharing
+maximizes throughput at higher variance, wide DNNs gain least from
+batching/colocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from ..core.task import StageProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    n_units: float = 68.0        # SMs (RTX 2080 Ti) | chips (pod slice)
+    bubble: float = 0.18         # single-stream issue-gap waste
+    l2_pressure: float = 0.09    # cache/DRAM thrash growth per co-tenant
+    name: str = "rtx2080ti-like"
+
+
+class ContentionModel:
+    def __init__(self, device: DeviceModel):
+        self.device = device
+
+    def rates(self, running: Sequence[Tuple[object, StageProfile, float, int]]
+              ) -> List[float]:
+        """running: list of (key, profile, ctx_cap, n_active_in_ctx).
+
+        Returns speed fractions (1.0 = single-stream-alone speed)."""
+        if not running:
+            return []
+        dev = self.device
+        m = len(running)
+        u = [cap / max(n_act, 1) for _, _, cap, n_act in running]
+        total = sum(u)
+        if total > dev.n_units:
+            scale = dev.n_units / total
+            u = [x * scale for x in u]
+        beta = dev.bubble
+        bubble_gain = (1.0 - beta / m) / (1.0 - beta)
+        speeds = []
+        for (_, prof, _, _), ui in zip(running, u):
+            rc = min(ui, prof.n_sat) / prof.n_sat
+            speeds.append(min(1.0, rc * bubble_gain))
+        # unit conservation: total busy units can't exceed the device plus
+        # the bubble-recovery headroom multi-tenancy unlocks (a stream can
+        # fill a neighbour's issue gaps but can't mint new SMs)
+        used = sum(s * p.n_sat for (_, p, _, _), s in zip(running, speeds))
+        budget = dev.n_units * (1.0 + beta * (1.0 - 1.0 / m))
+        if used > budget:
+            shrink = budget / used
+            speeds = [s * shrink for s in speeds]
+        # bandwidth demand grows superlinearly with co-tenant count: more
+        # resident working sets thrash L2 so each stream's effective DRAM
+        # demand rises (the knee-point mechanism SGPRS reports)
+        thrash = 1.0 + dev.l2_pressure * max(m - 1, 0)
+        phi = sum(p.mem_frac * s for (_, p, _, _), s in zip(running, speeds))
+        phi *= thrash
+        if phi > 1.0:
+            speeds = [s / ((1.0 - p.mem_frac) + p.mem_frac * phi)
+                      for (_, p, _, _), s in zip(running, speeds)]
+        return speeds
+
+    def solo_speed(self, prof: StageProfile, units: float) -> float:
+        """Speed of a stage running alone on ``units`` units."""
+        rc = min(units, prof.n_sat) / prof.n_sat
+        return min(1.0, rc)   # single stream keeps its bubbles (gain = 1)
+
+    def full_load_time(self, prof: StageProfile, cap: float,
+                       n_streams_busy: int, m_total: int) -> float:
+        """AFET estimate (paper §IV-A1): execution time with every stream
+        busy — pessimistic offline seed for MRET."""
+        u = cap / max(n_streams_busy, 1)
+        total_u_scale = min(1.0, self.device.n_units / max(u * m_total, 1e-9))
+        u *= total_u_scale
+        rc = min(u, prof.n_sat) / prof.n_sat
+        beta = self.device.bubble
+        speed = min(1.0, rc * (1.0 - beta / max(m_total, 1)) / (1.0 - beta))
+        # assume bandwidth at the congestion knee under full load
+        speed /= (1.0 - prof.mem_frac) + prof.mem_frac * max(1.0, m_total * prof.mem_frac * speed)
+        speed = max(speed, 1e-3)
+        return (prof.t_alone_ms + prof.overhead_ms) / speed

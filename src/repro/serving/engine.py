@@ -1,0 +1,134 @@
+"""Real-execution serving engine: DARIS over jitted stage functions.
+
+The same ``DarisScheduler`` that drives the simulator here dispatches real
+XLA computations on wall-clock time: worker threads own lanes (XLA releases
+the GIL, so lanes genuinely overlap), stage completions feed MRET with
+*measured* times, and the admission/migration/priority machinery runs
+unmodified. This is the laptop-scale validation path (DESIGN.md §2); on a
+pod each lane maps to a sub-mesh program queue instead of a thread.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..core.metrics import RunMetrics, empty_metrics
+from ..core.scheduler import DarisScheduler
+from ..core.task import HP, LP, StageProfile, TaskSpec
+from ..models.cnn import BUILDERS, StagedCNN
+
+
+def staged_cnn_taskspec(model: StagedCNN, *, priority: int, jps: float,
+                        input_hw: int = 64, batch: int = 1,
+                        tag: str = "", calibrate: bool = True,
+                        n_sat: float = 40.0, mem_frac: float = 0.4) -> TaskSpec:
+    """Wrap a StagedCNN into a TaskSpec whose stage payloads are jitted
+    callables; t_alone is measured on this machine (AFET-style)."""
+    x0 = np.zeros((batch, input_hw, input_hw, 3), np.float32)
+    jitted = [jax.jit(st) for st in model.stages]
+    payloads: List[Callable] = []
+    times = []
+    state = jax.device_put(x0)
+    for st in jitted:
+        fn = (lambda s, st=st: st(model.params, s))
+        if calibrate:
+            out = fn(state)
+            jax.block_until_ready(out)           # compile
+            t0 = time.perf_counter()
+            out = fn(state)
+            jax.block_until_ready(out)
+            times.append((time.perf_counter() - t0) * 1000.0)
+            state = out
+        payloads.append(fn)
+    if not calibrate:
+        times = [1.0] * len(payloads)
+    stages = [StageProfile(name=f"{model.name}/s{j}", t_alone_ms=t,
+                           n_sat=n_sat, mem_frac=mem_frac, overhead_ms=0.05,
+                           payload=payloads[j])
+              for j, t in enumerate(times)]
+    return TaskSpec(name=f"{model.name}{tag}", period_ms=1000.0 / jps,
+                    priority=priority, stages=stages, batch=batch)
+
+
+class RealtimeEngine:
+    """Wall-clock event loop + one worker thread per lane."""
+
+    def __init__(self, sched: DarisScheduler, horizon_ms: float,
+                 input_hw: int = 64, batch: int = 1):
+        self.sched = sched
+        self.horizon = horizon_ms / 1000.0
+        self.input_hw = input_hw
+        self.batch = batch
+        self.metrics = empty_metrics(horizon_ms)
+        self._lock = threading.Lock()
+        self._done_q: "queue.Queue" = queue.Queue()
+        # per-job intermediate state (activations between stages)
+        self._job_state: Dict[int, object] = {}
+
+    def _now_ms(self) -> float:
+        return (time.perf_counter() - self._t0) * 1000.0
+
+    def _worker(self, lane, inst):
+        prof = inst.profile
+        x = self._job_state.get(inst.job.job_id)
+        if x is None:
+            x = jax.device_put(np.zeros(
+                (self.batch, self.input_hw, self.input_hw, 3), np.float32))
+        t0 = time.perf_counter()
+        out = prof.payload(x)
+        jax.block_until_ready(out)
+        et_ms = (time.perf_counter() - t0) * 1000.0
+        self._job_state[inst.job.job_id] = out
+        self._done_q.put((lane, inst, et_ms))
+
+    def _dispatch_free_lanes(self):
+        with self._lock:
+            for lane in self.sched.free_lanes():
+                inst = self.sched.next_for_lane(lane[0], self._now_ms())
+                if inst is None:
+                    continue
+                inst.start_ms = self._now_ms()
+                self.sched.lanes[lane] = inst
+                threading.Thread(target=self._worker, args=(lane, inst),
+                                 daemon=True).start()
+
+    def run(self) -> RunMetrics:
+        self._t0 = time.perf_counter()
+        next_release = {t.index: 0.0 for t in self.sched.tasks}
+        while True:
+            now = self._now_ms()
+            if now >= self.horizon * 1000.0:
+                break
+            # periodic releases
+            with self._lock:
+                for t in self.sched.tasks:
+                    if now >= next_release[t.index]:
+                        self.sched.on_release(t, now)
+                        next_release[t.index] += t.spec.period_ms
+            self._dispatch_free_lanes()
+            # harvest completions
+            try:
+                lane, inst, et = self._done_q.get(timeout=0.002)
+            except queue.Empty:
+                continue
+            with self._lock:
+                self.sched.lanes[lane] = None
+                done = self.sched.on_stage_finish(inst, self._now_ms(), et)
+            if done is not None:
+                self._job_state.pop(done.job_id, None)
+                p = done.task.priority
+                self.metrics.completed[p] += 1
+                resp = self._now_ms() - done.release_ms
+                self.metrics.response_ms[p].append(resp)
+                if self._now_ms() > done.abs_deadline_ms:
+                    self.metrics.missed[p] += 1
+            self._dispatch_free_lanes()
+        self.metrics.migrations = self.sched.migrations
+        for r in self.sched.rejections:
+            self.metrics.rejected[r.priority] += 1
+        return self.metrics

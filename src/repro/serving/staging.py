@@ -1,0 +1,105 @@
+"""Stage partitioning for LM architectures (paper §III-B1 on transformers).
+
+Splits a scan-stacked LM into ``n_stages`` contiguous layer groups; each
+stage is a pure function (hidden, cache_slice) -> (hidden, cache_slice), so
+DARIS can preempt/migrate between groups. Stage 0 owns the embedding;
+the last stage owns final norm + logits. Zero-delay migration = device_put
+of the inter-stage hidden (and the remaining stages' cache slices) onto the
+target partition's sharding (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+from ..models.api import Model
+
+
+def stage_boundaries(n_layers: int, n_stages: int) -> List[tuple]:
+    per = n_layers // n_stages
+    rem = n_layers % n_stages
+    out = []
+    lo = 0
+    for i in range(n_stages):
+        hi = lo + per + (1 if i < rem else 0)
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+def _slice_stack(tree, lo: int, hi: int):
+    return jax.tree.map(lambda l: l[lo:hi], tree)
+
+
+def make_lm_stage_fns(model: Model, n_stages: int = 4) -> List[Callable]:
+    """Stage callables for dense/vlm/moe/ssm LM families.
+
+    stage_fn(params, hidden_or_tokens, cache_slice, positions)
+      -> (hidden_or_logits, new_cache_slice)
+    """
+    cfg = model.cfg
+    if cfg.family == "hybrid":
+        raise NotImplementedError(
+            "hybrid staging follows group boundaries; use n_stages == "
+            "n_layers // attn_every")
+    bounds = stage_boundaries(
+        cfg.n_layers // (2 if cfg.local_global_alternating else 1), n_stages)
+
+    def make(i):
+        lo, hi = bounds[i]
+
+        def stage(params, x, cache_slice, positions):
+            if i == 0 and x.dtype in (jnp.int32, jnp.int64):
+                x = transformer._embed(params, cfg, x)
+            layers = _slice_stack(params["layers"], lo, hi)
+
+            def block(carry, xs):
+                xx, aux = carry
+                lp, ca = xs
+                if cfg.family == "moe":
+                    xx, nc, a = transformer._moe_body(
+                        lp, xx, cfg, positions, ca, 0, True, None)
+                    return (xx, aux + a), nc
+                if cfg.family == "ssm":
+                    xx, nc = transformer._ssm_body(lp, xx, cfg, ca, False)
+                    return (xx, aux), nc
+                if cfg.local_global_alternating:
+                    xx, ncl = transformer._dense_body(
+                        lp["local"], xx, cfg, positions,
+                        None if ca is None else ca["local"],
+                        cfg.sliding_window, 0)
+                    xx, ncg = transformer._dense_body(
+                        lp["global"], xx, cfg, positions,
+                        None if ca is None else ca["global"], 0, 0)
+                    nc = None if ca is None else {"local": ncl, "global": ncg}
+                    return (xx, aux), nc
+                xx, nc = transformer._dense_body(lp, xx, cfg, positions,
+                                                 ca, 0, 0)
+                return (xx, aux), nc
+
+            x, new_cache, _ = transformer._scan_layers(
+                block, x, layers, cache_slice, "none")
+            if i == n_stages - 1:
+                x = transformer._logits(params, cfg, x)
+            return x, new_cache
+
+        return stage
+
+    return [make(i) for i in range(n_stages)]
+
+
+def slice_cache(cfg, cache, stage_idx: int, n_stages: int):
+    """Cache slice owned by one stage (moe handled at its 'layers' level)."""
+    n_scan = cfg.n_layers // (2 if cfg.local_global_alternating else 1)
+    lo, hi = stage_boundaries(n_scan, n_stages)[stage_idx]
+    tree = cache["layers"] if (cfg.family == "moe" and "layers" in cache) else cache
+    return _slice_stack(tree, lo, hi)
+
+
+def migrate(tree, target_shardings):
+    """Zero-delay migration: reshard the inter-stage state onto the target
+    partition at a stage boundary — no running program is interrupted."""
+    return jax.device_put(tree, target_shardings)

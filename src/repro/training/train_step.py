@@ -1,0 +1,55 @@
+"""Train-step builder: loss + grad + AdamW, with remat / microbatching.
+
+``make_train_step`` returns a pure (params, opt_state, batch) ->
+(params, opt_state, metrics) function suitable for pjit. Gradient
+accumulation over ``accum`` microbatches uses lax.scan so the HLO stays
+one-microbatch sized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update
+
+
+def make_loss_fn(model, *, q_chunk: int = 0, remat: str = "dots") -> Callable:
+    def loss_fn(params, batch):
+        return model.loss(params, batch, q_chunk=q_chunk, remat=remat)
+    return loss_fn
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *, q_chunk: int = 0,
+                    remat: str = "dots", accum: int = 1,
+                    accum_dtype: str = "float32") -> Callable:
+    loss_fn = make_loss_fn(model, q_chunk=q_chunk, remat=remat)
+
+    def train_step(params, opt_state, batch) -> tuple:
+        if accum <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc_loss, acc_grads = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (acc_loss + l,
+                        jax.tree.map(lambda a, x: a + x.astype(a.dtype),
+                                     acc_grads, g)), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(accum_dtype)), params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zeros), micro_batches)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        new_params, new_opt, metrics = adamw_update(params, grads, opt_state,
+                                                    opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step

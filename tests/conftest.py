@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the single real CPU device; only the dry-run subprocess test
+# forces a bigger host-device count (in its own process)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

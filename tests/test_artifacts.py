@@ -1,0 +1,55 @@
+"""Integrity of the shipped dry-run/roofline artifacts: every assigned
+(arch x shape x mesh) cell is present — compiled OK or explicitly skipped
+by the long_500k full-attention rule — and roofline rows are well-formed."""
+import json
+import pathlib
+
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cells
+
+ART = pathlib.Path(__file__).parent.parent / "artifacts" / "dryrun"
+
+pytestmark = pytest.mark.skipif(not ART.exists(),
+                                reason="dry-run artifacts not generated")
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_all_cells_present_and_ok(mesh):
+    n_ok = n_skip = 0
+    for arch in ARCH_IDS:
+        for cell, runnable, reason in cells(arch):
+            p = ART / f"{arch}__{cell.name}__{mesh}.json"
+            assert p.exists(), f"missing artifact {p.name}"
+            art = json.loads(p.read_text())
+            if runnable:
+                assert art["status"] == "ok", (p.name, art.get("error"))
+                assert art["cost_per_device"]["flops"] > 0
+                assert art["hlo_cost_per_device"]["flops"] > 0
+                assert art["peak_bytes_per_device"] > 0
+                n_ok += 1
+            else:
+                assert art["status"] == "skipped"
+                assert "full-attention" in art["reason"]
+                n_skip += 1
+    assert n_ok == 33 and n_skip == 7        # 40 assigned cells
+
+
+def test_multi_pod_mesh_shape():
+    art = json.loads((ART / "smollm-135m__train_4k__multi.json").read_text())
+    assert art["mesh_shape"] == {"pod": 2, "data": 16, "model": 16}
+    assert art["n_chips"] == 512
+    single = json.loads((ART / "smollm-135m__train_4k__single.json").read_text())
+    assert single["n_chips"] == 256
+
+
+def test_roofline_rows_cover_runnable_cells():
+    rl = pathlib.Path(__file__).parent.parent / "artifacts" / "roofline.json"
+    if not rl.exists():
+        pytest.skip("roofline.json not generated")
+    rows = json.loads(rl.read_text())
+    assert len(rows) == 33
+    for r in rows:
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0.0 <= r["roofline_fraction"] <= 1.0 + 1e-9
+        assert r["t_compute_s"] >= 0 and r["t_collective_s"] >= 0

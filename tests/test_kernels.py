@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp ref."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 3e-2}
+
+
+@pytest.mark.parametrize("m,d", [(64, 128), (100, 96), (256, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(m, d, dtype):
+    rng = np.random.default_rng(0)
+    x = _rand(rng, (m, d), dtype)
+    w = _rand(rng, (d,), jnp.float32)
+    a = ops.rmsnorm(x, w, mode="kernel")
+    b = ops.rmsnorm(x, w, mode="ref")
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+def test_rmsnorm_residual_fused():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, (96, 256), jnp.float32)
+    r = _rand(rng, (96, 256), jnp.float32)
+    w = _rand(rng, (256,), jnp.float32)
+    (ya, ra) = ops.rmsnorm_residual(x, r, w, mode="kernel")
+    (yb, rb) = ops.rmsnorm_residual(x, r, w, mode="ref")
+    np.testing.assert_allclose(ya, yb, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(ra, rb, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("h,kv,s,dh", [(8, 8, 256, 64), (8, 2, 256, 64),
+                                       (4, 1, 128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(h, kv, s, dh, dtype):
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (2, h, s, dh), dtype)
+    k = _rand(rng, (2, kv, s, dh), dtype)
+    v = _rand(rng, (2, kv, s, dh), dtype)
+    a = ops.flash_attention(q, k, v, mode="kernel", block_q=64, block_k=64)
+    b = ops.flash_attention(q, k, v, mode="ref")
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (64, 0.0), (0, 30.0),
+                                            (32, 50.0)])
+def test_flash_attention_masks(window, softcap):
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 4, 128, 64), jnp.float32)
+    k = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    v = _rand(rng, (1, 2, 128, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, mode="kernel", window=window,
+                            softcap=softcap, block_q=64, block_k=64)
+    b = ops.flash_attention(q, k, v, mode="ref", window=window,
+                            softcap=softcap)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("h,kv,s", [(8, 8, 512), (8, 2, 512), (4, 4, 256)])
+@pytest.mark.parametrize("fill", [1.0, 0.6])
+def test_decode_attention_sweep(h, kv, s, fill):
+    rng = np.random.default_rng(4)
+    q = _rand(rng, (2, h, 64), jnp.float32)
+    k = _rand(rng, (2, kv, s, 64), jnp.float32)
+    v = _rand(rng, (2, kv, s, 64), jnp.float32)
+    n_valid = int(s * fill)
+    kv_pos = jnp.where(jnp.arange(s) < n_valid, jnp.arange(s), -1)
+    q_pos = jnp.asarray([n_valid - 1, n_valid // 2], jnp.int32)
+    a = ops.decode_attention(q, k, v, kv_pos, q_pos, mode="kernel",
+                             block_k=128)
+    b = ops.decode_attention(q, k, v, kv_pos, q_pos, mode="ref")
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("l,h,p,n,chunk", [(256, 4, 32, 16, 64),
+                                           (512, 2, 64, 32, 128),
+                                           (128, 8, 16, 16, 32)])
+def test_ssd_sweep(l, h, p, n, chunk):
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (2, l, h, p), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (2, l, h)), jnp.float32)
+    al = jnp.asarray(rng.uniform(-0.5, 1.5, (h,)), jnp.float32)
+    b = _rand(rng, (2, l, 1, n), jnp.float32)
+    c = _rand(rng, (2, l, 1, n), jnp.float32)
+    ya, sa = ops.ssd(x, dt, al, b, c, chunk=chunk, mode="kernel")
+    yb, sb = ops.ssd(x, dt, al, b, c, chunk=chunk, mode="ref")
+    np.testing.assert_allclose(ya, yb, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(sa, sb, rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked SSD == token-by-token recurrence (independent oracle)."""
+    from repro.models.mamba2 import ssd_decode_step
+    rng = np.random.default_rng(6)
+    l, h, p, n = 64, 2, 8, 8
+    x = _rand(rng, (1, l, h, p), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (1, l, h)), jnp.float32)
+    al = jnp.asarray(rng.uniform(-0.5, 1.0, (h,)), jnp.float32)
+    b = _rand(rng, (1, l, 1, n), jnp.float32)
+    c = _rand(rng, (1, l, 1, n), jnp.float32)
+    y_chunk, s_chunk = ops.ssd(x, dt, al, b, c, chunk=16, mode="kernel")
+    state = jnp.zeros((1, h, p, n), jnp.float32)
+    ys = []
+    for t in range(l):
+        y_t, state = ssd_decode_step(state, x[:, t], dt[:, t], al,
+                                     b[:, t], c[:, t])
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_chunk, y_seq, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(s_chunk, state, rtol=2e-3, atol=2e-3)

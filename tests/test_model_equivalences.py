@@ -1,0 +1,139 @@
+"""Deep correctness equivalences across independent implementation paths."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models import build_model
+
+
+def test_mla_absorbed_decode_matches_naive_block():
+    """DeepSeek MLA: the absorbed decode path == the naive (expanded K/V)
+    path, bit-tight at the block level (the full-model comparison is below
+    with a loose tolerance — MoE routing amplifies f32 noise at ties)."""
+    from repro.models.layers import InitCtx
+    from repro.models.mla import init_mla, make_mla_cache, mla_block
+    cfg = get_reduced("deepseek-v2-236b")
+    ctx = InitCtx(jax.random.PRNGKey(0), jnp.float32)
+    p = init_mla(ctx, cfg)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s + 1, cfg.d_model),
+                          jnp.float32)
+    y_full, _ = mla_block(p, x, cfg=cfg, positions=jnp.arange(s + 1))
+    cache = make_mla_cache(b, s + 1, cfg, "float32")
+    y_pre, cache = mla_block(p, x[:, :s], cfg=cfg,
+                             positions=jnp.arange(s), cache=cache)
+    y_dec, _ = mla_block(p, x[:, s:s + 1], cfg=cfg,
+                         positions=jnp.asarray([s]), cache=cache)
+    np.testing.assert_allclose(np.asarray(y_full[:, :s]), np.asarray(y_pre),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_full[:, s]),
+                               np.asarray(y_dec[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-2.7b",
+                                  "deepseek-v2-236b"])
+def test_full_model_decode_consistency(arch):
+    """prefill(s) + decode(1) tracks the full forward at position s
+    (loose tolerance: einsum-order noise, MoE routing near ties)."""
+    cfg = get_reduced(arch)
+    m = build_model(cfg)
+    params = m.init_params(0)
+    rng = np.random.default_rng(0)
+    b, s = 2, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s + 1)))
+    logits_full, _, _ = m._lm_forward(params, {"tokens": tokens})
+    cache = m.init_cache(b, s + 1)
+    _, cache = m.prefill(params, {"tokens": tokens[:, :s], "cache": cache})
+    logits_dec, _ = m.decode_step(params, {"tokens": tokens[:, s:s + 1],
+                                           "cache": cache})
+    a = np.asarray(logits_full[:, -1], np.float32)
+    d = np.asarray(logits_dec[:, 0], np.float32)
+    assert np.max(np.abs(a - d)) < 5e-2
+    assert (np.argmax(a, -1) == np.argmax(d, -1)).all()
+
+
+def test_chunked_decode_attention_matches_unchunked():
+    """attend_cache_chunked (flash-decode) == full-cache einsum path."""
+    from repro.models.attention import (attend_cache_chunked,
+                                        attention_block, init_attention,
+                                        make_kv_cache, mha, read_kv_cache)
+    from repro.models.layers import InitCtx
+    ctx = InitCtx(jax.random.PRNGKey(0), jnp.float32)
+    p = init_attention(ctx, 32, 4, 2, 16)
+    s_max = 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 40, 32))
+    cache = make_kv_cache(2, s_max, 2, 16, "float32")
+    pos = jnp.arange(40)
+    _, cache = attention_block(p, x, positions=pos, cache=cache)
+    xt = jax.random.normal(jax.random.PRNGKey(2), (2, 1, 32))
+    pt = jnp.asarray([40])
+    # build q/k/v by hand to compare the two cores on identical inputs
+    from repro.models.attention import update_kv_cache
+    q = jnp.einsum("bsd,dhk->bshk", xt, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xt, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xt, p["wv"])
+    from repro.models.layers import apply_rope
+    q = apply_rope(q, pt, 10000.0)
+    k = apply_rope(k, pt, 10000.0)
+    nc = update_kv_cache(cache, k, v, cache["length"])
+    out_chunked = attend_cache_chunked(q, nc, pt, scale=16 ** -0.5,
+                                       kv_chunk=16)
+    kc, vc, kv_pos = read_kv_cache(nc, jnp.float32)
+    out_full = mha(q, kc, vc, q_positions=pt, kv_positions=kv_pos,
+                   causal=True, scale=16 ** -0.5)
+    np.testing.assert_allclose(np.asarray(out_chunked), np.asarray(out_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_int8_kv_cache_quantization_error_bounded():
+    from repro.models.attention import make_kv_cache, read_kv_cache, update_kv_cache
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 2, 8))
+    cache = make_kv_cache(2, 16, 2, 8, "int8")
+    cache = update_kv_cache(cache, k, v, jnp.zeros((), jnp.int32))
+    kd, vd, _ = read_kv_cache(cache, jnp.float32)
+    # per-(token,head) scales -> relative error ~ 1/127
+    assert float(jnp.max(jnp.abs(kd - k))) < np.abs(np.asarray(k)).max() * 0.02
+    assert float(jnp.max(jnp.abs(vd - v))) < np.abs(np.asarray(v)).max() * 0.02
+
+
+def test_gemma2_local_global_cache_structure():
+    cfg = get_reduced("gemma2-27b")
+    m = build_model(cfg)
+    cache = m.init_cache(2, 64)
+    assert set(cache) == {"local", "global"}
+    # local ring capped at the sliding window
+    assert cache["local"]["k"].shape[2] == cfg.sliding_window
+    assert cache["global"]["k"].shape[2] == 64
+
+
+def test_straggler_mitigation_triggers_and_conserves():
+    from repro.core.scheduler import DarisScheduler, SchedulerConfig
+    from repro.runtime.contention import DeviceModel
+    from repro.runtime.sim import SimEngine
+    from repro.serving.requests import table2_taskset
+    sched = DarisScheduler(
+        table2_taskset("resnet18"),
+        SchedulerConfig(n_contexts=4, n_streams=1, oversubscription=1.0,
+                        straggler_kappa=1.05),   # aggressive -> will trigger
+        DeviceModel())
+    m = SimEngine(sched, horizon_ms=2000.0, seed=0, noise_sigma=0.4).run()
+    assert m.stragglers > 0
+    assert m.completed[0] + m.completed[1] > 0
+    assert m.dmr(0) <= 1.0
+
+
+def test_hlo_param_traffic_slice_aware():
+    from repro.launch.hlo_cost import HloCost
+
+    def f(arena, idx):
+        return jax.lax.dynamic_index_in_dim(arena, idx, 0, keepdims=False).sum()
+
+    arena = jnp.ones((64, 256, 256))
+    hlo = jax.jit(f).lower(arena, jnp.int32(3)).compile().as_text()
+    c = HloCost(hlo).entry_cost()
+    # traffic should be ~one slice (256*256*4 = 256KB), not the 16MB arena
+    assert c["bytes"] < 64 * 256 * 256 * 4 / 4

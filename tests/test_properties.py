@@ -1,0 +1,117 @@
+"""Property-based tests (seeded randomized — hypothesis is unavailable
+offline; each case is an explicit invariant over many random task sets)."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import DarisScheduler, SchedulerConfig
+from repro.core.task import HP, LP, StageProfile, TaskSpec
+from repro.runtime.sim import SimEngine
+from repro.runtime.contention import ContentionModel, DeviceModel
+
+
+def random_taskset(rng, n_tasks=None):
+    n_tasks = n_tasks or rng.integers(3, 12)
+    specs = []
+    for i in range(int(n_tasks)):
+        n_stages = int(rng.integers(1, 5))
+        stages = [StageProfile(f"t{i}/s{j}",
+                               float(rng.uniform(0.3, 3.0)),
+                               float(rng.uniform(10, 68)),
+                               float(rng.uniform(0.1, 0.8)))
+                  for j in range(n_stages)]
+        specs.append(TaskSpec(name=f"t{i}",
+                              period_ms=float(rng.uniform(15, 80)),
+                              priority=HP if rng.random() < 0.4 else LP,
+                              stages=stages))
+    return specs
+
+
+def random_cfg(rng):
+    nc = int(rng.integers(1, 7))
+    return SchedulerConfig(
+        n_contexts=nc, n_streams=int(rng.integers(1, 4)),
+        oversubscription=float(rng.uniform(1.0, nc)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_conservation_and_hp_guarantees(seed):
+    """Invariants: (1) completed + rejected <= released; (2) HP jobs are
+    never rejected without HPA; (3) response times positive; (4) DMR in
+    [0, 1]."""
+    rng = np.random.default_rng(seed)
+    specs = random_taskset(rng)
+    cfg = random_cfg(rng)
+    sched = DarisScheduler(specs, cfg, DeviceModel())
+    m = SimEngine(sched, horizon_ms=2500.0, seed=seed).run()
+    released_max = sum(int(2500.0 / s.period_ms) + 1 for s in specs)
+    total = (m.completed[HP] + m.completed[LP]
+             + m.rejected[HP] + m.rejected[LP])
+    assert total <= released_max
+    assert m.rejected[HP] == 0          # no HPA -> HP always admitted
+    for p in (HP, LP):
+        assert all(r > 0 for r in m.response_ms[p])
+        assert 0.0 <= m.dmr(p) <= 1.0
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sim_determinism(seed):
+    rng = np.random.default_rng(seed)
+    specs = random_taskset(rng, n_tasks=6)
+    cfg = random_cfg(rng)
+    runs = []
+    for _ in range(2):
+        sched = DarisScheduler(
+            [TaskSpec(s.name, s.period_ms, s.priority, list(s.stages))
+             for s in specs], cfg, DeviceModel())
+        m = SimEngine(sched, horizon_ms=2000.0, seed=123).run()
+        runs.append((m.completed[HP], m.completed[LP], m.missed[HP],
+                     m.missed[LP], tuple(np.round(m.response_ms[HP], 9))))
+    assert runs[0] == runs[1]
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_contention_rates_properties(seed):
+    """Rates are in (0, 1]; adding a stage never speeds others up."""
+    rng = np.random.default_rng(seed)
+    cm = ContentionModel(DeviceModel())
+    profs = [StageProfile(f"s{i}", 1.0, float(rng.uniform(10, 68)),
+                          float(rng.uniform(0.1, 0.9)))
+             for i in range(int(rng.integers(2, 8)))]
+    running = [(i, p, 34.0, len(profs)) for i, p in enumerate(profs)]
+    rates = cm.rates(running)
+    assert all(0 < r <= 1.0 + 1e-9 for r in rates)
+    # drop one stage -> remaining rates should not decrease
+    running2 = running[:-1]
+    running2 = [(k, p, 34.0, len(running2)) for k, p, _, _ in running2]
+    rates2 = cm.rates(running2)
+    for r_new, r_old in zip(rates2, rates[:-1]):
+        assert r_new >= r_old - 1e-9
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fault_recovery_invariants(seed):
+    """Killing a context mid-run never deadlocks; surviving contexts absorb
+    its tasks; throughput stays > 0."""
+    from repro.runtime.sim import FaultPlan
+    rng = np.random.default_rng(seed)
+    specs = random_taskset(rng, n_tasks=8)
+    cfg = SchedulerConfig(n_contexts=3, n_streams=1, oversubscription=2.0)
+    sched = DarisScheduler(specs, cfg, DeviceModel())
+    m = SimEngine(sched, horizon_ms=2500.0, seed=seed,
+                  fault_plan=FaultPlan(fail_ctx_at=(0, 800.0))).run()
+    assert m.faults == 1
+    assert not sched.contexts[0].alive
+    assert all(t.ctx != 0 for t in sched.tasks)
+    assert m.completed[HP] + m.completed[LP] > 0
+
+
+def test_elastic_add_context():
+    rng = np.random.default_rng(0)
+    specs = random_taskset(rng, n_tasks=6)
+    cfg = SchedulerConfig(n_contexts=2, n_streams=1, oversubscription=1.0)
+    from repro.runtime.sim import FaultPlan
+    sched = DarisScheduler(specs, cfg, DeviceModel())
+    m = SimEngine(sched, horizon_ms=2000.0, seed=0,
+                  fault_plan=FaultPlan(add_ctx_at=500.0)).run()
+    assert len(sched.contexts) == 3
+    assert m.completed[HP] + m.completed[LP] > 0

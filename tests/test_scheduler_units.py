@@ -1,0 +1,134 @@
+"""Unit tests: MRET (Eq 1-2), virtual deadlines (Eq 8), partitions (Eq 9),
+the 8-level stage queue, Algorithm 1 balance, admission (Eq 11-12)."""
+import math
+
+import pytest
+
+from repro.core.mret import StageMret, TaskMret
+from repro.core.partition import ceil_even, make_contexts
+from repro.core.scheduler import DarisScheduler, SchedulerConfig
+from repro.core.stage_queue import QueueConfig, StageQueue, stage_level
+from repro.core.task import (HP, LP, Job, StageInstance, StageProfile, Task,
+                             TaskSpec)
+from repro.runtime.contention import DeviceModel
+
+
+def _spec(name="t", period=30.0, prio=HP, n_stages=3):
+    stages = [StageProfile(f"{name}/s{i}", 1.0, 40.0, 0.4)
+              for i in range(n_stages)]
+    return TaskSpec(name=name, period_ms=period, priority=prio, stages=stages)
+
+
+def test_mret_is_window_max():
+    m = StageMret(afet_ms=9.0, ws=3)
+    assert m.value() == 9.0                    # AFET before history
+    for v in (1.0, 5.0, 2.0):
+        m.observe(v)
+    assert m.value() == 5.0
+    m.observe(0.5)                             # evicts 1.0
+    assert m.value() == 5.0
+    m.observe(0.1)
+    m.observe(0.1)                             # evicts 5.0 and 2.0
+    assert m.value() == 0.5
+
+
+def test_task_mret_sum_and_vdl_split():
+    t = TaskMret([2.0, 6.0], ws=5)
+    assert t.task_mret() == 8.0
+    vdls = t.virtual_deadlines(40.0)
+    assert vdls == pytest.approx([10.0, 30.0])  # Eq. 8 proportional split
+    assert sum(vdls) == pytest.approx(40.0)
+
+
+def test_ceil_even():
+    assert ceil_even(11.2) == 12
+    assert ceil_even(12.0) == 12
+    assert ceil_even(12.1) == 14
+
+
+def test_partition_eq9_oversubscription():
+    # OS=1: disjoint; OS=Nc: full sharing
+    iso = make_contexts(4, 1, 1.0, 64)
+    assert all(len(c.units) == 16 for c in iso)
+    union = set().union(*[c.units for c in iso])
+    assert len(union) == 64
+    for a in range(4):
+        for b in range(a + 1, 4):
+            assert not (iso[a].units & iso[b].units)
+    full = make_contexts(4, 1, 4.0, 64)
+    assert all(len(c.units) == 64 for c in full)
+    mid = make_contexts(4, 1, 2.0, 64)
+    assert all(len(c.units) == 32 for c in mid)   # overlapping neighbours
+    assert mid[0].units & mid[1].units
+
+
+def test_stage_queue_eight_levels_and_edf():
+    q = StageQueue(QueueConfig())
+    hp_task = Task(spec=_spec("hp", prio=HP), index=0)
+    lp_task = Task(spec=_spec("lp", prio=LP), index=1)
+
+    def inst(task, stage_idx, vdl, missed=False):
+        job = Job(task=task, release_ms=0.0)
+        job.stage_idx = stage_idx
+        job.vdl_missed_prev = missed
+        return StageInstance(job=job, enqueue_ms=0.0, virtual_deadline_ms=vdl)
+
+    lp_last = inst(lp_task, 2, 1.0)            # LP last stage, urgent vdl
+    hp_mid = inst(hp_task, 1, 100.0)           # HP middle stage, late vdl
+    hp_boost = inst(hp_task, 1, 200.0, missed=True)
+    hp_last = inst(hp_task, 2, 300.0)
+    for i in (lp_last, hp_mid, hp_boost, hp_last):
+        q.push(i)
+    # HP always precedes LP; last > boost > plain within HP
+    assert q.pop() is hp_last
+    assert q.pop() is hp_boost
+    assert q.pop() is hp_mid
+    assert q.pop() is lp_last
+
+    # EDF within the same level
+    q2 = StageQueue(QueueConfig())
+    a = inst(hp_task, 1, 50.0)
+    b = inst(hp_task, 1, 10.0)
+    q2.push(a)
+    q2.push(b)
+    assert q2.pop() is b
+
+
+def test_stage_level_ablations():
+    task = Task(spec=_spec("lp", prio=LP), index=0)
+    job = Job(task=task, release_ms=0.0)
+    job.stage_idx = task.spec.n_stages - 1
+    inst = StageInstance(job=job, enqueue_ms=0.0, virtual_deadline_ms=1.0)
+    assert stage_level(inst, QueueConfig()) == 4 + 0 + 1
+    assert stage_level(inst, QueueConfig(no_last=True)) == 4 + 2 + 1
+    assert stage_level(inst, QueueConfig(no_fixed=True)) < 4
+
+
+def test_algorithm1_balances_and_pins_hp():
+    specs = ([_spec(f"hp{i}", prio=HP) for i in range(4)]
+             + [_spec(f"lp{i}", prio=LP) for i in range(8)])
+    sched = DarisScheduler(specs, SchedulerConfig(n_contexts=4, n_streams=1,
+                                                  oversubscription=2.0),
+                           DeviceModel())
+    per_ctx = [0.0] * 4
+    for t in sched.tasks:
+        per_ctx[t.ctx] += t.utilization(0.0)
+        if t.priority == HP:
+            assert t.fixed_ctx
+    assert max(per_ctx) - min(per_ctx) < max(per_ctx) * 0.5 + 1e-9
+
+
+def test_admission_eq12_and_migration():
+    specs = [_spec("hp0", prio=HP, period=10.0)]
+    sched = DarisScheduler(specs, SchedulerConfig(n_contexts=2, n_streams=1,
+                                                  oversubscription=1.0),
+                           DeviceModel())
+    # a LP task too big for remaining utilization gets rejected
+    fat = Task(spec=_spec("fat", prio=LP, period=1.0), index=99)
+    fat.mret = sched.tasks[0].mret.__class__([50.0], ws=5)
+    fat.ctx = 0
+    assert sched.on_release(fat, 0.0) is None
+    assert sched.rejections and sched.rejections[0].priority == LP
+    # HP bypasses admission by default
+    hp = sched.tasks[0]
+    assert sched.on_release(hp, 0.0) is not None

@@ -1,0 +1,98 @@
+"""Staged LM == monolithic forward; sharding rule sanity; dry-run subprocess."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models import build_model
+
+
+def test_lm_stages_compose_to_full_forward():
+    from repro.serving.staging import make_lm_stage_fns
+    cfg = get_reduced("smollm-135m").replace(n_layers=4)
+    m = build_model(cfg)
+    params = m.init_params(0)
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, 256, (2, 12)))
+    full_logits, _, _ = m._lm_forward(params, {"tokens": tokens})
+    stages = make_lm_stage_fns(m, n_stages=2)
+    pos = jnp.arange(12, dtype=jnp.int32)
+    x = tokens
+    for st in stages:
+        x, _ = st(params, x, None, pos)
+    np.testing.assert_allclose(np.asarray(full_logits), np.asarray(x),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_stage_boundaries():
+    from repro.serving.staging import stage_boundaries
+    assert stage_boundaries(10, 4) == [(0, 3), (3, 6), (6, 8), (8, 10)]
+    assert stage_boundaries(4, 4) == [(0, 1), (1, 2), (2, 3), (3, 4)]
+
+
+def test_sharding_sanitize_indivisible():
+    from repro.parallel.sharding import ShardingRules
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_reduced("mamba2-2.7b")
+    rules = ShardingRules(cfg, mesh)
+    # 50280 % 1 == 0 trivially here; test _sanitize directly with fake mesh
+    spec = rules._sanitize(P("model", "data"), (7, 8))
+    assert spec == P("model", "data")   # sizes 1 divide everything
+
+
+def test_act_constraint_noop_without_mesh():
+    from repro.parallel.sharding import ActConstraint
+    c = ActConstraint(None)
+    x = jnp.ones((2, 4, 8))
+    assert c.hidden(x) is x
+
+
+DRYRUN_CELLS = [
+    ("smollm-135m", "train_4k", "tiny"),
+    ("qwen2-moe-a2.7b", "decode_32k", "tiny"),
+    ("mamba2-2.7b", "prefill_32k", "tiny-multi"),
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape,mesh", DRYRUN_CELLS)
+def test_dryrun_tiny_mesh_subprocess(arch, shape, mesh, tmp_path):
+    """The multi-pod dry-run machinery end-to-end on an 8-device tiny mesh
+    (subprocess so the forced device count never leaks into this process)."""
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=420)
+    assert "OK" in out.stdout, out.stdout + out.stderr
+    arts = list(tmp_path.glob("*.json"))
+    assert arts
+    art = json.loads(arts[0].read_text())
+    assert art["status"] == "ok"
+    assert art["cost_per_device"].get("flops", 0) > 0
+    assert art["hlo_cost_per_device"]["flops"] > 0
+
+
+def test_hlo_cost_counts_while_loops():
+    """The while-aware walker multiplies loop bodies by trip count."""
+    from repro.launch.hlo_cost import analyze
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jnp.ones((32, 32))
+    w = jnp.ones((32, 32))
+    hlo = jax.jit(f).lower(x, w).compile().as_text()
+    c = analyze(hlo)
+    one_dot = 2 * 32 * 32 * 32
+    assert c["flops"] >= 9 * one_dot     # ~10 iterations counted
