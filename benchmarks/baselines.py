@@ -9,8 +9,8 @@
 """
 from __future__ import annotations
 
+from repro.api import FaultPlan
 from repro.core.scheduler import SchedulerConfig
-from repro.runtime.sim import FaultPlan
 from repro.serving.requests import table2_taskset
 
 from .common import cache_json, load_json, mps_cfg, run_sim

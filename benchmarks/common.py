@@ -1,29 +1,40 @@
-"""Shared benchmark plumbing: run one DARIS sim config, cache JSON."""
+"""Shared benchmark plumbing: run one DARIS config via the ``repro.api``
+facade (no benchmark constructs an engine directly), cache JSON."""
 from __future__ import annotations
 
 import json
 import pathlib
-import time
 
-from repro.core.scheduler import DarisScheduler, SchedulerConfig
-from repro.runtime.sim import FaultPlan, SimEngine
+from repro.api import FaultPlan, ServerConfig, run_and_summarize
+from repro.core.scheduler import SchedulerConfig
 from repro.serving.profiles import device
-from repro.serving.requests import mixed_taskset, ratio_taskset, table2_taskset
 
 ART = pathlib.Path("artifacts/bench")
 HORIZON_MS = 6000.0
 
 
+def make_server(specs, sched_cfg: SchedulerConfig, *,
+                horizon_ms: float = HORIZON_MS, seed: int = 0,
+                fault_plan=None, scheduler_cls=None,
+                **scheduler_cls_kw) -> ServerConfig:
+    cfg = (ServerConfig.sim()
+           .tasks(specs)
+           .scheduler_config(sched_cfg)
+           .device(device())
+           .horizon_ms(horizon_ms)
+           .seed(seed))
+    if fault_plan is not None:
+        cfg.fault_plan(fault_plan)
+    if scheduler_cls is not None:
+        cfg.scheduler_cls(scheduler_cls, **scheduler_cls_kw)
+    return cfg
+
+
 def run_sim(specs, sched_cfg: SchedulerConfig, *, horizon_ms: float = HORIZON_MS,
             seed: int = 0, fault_plan=None) -> dict:
-    t0 = time.time()
-    sched = DarisScheduler(specs, sched_cfg, device())
-    eng = SimEngine(sched, horizon_ms=horizon_ms, seed=seed,
-                    fault_plan=fault_plan)
-    m = eng.run()
-    s = m.summary()
-    s["wall_s"] = time.time() - t0
-    return s
+    server = make_server(specs, sched_cfg, horizon_ms=horizon_ms, seed=seed,
+                         fault_plan=fault_plan).build()
+    return run_and_summarize(server)
 
 
 def cache_json(name: str, payload: dict) -> None:

@@ -9,11 +9,9 @@ overprovision. Paper: ws=5; smaller ws -> DMR up, larger -> throughput down
 from __future__ import annotations
 
 from repro.core.scheduler import DarisScheduler, SchedulerConfig
-from repro.runtime.sim import SimEngine
-from repro.serving.profiles import device
 from repro.serving.requests import table2_taskset
 
-from .common import cache_json, load_json
+from .common import cache_json, load_json, make_server
 
 
 class TracingScheduler(DarisScheduler):
@@ -30,12 +28,13 @@ class TracingScheduler(DarisScheduler):
 
 
 def _run_cfg(nc, os_, ws) -> dict:
-    sched = TracingScheduler(
+    server = make_server(
         table2_taskset("resnet18"),
         SchedulerConfig(n_contexts=nc, n_streams=1, oversubscription=os_,
-                        mret_window=ws), device())
-    m = SimEngine(sched, horizon_ms=6000.0, seed=0).run()
-    tr = sched.trace
+                        mret_window=ws),
+        scheduler_cls=TracingScheduler).build()
+    m = server.run()
+    tr = server.scheduler.trace
     covered = sum(1 for _, _, et, pred in tr if et <= pred + 1e-9)
     over = [pred / et for _, _, et, pred in tr if et > 0]
     s = m.summary()

@@ -1,5 +1,6 @@
 """Quickstart: DARIS scheduling the paper's ResNet18 task set (Table II)
-on the calibrated simulator. Runs in a few seconds on CPU.
+through the ``repro.api`` facade on the calibrated simulator. Runs in a
+few seconds on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,8 +8,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.scheduler import DarisScheduler, SchedulerConfig
-from repro.runtime.sim import SimEngine
+from repro.api import ServerConfig
 from repro.serving.profiles import TABLE1, device
 from repro.serving.requests import table2_taskset
 
@@ -17,13 +17,13 @@ def main():
     print("DARIS quickstart: ResNet18 task set (17 HP + 34 LP @ 30 JPS)")
     print(f"pure-batching upper baseline: {TABLE1['resnet18'][1]:.0f} JPS\n")
     for nc, ns, os_ in [(1, 6, 1.0), (6, 1, 1.0), (6, 1, 6.0), (4, 1, 4.0)]:
-        sched = DarisScheduler(
-            table2_taskset("resnet18"),
-            SchedulerConfig(n_contexts=nc, n_streams=ns,
-                            oversubscription=os_),
-            device())
-        m = SimEngine(sched, horizon_ms=6000.0, seed=0).run()
-        s = m.summary()
+        server = (ServerConfig.sim()
+                  .tasks(table2_taskset("resnet18"))
+                  .contexts(nc).streams(ns).oversubscribe(os_)
+                  .device(device())
+                  .horizon_ms(6000.0).seed(0)
+                  .build())
+        s = server.run().summary()
         policy = "STR" if nc == 1 else "MPS"
         print(f"{policy} {nc}x{ns}_OS{os_:g}: {s['jps']:7.1f} JPS | "
               f"HP DMR {s['dmr_hp']:.1%} LP DMR {s['dmr_lp']:.1%} | "

@@ -1,9 +1,11 @@
-"""End-to-end driver: REAL JAX execution of staged CNNs under DARIS.
+"""End-to-end driver: REAL JAX execution of staged CNNs under DARIS,
+served through the ``repro.api`` facade.
 
 Three DNN families (the paper's benchmarks, reduced size for CPU), staged
 into 4 sub-tasks each, scheduled by the full DARIS stack — MRET estimation
 from *measured* wall times, admission, priorities, migration — on wall-
-clock time with one worker thread per lane.
+clock time with one worker thread per lane. Identical scheduler, identical
+drive loop as the simulator: only the backend differs.
 
     PYTHONPATH=src python examples/serve_realtime.py [--seconds 4]
 """
@@ -12,11 +14,9 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.scheduler import DarisScheduler, SchedulerConfig
-from repro.core.task import HP, LP
+from repro.api import HP, LP, DeviceModel, ServerConfig
 from repro.models.cnn import build_inception, build_resnet, build_unet
-from repro.runtime.contention import DeviceModel
-from repro.serving.engine import RealtimeEngine, staged_cnn_taskspec
+from repro.serving.engine import staged_cnn_taskspec
 
 
 def main():
@@ -44,14 +44,16 @@ def main():
         print(f"  {s.name:18s} prio={'HP' if s.priority == HP else 'LP'} "
               f"measured t_alone={mret:6.1f}ms period={s.period_ms:.0f}ms")
 
-    sched = DarisScheduler(
-        specs, SchedulerConfig(n_contexts=2, n_streams=1,
-                               oversubscription=2.0),
-        DeviceModel(n_units=2.0))
-    eng = RealtimeEngine(sched, horizon_ms=args.seconds * 1000.0,
-                         input_hw=args.hw)
+    server = (ServerConfig.realtime()
+              .tasks(specs)
+              .contexts(2).streams(1).oversubscribe(2.0)
+              .device(DeviceModel(n_units=2.0))
+              .horizon_ms(args.seconds * 1000.0)
+              .phase_offsets(False)
+              .realtime_io(input_hw=args.hw)
+              .build())
     print(f"\nserving for {args.seconds:.0f}s of wall clock...")
-    m = eng.run()
+    m = server.run()
     s = m.summary()
     print(f"\ncompleted: HP {m.completed[HP]}  LP {m.completed[LP]} "
           f"({s['jps']:.1f} JPS)")
@@ -60,6 +62,7 @@ def main():
           f"p95 {s['resp_hp']['p95']:.1f} | LP mean "
           f"{s['resp_lp']['mean']:.1f} p95 {s['resp_lp']['p95']:.1f}")
     print(f"rejected (admission): LP {s['rejected_lp']}  HP {s['rejected_hp']}")
+    print(f"skipped releases (stall protection): {s['skipped_releases']}")
     print("\nMRET adapted from measured stage times (ws=5); HP responses "
           "should sit well below LP.")
 

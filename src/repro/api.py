@@ -1,0 +1,307 @@
+"""repro.api — the one front door to DARIS serving.
+
+One scheduler (admission Eq. 11-12, staging, oversubscription, zero-delay
+migration) serves every deployment shape; this module is the single typed
+facade over it. A ``DarisServer`` is built from a fluent ``ServerConfig``
+and drives the shared ``EngineCore`` loop against a pluggable
+``ExecutionBackend`` — the calibrated fluid simulator or the threaded
+real-JAX executor — with first-class arrival processes (periodic, Poisson
+open-loop, recorded trace) and injectable fault / scale-out events.
+
+    from repro.api import ServerConfig
+    from repro.serving.profiles import device
+    from repro.serving.requests import table2_taskset
+
+    server = (ServerConfig.sim()
+              .tasks(table2_taskset("resnet18"))
+              .contexts(6).oversubscribe(6.0)
+              .device(device())
+              .horizon_ms(6000).seed(0)
+              .build())
+    metrics = server.run()
+
+Programmatic clients submit one-shot jobs and introspect live state:
+
+    handle = server.submit(spec, at_ms=100.0)    # admission-tested
+    server.drain()                               # run until queues empty
+    server.snapshot()                            # queue depths, lanes, ...
+
+No benchmark or example constructs an engine directly anymore; the old
+``SimEngine`` / ``RealtimeEngine`` classes survive one release as
+deprecated shims over this machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from .core.metrics import RunMetrics
+from .core.scheduler import DarisScheduler, SchedulerConfig
+from .core.task import HP, LP, StageProfile, TaskSpec
+from .runtime.arrivals import (ArrivalProcess, PeriodicArrival,
+                               PoissonArrival, TraceArrival)
+from .runtime.backend import (ExecutionBackend, RealtimeBackend, SimBackend)
+from .runtime.contention import DeviceModel
+from .runtime.engine_core import (Completion, EngineCore, FaultPlan,
+                                  SubmitHandle)
+
+__all__ = [
+    "ServerConfig", "DarisServer", "FaultPlan", "SubmitHandle",
+    "ArrivalProcess", "PeriodicArrival", "PoissonArrival", "TraceArrival",
+    "ExecutionBackend", "SimBackend", "RealtimeBackend",
+    "SchedulerConfig", "DeviceModel", "TaskSpec", "StageProfile",
+    "HP", "LP", "RunMetrics", "EngineCore", "Completion",
+]
+
+SIM, REALTIME = "sim", "realtime"
+
+
+class ServerConfig:
+    """Fluent builder for ``DarisServer``. Every setter returns ``self``;
+    ``build()`` validates the whole configuration at once."""
+
+    def __init__(self, backend_kind: str = SIM):
+        if backend_kind not in (SIM, REALTIME):
+            raise ValueError(f"unknown backend {backend_kind!r}")
+        self._backend_kind = backend_kind
+        self._specs: List[TaskSpec] = []
+        self._sched_cfg: Optional[SchedulerConfig] = None
+        self._sched_kw: Dict[str, object] = {}
+        self._sched_cls: type = DarisScheduler
+        self._sched_cls_kw: Dict[str, object] = {}
+        self._device: Optional[DeviceModel] = None
+        self._horizon_ms = 6000.0
+        self._seed = 0
+        self._noise_sigma: Optional[float] = None
+        self._phase_offsets = True
+        self._arrivals: Dict[str, ArrivalProcess] = {}
+        self._open_loop: Optional[tuple] = None   # (rate_jps, seed)
+        self._fault_plan: Optional[FaultPlan] = None
+        self._record_decisions = False
+        self._input_hw = 64
+        self._batch = 1
+        self._input_factory = None
+
+    # -------------------------------------------------------- entry points
+    @classmethod
+    def sim(cls) -> "ServerConfig":
+        """Calibrated fluid-simulation backend (virtual time)."""
+        return cls(SIM)
+
+    @classmethod
+    def realtime(cls) -> "ServerConfig":
+        """Real execution backend (wall clock, threaded lanes)."""
+        return cls(REALTIME)
+
+    # ------------------------------------------------------------ workload
+    def tasks(self, specs: List[TaskSpec]) -> "ServerConfig":
+        self._specs.extend(specs)
+        return self
+
+    def task(self, spec: TaskSpec,
+             arrival: Optional[ArrivalProcess] = None) -> "ServerConfig":
+        self._specs.append(spec)
+        if arrival is not None:
+            self._arrivals[spec.name] = arrival
+        return self
+
+    def arrival(self, task_name: str, proc: ArrivalProcess) -> "ServerConfig":
+        """Override the arrival process for one named task."""
+        self._arrivals[task_name] = proc
+        return self
+
+    def open_loop(self, rate_jps: float, seed: int = 0) -> "ServerConfig":
+        """Poisson open-loop arrivals for every task: each task gets its
+        own stream seeded from ``seed`` + its index, so the whole arrival
+        trace is reproducible across runs and across backends."""
+        self._open_loop = (rate_jps, seed)
+        return self
+
+    def phase_offsets(self, enabled: bool) -> "ServerConfig":
+        """Random phase offsets for periodic tasks (default on, matching
+        the paper's unsynchronized release convention)."""
+        self._phase_offsets = enabled
+        return self
+
+    # ----------------------------------------------------------- scheduler
+    def contexts(self, n: int) -> "ServerConfig":
+        self._sched_kw["n_contexts"] = n
+        return self
+
+    def streams(self, n: int) -> "ServerConfig":
+        self._sched_kw["n_streams"] = n
+        return self
+
+    def oversubscribe(self, factor: float) -> "ServerConfig":
+        self._sched_kw["oversubscription"] = factor
+        return self
+
+    def scheduler_options(self, **kw) -> "ServerConfig":
+        """Extra ``SchedulerConfig`` fields (overload_hpa, ablations, ...)."""
+        self._sched_kw.update(kw)
+        return self
+
+    def scheduler_config(self, cfg: SchedulerConfig) -> "ServerConfig":
+        """Use a fully-built SchedulerConfig (overrides field setters)."""
+        self._sched_cfg = cfg
+        return self
+
+    def scheduler_cls(self, cls: type, **kw) -> "ServerConfig":
+        """Custom DarisScheduler subclass (tracing, research hooks)."""
+        self._sched_cls = cls
+        self._sched_cls_kw = kw
+        return self
+
+    def device(self, dm: DeviceModel) -> "ServerConfig":
+        self._device = dm
+        return self
+
+    # --------------------------------------------------------------- run
+    def horizon_ms(self, ms: float) -> "ServerConfig":
+        self._horizon_ms = ms
+        return self
+
+    def seed(self, seed: int) -> "ServerConfig":
+        self._seed = seed
+        return self
+
+    def noise(self, sigma: float) -> "ServerConfig":
+        """Lognormal stage-time noise (sim backend only)."""
+        self._noise_sigma = sigma
+        return self
+
+    def record_decisions(self, enabled: bool = True) -> "ServerConfig":
+        """Keep an ordered log of admit/reject/dispatch/finish decisions
+        (the sim-vs-real parity contract)."""
+        self._record_decisions = enabled
+        return self
+
+    # ------------------------------------------------------ faults/elastic
+    def fault_plan(self, fp: FaultPlan) -> "ServerConfig":
+        self._fault_plan = fp
+        return self
+
+    def fail_context_at(self, ctx: int, t_ms: float) -> "ServerConfig":
+        fp = self._fault_plan or FaultPlan()
+        self._fault_plan = dataclasses.replace(fp, fail_ctx_at=(ctx, t_ms))
+        return self
+
+    def scale_out_at(self, t_ms: float) -> "ServerConfig":
+        fp = self._fault_plan or FaultPlan()
+        self._fault_plan = dataclasses.replace(fp, add_ctx_at=t_ms)
+        return self
+
+    # ------------------------------------------------------------ realtime
+    def realtime_io(self, input_hw: int = 64, batch: int = 1,
+                    input_factory: Optional[Callable] = None) -> "ServerConfig":
+        """Input tensor shape / factory for real stage payloads."""
+        self._input_hw = input_hw
+        self._batch = batch
+        self._input_factory = input_factory
+        return self
+
+    # --------------------------------------------------------------- build
+    def _scheduler_config(self) -> SchedulerConfig:
+        return self._sched_cfg or SchedulerConfig(**self._sched_kw)
+
+    def _validate(self) -> None:
+        if self._horizon_ms <= 0:
+            raise ValueError(f"horizon_ms must be > 0, got {self._horizon_ms}")
+        cfg = self._scheduler_config()   # TypeError on unknown options
+        if cfg.n_contexts < 1 or cfg.n_streams < 1:
+            raise ValueError(f"need >=1 context and stream, got "
+                             f"{cfg.n_contexts}x{cfg.n_streams}")
+        if cfg.oversubscription < 1.0:
+            raise ValueError(f"oversubscription must be >= 1, got "
+                             f"{cfg.oversubscription}")
+        if self._noise_sigma is not None and self._backend_kind != SIM:
+            raise ValueError("noise() applies to the sim backend only")
+        if self._noise_sigma is not None and self._noise_sigma < 0:
+            raise ValueError("noise sigma must be >= 0")
+        names = {s.name for s in self._specs}
+        unknown = set(self._arrivals) - names
+        if unknown:
+            raise ValueError(f"arrival() for unknown task(s): "
+                             f"{sorted(unknown)}")
+        dupes = len(self._specs) - len(names)
+        if dupes and self._arrivals:
+            raise ValueError("per-name arrival overrides require unique "
+                             "task names")
+
+    def build(self) -> "DarisServer":
+        self._validate()
+        return DarisServer(self)
+
+
+class DarisServer:
+    """The serving facade: one scheduler + one engine + one backend."""
+
+    def __init__(self, cfg: ServerConfig):
+        self._cfg = cfg
+        sched_cfg = cfg._scheduler_config()
+        self.scheduler: DarisScheduler = cfg._sched_cls(
+            list(cfg._specs), sched_cfg, cfg._device, **cfg._sched_cls_kw)
+        if cfg._backend_kind == SIM:
+            backend = SimBackend(
+                noise_sigma=(0.06 if cfg._noise_sigma is None
+                             else cfg._noise_sigma))
+        else:
+            backend = RealtimeBackend(input_hw=cfg._input_hw,
+                                      batch=cfg._batch,
+                                      input_factory=cfg._input_factory)
+        self.backend = backend
+        phase = "random" if cfg._phase_offsets else 0.0
+        arrivals: Dict[int, ArrivalProcess] = {}
+        for t in self.scheduler.tasks:
+            proc = cfg._arrivals.get(t.name)
+            if proc is None and cfg._open_loop is not None:
+                rate, seed = cfg._open_loop
+                proc = PoissonArrival(rate, seed=seed + t.index)
+            if proc is None:
+                proc = PeriodicArrival(phase_ms=phase)
+            arrivals[t.index] = proc
+        self.core = EngineCore(
+            self.scheduler, backend, horizon_ms=cfg._horizon_ms,
+            seed=cfg._seed, arrivals=arrivals, fault_plan=cfg._fault_plan,
+            record_decisions=cfg._record_decisions)
+
+    # ------------------------------------------------------------- serving
+    def run(self) -> RunMetrics:
+        """Drive the configured workload to the horizon."""
+        return self.core.run()
+
+    def drain(self) -> RunMetrics:
+        """Drive until all submitted/queued work completes (or the horizon
+        is reached) — the natural mode for ``submit()``/trace workloads."""
+        return self.core.run(until_idle=True)
+
+    def submit(self, spec: TaskSpec, at_ms: float = 0.0) -> SubmitHandle:
+        """Register a one-shot job release at ``at_ms``; it goes through
+        the same admission test (Eq. 12) as periodic releases. Inspect the
+        returned handle after ``run()``/``drain()``."""
+        return self.core.submit(spec, at_ms)
+
+    def snapshot(self) -> dict:
+        """Queue depths, lane occupancy, context liveness, live counters."""
+        return self.core.snapshot()
+
+    # ---------------------------------------------------------- inspection
+    @property
+    def metrics(self) -> RunMetrics:
+        return self.core.metrics
+
+    @property
+    def decisions(self) -> Optional[List[str]]:
+        """Ordered admit/reject/dispatch/finish log (record_decisions())."""
+        return self.core.decisions
+
+
+def run_and_summarize(server: DarisServer) -> dict:
+    """Convenience: run a built server, return its summary dict with wall
+    time attached (the shape benchmarks cache as JSON)."""
+    t0 = time.time()
+    m = server.run()
+    s = m.summary()
+    s["wall_s"] = time.time() - t0
+    return s

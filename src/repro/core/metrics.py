@@ -24,6 +24,9 @@ class RunMetrics:
     migrations: int = 0
     stragglers: int = 0
     faults: int = 0
+    # periodic releases skipped because the drive loop stalled past whole
+    # periods (wall-clock backends under load; see PeriodicArrival)
+    skipped_releases: int = 0
 
     @property
     def jps(self) -> float:
@@ -55,7 +58,7 @@ class RunMetrics:
             "rejected_hp": self.rejected[HP], "rejected_lp": self.rejected[LP],
             "resp_hp": self.resp_stats(HP), "resp_lp": self.resp_stats(LP),
             "migrations": self.migrations, "stragglers": self.stragglers,
-            "faults": self.faults,
+            "faults": self.faults, "skipped_releases": self.skipped_releases,
         }
 
 

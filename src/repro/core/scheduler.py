@@ -1,9 +1,10 @@
 """DARIS scheduler: offline phase (AFET + Algorithm 1) + online phase
 (admission Eq. 11-12, migration, 8-level stage dispatch) — paper §IV.
 
-The scheduler is engine-agnostic: the discrete-event simulator
-(runtime/sim.py) and the real JAX executor (serving/engine.py) both drive
-it through the same callbacks:
+The scheduler is engine-agnostic: the shared ``EngineCore`` loop
+(runtime/engine_core.py) drives it over any ``ExecutionBackend`` — the
+fluid simulator and the real JAX executor alike — through the same
+callbacks:
 
     on_release(task, now)        periodic job release -> admission test
     on_stage_finish(inst, now)   MRET update, vdl bookkeeping, next stage
@@ -90,14 +91,18 @@ class DarisScheduler:
         )
         return dataclasses.replace(spec, stages=[merged])
 
-    def _offline_phase(self) -> None:
-        """AFET seeding (§IV-A1) + Algorithm 1 context population."""
+    def _seed_mret(self, task: Task) -> None:
+        """AFET seeding (§IV-A1): pessimistic full-load execution times."""
         n_p = self.cfg.n_contexts * self.cfg.n_streams
         cap0 = self.contexts[0].cap
+        afets = [self.contention.full_load_time(
+            p, cap0, self.cfg.n_streams, n_p) for p in task.spec.stages]
+        task.mret = TaskMret(afets, ws=self.cfg.mret_window)
+
+    def _offline_phase(self) -> None:
+        """AFET seeding (§IV-A1) + Algorithm 1 context population."""
         for t in self.tasks:
-            afets = [self.contention.full_load_time(
-                p, cap0, self.cfg.n_streams, n_p) for p in t.spec.stages]
-            t.mret = TaskMret(afets, ws=self.cfg.mret_window)
+            self._seed_mret(t)
         # Algorithm 1: HP first, then LP, each to the min-utilization context
         util = {c.index: 0.0 for c in self.contexts}
         for t in sorted([t for t in self.tasks if t.priority == HP],
@@ -111,6 +116,22 @@ class DarisScheduler:
             k = min(util, key=util.get)
             t.ctx = k
             util[k] += t.utilization(0.0)
+
+    def add_task(self, spec: TaskSpec, now: float = 0.0) -> Task:
+        """Late task registration (the ``DarisServer.submit`` path): same
+        staging/AFET treatment as constructor-registered tasks, then
+        Algorithm-1-style placement on the least-utilized live context."""
+        if self.cfg.no_staging:
+            spec = self._merge_stages(spec)
+        task = Task(spec=spec, index=len(self.tasks))
+        self._seed_mret(task)
+        alive = [c.index for c in self.contexts if c.alive]
+        util = {k: self.util_hp_total(k, now) + self.util_lp_active(k, now)
+                for k in alive}
+        task.ctx = min(util, key=util.get)
+        task.fixed_ctx = task.priority == HP
+        self.tasks.append(task)
+        return task
 
     # ----------------------------------------------------- utilization (Eq. 4-7)
     def util_hp_total(self, k: int, now: float) -> float:

@@ -175,12 +175,17 @@ class HloCost:
     def param_traffic(self, name: str) -> Dict[int, float]:
         """Slice-aware bytes actually read per parameter of a (fused)
         computation: dynamic-slice consumers charge the slice, dynamic-
-        update-slice consumers charge the update, everything else charges
-        the full parameter."""
+        update-slice consumers charge the update, nested fusion/call
+        consumers charge what the callee actually touches (XLA's CPU
+        backend wraps fusions in ``parallel_*`` call computations, so a
+        one-level walk would see only an opaque ``fusion`` consumer and
+        charge the whole arena), everything else charges the full
+        parameter."""
         if not hasattr(self, "_traffic_cache"):
             self._traffic_cache = {}
         if name in self._traffic_cache:
             return self._traffic_cache[name]
+        self._traffic_cache[name] = {}   # break call cycles
         out: Dict[int, float] = {}
         instrs = self.comps.get(name, [])
         shapes: Dict[str, float] = {}
@@ -209,6 +214,12 @@ class HloCost:
                 elif op == "dynamic-update-slice" and pos == 0:
                     upd = shapes.get(ops_[1], rbytes) if len(ops_) > 1 else rbytes
                     consumers[o] += 2.0 * upd
+                elif op in ("fusion", "call"):
+                    tgt = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", rest)
+                    nested = (self.param_traffic(tgt.group(1)) if tgt
+                              else {})
+                    full_b = shapes.get(o, 0.0)
+                    consumers[o] += min(full_b, nested.get(pos, full_b))
                 else:
                     consumers[o] += shapes.get(o, 0.0)
         for pname, idx in param_of.items():

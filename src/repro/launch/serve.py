@@ -23,11 +23,9 @@ def main() -> None:
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
 
-    from ..core.scheduler import DarisScheduler, SchedulerConfig
-    from ..core.task import HP, LP
+    from ..api import HP, LP, DeviceModel, ServerConfig
     from ..models.cnn import BUILDERS
-    from ..runtime.contention import DeviceModel
-    from ..serving.engine import RealtimeEngine, staged_cnn_taskspec
+    from ..serving.engine import staged_cnn_taskspec
 
     specs = []
     for name in args.dnns.split(","):
@@ -36,11 +34,16 @@ def main() -> None:
                                          input_hw=args.hw, tag="-hp"))
         specs.append(staged_cnn_taskspec(model, priority=LP, jps=args.jps,
                                          input_hw=args.hw, tag="-lp"))
-    sched = DarisScheduler(
-        specs, SchedulerConfig(n_contexts=args.contexts,
-                               n_streams=args.streams,
-                               oversubscription=args.oversub),
-        DeviceModel(n_units=float(args.contexts)))
+    server = (ServerConfig.realtime()
+              .tasks(specs)
+              .contexts(args.contexts).streams(args.streams)
+              .oversubscribe(args.oversub)
+              .device(DeviceModel(n_units=float(args.contexts)))
+              .horizon_ms(args.seconds * 1000.0)
+              .phase_offsets(False)
+              .realtime_io(input_hw=args.hw)
+              .build())
+    sched = server.scheduler
     if args.ckpt:
         import os
         from ..checkpoint import load_scheduler_state, save_scheduler_state
@@ -48,9 +51,7 @@ def main() -> None:
             load_scheduler_state(sched, args.ckpt)
             print(f"resumed scheduler state from {args.ckpt} "
                   f"(AFET cold-start skipped)")
-    eng = RealtimeEngine(sched, horizon_ms=args.seconds * 1000.0,
-                         input_hw=args.hw)
-    m = eng.run()
+    m = server.run()
     s = m.summary()
     print(f"JPS {s['jps']:.1f} | DMR HP {s['dmr_hp']:.1%} LP {s['dmr_lp']:.1%}"
           f" | resp HP {s['resp_hp']['mean']:.1f}ms LP "

@@ -1,0 +1,300 @@
+"""ExecutionBackend protocol + the two built-in substrates.
+
+A backend owns *time* and *stage execution* and nothing else; scheduling
+policy lives entirely in ``EngineCore``/``DarisScheduler``. The contract:
+
+    bind(core)               engine hands the backend its core reference
+    start() / stop()         run lifecycle
+    now_ms()                 current time (virtual or wall clock)
+    advance(cap_ms)          -> [Completion] occurring strictly before cap,
+                             else advance/block time to cap and return []
+    launch(lane, inst)       begin executing a dispatched stage
+    running_set_changed()    hook after dispatch/harvest (rate recompute)
+    cancel_ctx(ctx)          drop in-flight work on a failed context
+    on_job_done(job)         job-level cleanup (activation state, ...)
+    has_inflight()           any launched-but-unharvested stage?
+
+``SimBackend`` wraps the processor-sharing fluid simulation (versioned
+finish predictions, lognormal stage noise, straggler mitigation);
+``RealtimeBackend`` wraps threaded execution of real (jitted JAX) stage
+payloads on wall-clock time. Both are driven by the same EngineCore loop,
+which is what makes sim-vs-real scheduler-decision parity testable.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Protocol
+
+import numpy as np
+
+from ..core.task import Job, StageInstance
+from .engine_core import Completion, EngineCore
+
+_tie = itertools.count()
+
+
+class ExecutionBackend(Protocol):
+    """Structural type for execution substrates (see module docstring)."""
+
+    def bind(self, core: EngineCore) -> None: ...
+    def start(self) -> None: ...
+    def stop(self) -> None: ...
+    def now_ms(self) -> float: ...
+    def advance(self, cap_ms: float) -> List[Completion]: ...
+    def launch(self, lane: tuple, inst: StageInstance) -> None: ...
+    def running_set_changed(self) -> None: ...
+    def cancel_ctx(self, ctx_idx: int) -> None: ...
+    def on_job_done(self, job: Job) -> None: ...
+    def has_inflight(self) -> bool: ...
+
+
+class SimBackend:
+    """Fluid-rate discrete-event substrate (virtual time).
+
+    Whenever the running set changes, per-lane rates are recomputed from
+    the contention model and finish times re-predicted. Predictions are
+    version-stamped so a rate change invalidates stale ones in O(1).
+    Stage work carries seeded lognormal noise so MRET has variability to
+    track (paper Fig. 9).
+    """
+
+    EPS = 1e-6   # ms; snap-to-zero tolerance
+
+    def __init__(self, noise_sigma: float = 0.06,
+                 rng: Optional[np.random.Generator] = None):
+        self.noise_sigma = noise_sigma
+        self.rng = rng
+        self.core: Optional[EngineCore] = None
+        self.now = 0.0
+        # lane -> [inst, remaining_ms, rate, version]
+        self.running: Dict[tuple, list] = {}
+        self._heap: List[tuple] = []   # (t, seq, lane, version)
+
+    # ----------------------------------------------------------- lifecycle
+    def bind(self, core: EngineCore) -> None:
+        self.core = core
+        if self.rng is None:
+            self.rng = core.rng   # shared stream: offsets then noise draws
+
+    def start(self) -> None:
+        self.now = 0.0
+
+    def stop(self) -> None:
+        pass
+
+    def now_ms(self) -> float:
+        return self.now
+
+    def has_inflight(self) -> bool:
+        return bool(self.running)
+
+    # ---------------------------------------------------------------- time
+    def _advance_to(self, t: float) -> None:
+        dt = t - self.now
+        if dt > 0:
+            for entry in self.running.values():
+                entry[1] = max(entry[1] - entry[2] * dt, 0.0)
+                if entry[1] < self.EPS:
+                    entry[1] = 0.0
+                entry[0].work_done += entry[2] * dt
+        self.now = t
+
+    def advance(self, cap_ms: float) -> List[Completion]:
+        while self._heap and self._heap[0][0] < cap_ms:
+            t, _, lane, ver = heapq.heappop(self._heap)
+            entry = self.running.get(lane)
+            if entry is None or entry[3] != ver:
+                continue                      # stale prediction
+            self._advance_to(t)
+            inst = entry[0]
+            del self.running[lane]
+            return [Completion(lane, inst, t - inst.start_ms)]
+        self._advance_to(cap_ms)
+        return []
+
+    # ----------------------------------------------------------- execution
+    def launch(self, lane: tuple, inst: StageInstance) -> None:
+        prof = inst.profile
+        noise = math.exp(self.rng.normal(0.0, self.noise_sigma))
+        work = (prof.t_alone_ms + prof.overhead_ms) * noise
+        # version must be globally unique: a reset-to-0 counter lets a
+        # stale FINISH from the lane's previous occupant fire early
+        self.running[lane] = [inst, work, 0.0, next(_tie)]
+
+    def cancel_ctx(self, ctx_idx: int) -> None:
+        for lane in list(self.running):
+            if lane[0] == ctx_idx:
+                del self.running[lane]
+
+    def on_job_done(self, job: Job) -> None:
+        pass
+
+    def running_set_changed(self) -> None:
+        """Recompute all rates; re-predict and version-stamp finishes.
+        Also runs straggler mitigation (beyond-paper, DESIGN.md §7): a
+        stage whose projected completion exceeds kappa x its MRET is
+        killed and re-enqueued — the Eq. 12 machinery then places it on
+        the least-loaded context. Stage granularity bounds the lost work."""
+        if not self.running:
+            return
+        sched = self.core.sched
+        kappa = sched.cfg.straggler_kappa
+        if kappa:
+            killed = False
+            for lane, entry in list(self.running.items()):
+                inst = entry[0]
+                if entry[2] <= 0:
+                    continue
+                projected = ((self.now - inst.start_ms)
+                             + entry[1] / max(entry[2], 1e-6))
+                mret = inst.task.mret.stage_mret(inst.job.stage_idx)
+                floor = 4.0 * (inst.profile.t_alone_ms
+                               + inst.profile.overhead_ms)
+                if projected > max(kappa * mret, floor) and len(self.running) > 1:
+                    del self.running[lane]
+                    sched.lanes[lane] = None
+                    inst.work_done = 0.0
+                    inst.lane = None
+                    # re-enqueue on the least-backlogged live context
+                    # (zero-delay migration at the stage boundary)
+                    cands = [c.index for c in sched.contexts if c.alive]
+                    tgt = min(cands,
+                              key=lambda k: sched.predicted_finish(k, self.now))
+                    old = inst.job.ctx
+                    if inst.job in sched.active_jobs.get(old, []):
+                        sched.active_jobs[old].remove(inst.job)
+                        sched.active_jobs[tgt].append(inst.job)
+                    inst.job.ctx = tgt
+                    sched.queues[tgt].push(inst)
+                    self.core.metrics.stragglers += 1
+                    killed = True
+            if killed:
+                self.core._dispatch()
+        ctx_active: Dict[int, int] = {}
+        for lane in self.running:
+            ctx_active[lane[0]] = ctx_active.get(lane[0], 0) + 1
+        entries = list(self.running.items())
+        rates = sched.contention.rates([
+            (lane, e[0].profile, sched.contexts[lane[0]].cap,
+             ctx_active[lane[0]]) for lane, e in entries])
+        for (lane, entry), rate in zip(entries, rates):
+            entry[2] = max(rate, 1e-6)
+            entry[3] = next(_tie)
+            eta = self.now + entry[1] / entry[2]
+            heapq.heappush(self._heap, (eta, next(_tie), lane, entry[3]))
+
+
+def _default_input_factory(input_hw: int, batch: int) -> Callable[[Job], object]:
+    """Image-shaped zero input matching the staged-CNN payload convention."""
+    def make(job: Job):
+        import jax
+        return jax.device_put(np.zeros(
+            (batch, input_hw, input_hw, 3), np.float32))
+    return make
+
+
+class RealtimeBackend:
+    """Wall-clock substrate: one worker thread per dispatched stage.
+
+    Stage payloads are arbitrary callables (jitted JAX stage functions in
+    production — XLA releases the GIL so lanes genuinely overlap). A stage
+    whose profile has no payload is *emulated* by sleeping its ``t_alone``:
+    that keeps analytic task sets runnable on the real engine, which is
+    what the sim-vs-real parity test exercises.
+
+    Scheduler state AND inter-stage activation state (``_job_state``) are
+    touched only on the engine thread: workers ship their output through
+    the done queue and ``advance`` commits it at harvest, so a ghost
+    worker from a failed context can never clobber a replayed job's
+    activations. No lock is needed.
+    """
+
+    def __init__(self, input_hw: int = 64, batch: int = 1,
+                 input_factory: Optional[Callable[[Job], object]] = None):
+        self.input_factory = (input_factory
+                              or _default_input_factory(input_hw, batch))
+        self.core: Optional[EngineCore] = None
+        self._done_q: "queue.Queue" = queue.Queue()
+        self._job_state: Dict[int, object] = {}
+        self._inflight = 0
+        self._cancelled_ctx: set = set()
+        self._t0 = 0.0
+
+    # ----------------------------------------------------------- lifecycle
+    def bind(self, core: EngineCore) -> None:
+        self.core = core
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> None:
+        pass
+
+    def now_ms(self) -> float:
+        return (time.perf_counter() - self._t0) * 1000.0
+
+    def has_inflight(self) -> bool:
+        return self._inflight > 0
+
+    # ---------------------------------------------------------------- time
+    def advance(self, cap_ms: float) -> List[Completion]:
+        while True:
+            timeout_s = (cap_ms - self.now_ms()) / 1000.0
+            try:
+                if timeout_s <= 0:
+                    lane, inst, et, out = self._done_q.get_nowait()
+                else:
+                    lane, inst, et, out = self._done_q.get(timeout=timeout_s)
+            except queue.Empty:
+                return []
+            self._inflight -= 1
+            if lane[0] in self._cancelled_ctx:
+                # ghost completion from a failed context: fail_context
+                # already re-enqueued the instance, and dead contexts never
+                # launch again, so anything arriving on them is stale —
+                # drop its output along with it
+                continue
+            self._job_state[inst.job.job_id] = out
+            return [Completion(lane, inst, et)]
+
+    # ----------------------------------------------------------- execution
+    def _worker(self, lane: tuple, inst: StageInstance) -> None:
+        prof = inst.profile
+        t0 = time.perf_counter()
+        if prof.payload is None:
+            time.sleep(prof.t_alone_ms / 1000.0)     # synthetic stage
+            out = self._job_state.get(inst.job.job_id)
+        else:
+            x = self._job_state.get(inst.job.job_id)
+            if x is None:
+                x = self.input_factory(inst.job)
+            out = prof.payload(x)
+            try:
+                import jax
+                jax.block_until_ready(out)
+            except ImportError:
+                pass
+        et_ms = (time.perf_counter() - t0) * 1000.0
+        self._done_q.put((lane, inst, et_ms, out))
+
+    def launch(self, lane: tuple, inst: StageInstance) -> None:
+        self._inflight += 1
+        threading.Thread(target=self._worker, args=(lane, inst),
+                         daemon=True).start()
+
+    def cancel_ctx(self, ctx_idx: int) -> None:
+        # threads can't be killed; mark the context so their completions
+        # are dropped at harvest (fail_context re-enqueues the instances,
+        # whose .lane is reset — that's the drop signal advance() checks)
+        self._cancelled_ctx.add(ctx_idx)
+
+    def on_job_done(self, job: Job) -> None:
+        self._job_state.pop(job.job_id, None)
+
+    def running_set_changed(self) -> None:
+        pass

@@ -1,0 +1,271 @@
+"""EngineCore: the one drive loop behind every DARIS deployment shape.
+
+Historically the repo had two hand-rolled loops — the discrete-event
+simulator and the wall-clock JAX executor — each re-implementing release,
+dispatch, harvest, and metrics. EngineCore lifts that shared logic into a
+single engine that talks to an ``ExecutionBackend`` (runtime/backend.py):
+the backend owns *time* and *stage execution*, the core owns everything
+the paper calls scheduling — admission (Eq. 11-12), release bookkeeping,
+lane dispatch, MRET-feeding completions, fault/elastic events, metrics.
+
+The loop is event-driven for both backends:
+
+    t_evt = earliest pending timeline event (release / fault / scale-out)
+    completions = backend.advance(min(t_evt, horizon))
+    handle completions, else handle the due event
+    dispatch free lanes; backend.running_set_changed()
+
+``advance`` either returns stage completions that occur strictly before
+the cap (virtual time jumps there; wall-clock time blocks until then) or
+advances time to the cap and returns nothing. Construct via
+``repro.api.DarisServer`` unless you are building a new backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.metrics import RunMetrics, empty_metrics
+from ..core.scheduler import DarisScheduler
+from ..core.task import Job, StageInstance, Task, TaskSpec
+from .arrivals import ArrivalProcess, PeriodicArrival
+
+_seq = itertools.count()
+
+# timeline event kinds; ordering at equal timestamps mirrors the historic
+# simulator heap (releases before faults before scale-outs)
+RELEASE, FAULT, ADD_CTX = 0, 2, 3
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Injectable fault / elastic events (DESIGN.md §7)."""
+    fail_ctx_at: Optional[Tuple[int, float]] = None   # (ctx, t_ms)
+    add_ctx_at: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    """One finished stage execution, reported by a backend."""
+    lane: tuple
+    inst: StageInstance
+    et_ms: float
+
+
+class SubmitHandle:
+    """Outcome tracker for one programmatic ``DarisServer.submit`` call."""
+
+    PENDING, REJECTED, ADMITTED, COMPLETED = ("pending", "rejected",
+                                              "admitted", "completed")
+
+    def __init__(self, task: Task):
+        self.task = task
+        self.status = self.PENDING
+        self.job: Optional[Job] = None
+        self.response_ms: Optional[float] = None
+
+    def __repr__(self) -> str:
+        return f"SubmitHandle({self.task.name}: {self.status})"
+
+
+class EngineCore:
+    """Shared release/dispatch/harvest/metrics loop over a backend."""
+
+    def __init__(self, sched: DarisScheduler, backend, *,
+                 horizon_ms: float,
+                 arrivals: Optional[Dict[int, ArrivalProcess]] = None,
+                 seed: int = 0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 record_decisions: bool = False):
+        self.sched = sched
+        self.backend = backend
+        self.horizon = horizon_ms
+        self.rng = np.random.default_rng(seed)
+        self.metrics = empty_metrics(horizon_ms)
+        self.fault_plan = fault_plan
+        self.decisions: Optional[List[str]] = [] if record_decisions else None
+        # task.index -> arrival process (tasks without one never self-release)
+        self.arrivals: Dict[int, ArrivalProcess] = dict(arrivals or {})
+        self._handles: Dict[int, SubmitHandle] = {}
+        self._timeline: List[tuple] = []   # (t, kind, seq, payload)
+        self._ran = False
+
+    # ------------------------------------------------------------ plumbing
+    def _push(self, t: float, kind: int, payload) -> None:
+        heapq.heappush(self._timeline, (t, kind, next(_seq), payload))
+
+    def _log(self, msg: str) -> None:
+        if self.decisions is not None:
+            self.decisions.append(msg)
+
+    def now_ms(self) -> float:
+        return self.backend.now_ms()
+
+    # ---------------------------------------------------------- public API
+    def submit(self, spec: TaskSpec, at_ms: float = 0.0) -> SubmitHandle:
+        """Register a one-shot job release at ``at_ms`` (before run())."""
+        if self._ran:
+            raise RuntimeError("EngineCore.run() already executed")
+        task = self.sched.add_task(spec)
+        handle = SubmitHandle(task)
+        self._handles[task.index] = handle
+        self._push(at_ms, RELEASE, (task, None))
+        return handle
+
+    def run(self, until_idle: bool = False) -> RunMetrics:
+        if self._ran:
+            raise RuntimeError("EngineCore.run() already executed")
+        self._ran = True
+        self.backend.bind(self)
+        self.backend.start()
+
+        # seed the timeline: first release per task, then injected events
+        for task in self.sched.tasks:
+            proc = self.arrivals.get(task.index)
+            if proc is None:
+                continue
+            t0 = proc.start(task.spec, self.rng)
+            if t0 is not None and t0 <= self.horizon:
+                self._push(t0, RELEASE, (task, proc))
+        fp = self.fault_plan
+        if fp and fp.fail_ctx_at:
+            self._push(fp.fail_ctx_at[1], FAULT, fp.fail_ctx_at[0])
+        if fp and fp.add_ctx_at is not None:
+            self._push(fp.add_ctx_at, ADD_CTX, None)
+
+        while True:
+            if until_idle and self._idle():
+                break          # before advancing time to the horizon
+            t_evt = self._timeline[0][0] if self._timeline else math.inf
+            cap = min(t_evt, self.horizon)
+            completions = self.backend.advance(cap)
+            now = self.backend.now_ms()
+            if completions:
+                for c in completions:
+                    self._on_completion(c)
+            elif (self._timeline and t_evt <= self.horizon
+                  and now >= t_evt - 1e-6):
+                t, kind, _, payload = heapq.heappop(self._timeline)
+                if kind == RELEASE:
+                    self._handle_release(payload[0], payload[1], t)
+                elif kind == FAULT:
+                    self._handle_fault(payload)
+                elif kind == ADD_CTX:
+                    self.sched.add_context(now)
+                    self._log(f"scale-out ctx{len(self.sched.contexts) - 1}")
+            elif now >= self.horizon - _EPS:
+                break
+            elif not self._timeline and not self.backend.has_inflight():
+                break    # nothing can ever happen again
+            self._dispatch()
+            self.backend.running_set_changed()
+
+        self.metrics.migrations = self.sched.migrations
+        for r in self.sched.rejections:
+            self.metrics.rejected[r.priority] += 1
+        self.backend.stop()
+        return self.metrics
+
+    # -------------------------------------------------------- event handlers
+    def _handle_release(self, task: Task, proc: Optional[ArrivalProcess],
+                        sched_t: float) -> None:
+        """``sched_t`` is when this release was *scheduled*; wall-clock
+        backends may observe ``now > sched_t``, and the periodic successor
+        must be anchored to the schedule, not the observation."""
+        now = self.backend.now_ms()
+        job = self.sched.on_release(task, now)
+        if job is None:
+            self._log(f"reject {task.name}")
+            h = self._handles.get(task.index)
+            if h:
+                h.status = SubmitHandle.REJECTED
+        else:
+            self._log(f"admit {task.name} -> ctx{job.ctx}")
+            h = self._handles.get(task.index)
+            if h:
+                h.status = SubmitHandle.ADMITTED
+                h.job = job
+        if proc is not None:
+            nxt, skipped = proc.next_after(sched_t, now)
+            if skipped:
+                self.metrics.skipped_releases += skipped
+            if nxt is not None and nxt <= self.horizon:
+                self._push(nxt, RELEASE, (task, proc))
+
+    def _handle_fault(self, ctx_idx: int) -> None:
+        now = self.backend.now_ms()
+        self.backend.cancel_ctx(ctx_idx)
+        self.sched.fail_context(ctx_idx, now)
+        self.metrics.faults += 1
+        self._log(f"fault ctx{ctx_idx}")
+
+    def _on_completion(self, c: Completion) -> None:
+        now = self.backend.now_ms()
+        job = c.inst.job
+        stage = job.stage_idx
+        self.sched.lanes[c.lane] = None
+        done = self.sched.on_stage_finish(c.inst, now, c.et_ms)
+        self._log(f"finish {job.task.name} s{stage}")
+        if done is None:
+            return
+        self.backend.on_job_done(done)
+        p = done.task.priority
+        self.metrics.completed[p] += 1
+        resp = now - done.release_ms
+        self.metrics.response_ms[p].append(resp)
+        if now > done.abs_deadline_ms:
+            self.metrics.missed[p] += 1
+        h = self._handles.get(done.task.index)
+        if h:
+            h.status = SubmitHandle.COMPLETED
+            h.response_ms = resp
+
+    def _dispatch(self) -> None:
+        now = self.backend.now_ms()
+        for lane in self.sched.free_lanes():
+            inst = self.sched.next_for_lane(lane[0], now)
+            if inst is None:
+                continue
+            inst.start_ms = now
+            inst.work_done = 0.0
+            inst.lane = lane
+            self.sched.lanes[lane] = inst
+            self._log(f"dispatch {inst.task.name} s{inst.job.stage_idx} "
+                      f"lane({lane[0]},{lane[1]})")
+            self.backend.launch(lane, inst)
+
+    def _idle(self) -> bool:
+        if self._timeline or self.backend.has_inflight():
+            return False
+        if any(len(q) for q in self.sched.queues.values()):
+            return False
+        return not any(self.sched.active_jobs[k]
+                       for k in self.sched.active_jobs)
+
+    # ------------------------------------------------------------ snapshot
+    def snapshot(self) -> dict:
+        """Introspection for programmatic clients (live or post-run)."""
+        return {
+            "now_ms": self.backend.now_ms() if self._ran else 0.0,
+            "backend": type(self.backend).__name__,
+            "contexts": [{"index": c.index, "alive": c.alive,
+                          "cap": c.cap, "n_streams": c.n_streams}
+                         for c in self.sched.contexts],
+            "queue_depth": {k: len(q) for k, q in self.sched.queues.items()},
+            "lanes_busy": sum(1 for i in self.sched.lanes.values()
+                              if i is not None),
+            "active_jobs": {k: len(v)
+                            for k, v in self.sched.active_jobs.items()},
+            "completed": dict(self.metrics.completed),
+            "rejected": {p: sum(1 for r in self.sched.rejections
+                                if r.priority == p) for p in (0, 1)},
+            "migrations": self.sched.migrations,
+            "skipped_releases": self.metrics.skipped_releases,
+        }

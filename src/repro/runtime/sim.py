@@ -1,194 +1,59 @@
-"""Discrete-event engine driving DarisScheduler under the contention model.
+"""Deprecated shim: ``SimEngine`` now delegates to the unified runtime.
 
-Processor-sharing fluid simulation: whenever the running set changes (job
-release, stage completion, fault) rates are recomputed and per-lane finish
-events are re-predicted. Finish events are **version-stamped** — a rate
-change bumps the lane's version so stale predictions die in O(1) instead of
-cascading. Stage work carries seeded lognormal noise so MRET has real
-variability to track (paper Fig. 9). Fault / straggler / elastic events are
-injectable (DESIGN.md §7 — fault tolerance built on the staging boundary).
+The discrete-event machinery that used to live here (processor-sharing
+fluid rates, version-stamped finish predictions, lognormal stage noise,
+straggler mitigation, fault/elastic events) moved into the shared
+``EngineCore`` loop (runtime/engine_core.py) driving a ``SimBackend``
+(runtime/backend.py). New code should construct servers through the
+``repro.api`` facade:
+
+    from repro.api import ServerConfig
+    metrics = (ServerConfig.sim().tasks(specs).scheduler_config(cfg)
+               .horizon_ms(6000).seed(0).build().run())
+
+``SimEngine`` and ``FaultPlan`` remain importable from here for one
+release so existing call sites keep working unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import itertools
-import math
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Optional
 
-import numpy as np
-
-from ..core.metrics import RunMetrics, empty_metrics
+from ..core.metrics import RunMetrics
 from ..core.scheduler import DarisScheduler
-from ..core.task import HP, LP, StageInstance, Task
+from .arrivals import PeriodicArrival
+from .backend import SimBackend
+from .engine_core import EngineCore, FaultPlan
 
-_tie = itertools.count()
-
-RELEASE, FINISH, FAULT, ADD_CTX = 0, 1, 2, 3
-
-
-@dataclasses.dataclass
-class FaultPlan:
-    fail_ctx_at: Optional[Tuple[int, float]] = None   # (ctx, t_ms)
-    add_ctx_at: Optional[float] = None
+__all__ = ["SimEngine", "FaultPlan"]
 
 
 class SimEngine:
-    EPS = 1e-6   # ms; snap-to-zero tolerance
+    """Thin deprecated wrapper: EngineCore + SimBackend with the historic
+    constructor signature. Prefer ``repro.api.DarisServer``."""
 
     def __init__(self, sched: DarisScheduler, horizon_ms: float = 20_000.0,
                  seed: int = 0, noise_sigma: float = 0.06,
                  fault_plan: Optional[FaultPlan] = None,
                  phase_offsets: bool = True):
+        warnings.warn(
+            "SimEngine is deprecated; build a server via repro.api."
+            "ServerConfig.sim() instead", DeprecationWarning, stacklevel=2)
+        phase = "random" if phase_offsets else 0.0
+        self.core = EngineCore(
+            sched, SimBackend(noise_sigma=noise_sigma),
+            horizon_ms=horizon_ms, seed=seed, fault_plan=fault_plan,
+            arrivals={t.index: PeriodicArrival(phase_ms=phase)
+                      for t in sched.tasks})
         self.sched = sched
-        self.horizon = horizon_ms
-        self.rng = np.random.default_rng(seed)
-        self.noise_sigma = noise_sigma
-        self.fault_plan = fault_plan
-        self.metrics = empty_metrics(horizon_ms)
-        self.now = 0.0
-        self._heap: List[tuple] = []
-        # lane -> [inst, remaining_ms, rate, version]
-        self.running: Dict[tuple, list] = {}
-        self.phase_offsets = phase_offsets
 
-    def _push(self, t: float, kind: int, payload) -> None:
-        heapq.heappush(self._heap, (t, kind, next(_tie), payload))
+    @property
+    def metrics(self) -> RunMetrics:
+        return self.core.metrics
+
+    @property
+    def now(self) -> float:
+        return self.core.backend.now_ms()
 
     def run(self) -> RunMetrics:
-        for task in self.sched.tasks:
-            offset = (self.rng.uniform(0, task.spec.period_ms)
-                      if self.phase_offsets else 0.0)
-            self._push(offset, RELEASE, task)
-        fp = self.fault_plan
-        if fp and fp.fail_ctx_at:
-            self._push(fp.fail_ctx_at[1], FAULT, fp.fail_ctx_at[0])
-        if fp and fp.add_ctx_at is not None:
-            self._push(fp.add_ctx_at, ADD_CTX, None)
-
-        while self._heap:
-            t, kind, _, payload = heapq.heappop(self._heap)
-            if t > self.horizon:
-                break
-            if kind == FINISH:
-                lane, ver = payload
-                entry = self.running.get(lane)
-                if entry is None or entry[3] != ver:
-                    continue                      # stale prediction
-                self._advance_to(t)
-                self._complete(lane)
-            elif kind == RELEASE:
-                self._advance_to(t)
-                self._handle_release(payload)
-            elif kind == FAULT:
-                self._advance_to(t)
-                self._handle_fault(payload)
-            elif kind == ADD_CTX:
-                self._advance_to(t)
-                self.sched.add_context(self.now)
-            self._dispatch()
-            self._reschedule()
-        self.metrics.migrations = self.sched.migrations
-        for r in self.sched.rejections:
-            self.metrics.rejected[r.priority] += 1
-        return self.metrics
-
-    # ------------------------------------------------------------ plumbing
-    def _advance_to(self, t: float) -> None:
-        dt = t - self.now
-        if dt > 0:
-            for entry in self.running.values():
-                entry[1] = max(entry[1] - entry[2] * dt, 0.0)
-                if entry[1] < self.EPS:
-                    entry[1] = 0.0
-                entry[0].work_done += entry[2] * dt
-        self.now = t
-
-    def _complete(self, lane) -> None:
-        inst, _, _, _ = self.running.pop(lane)
-        self.sched.lanes[lane] = None
-        et = self.now - inst.start_ms
-        done_job = self.sched.on_stage_finish(inst, self.now, et)
-        if done_job is not None:
-            p = done_job.task.priority
-            self.metrics.completed[p] += 1
-            self.metrics.response_ms[p].append(self.now - done_job.release_ms)
-            if self.now > done_job.abs_deadline_ms:
-                self.metrics.missed[p] += 1
-
-    def _handle_release(self, task: Task) -> None:
-        self.sched.on_release(task, self.now)
-        nxt = self.now + task.spec.period_ms
-        if nxt <= self.horizon:
-            self._push(nxt, RELEASE, task)
-
-    def _handle_fault(self, ctx_idx: int) -> None:
-        for lane in list(self.running):
-            if lane[0] == ctx_idx:
-                del self.running[lane]
-        self.sched.fail_context(ctx_idx, self.now)
-        self.metrics.faults += 1
-
-    def _dispatch(self) -> None:
-        for lane in self.sched.free_lanes():
-            inst = self.sched.next_for_lane(lane[0], self.now)
-            if inst is None:
-                continue
-            prof = inst.profile
-            noise = math.exp(self.rng.normal(0.0, self.noise_sigma))
-            work = (prof.t_alone_ms + prof.overhead_ms) * noise
-            inst.start_ms = self.now
-            inst.work_done = 0.0
-            inst.lane = lane
-            self.sched.lanes[lane] = inst
-            # version must be globally unique: a reset-to-0 counter lets a
-            # stale FINISH from the lane's previous occupant fire early
-            self.running[lane] = [inst, work, 0.0, next(_tie)]
-
-    def _reschedule(self) -> None:
-        """Recompute all rates; re-predict and version-stamp finishes.
-        Also runs straggler mitigation (beyond-paper, DESIGN.md §7): a stage
-        whose projected completion exceeds kappa x its MRET is killed and
-        re-enqueued — the Eq. 12 machinery then places it on the least-
-        loaded context. Stage granularity bounds the lost work."""
-        if not self.running:
-            return
-        kappa = self.sched.cfg.straggler_kappa
-        if kappa:
-            for lane, entry in list(self.running.items()):
-                inst = entry[0]
-                if entry[2] <= 0:
-                    continue
-                projected = (self.now - inst.start_ms) + entry[1] / max(entry[2], 1e-6)
-                mret = inst.task.mret.stage_mret(inst.job.stage_idx)
-                floor = 4.0 * (inst.profile.t_alone_ms + inst.profile.overhead_ms)
-                if projected > max(kappa * mret, floor) and len(self.running) > 1:
-                    del self.running[lane]
-                    self.sched.lanes[lane] = None
-                    inst.work_done = 0.0
-                    inst.lane = None
-                    # re-enqueue on the least-backlogged live context
-                    # (zero-delay migration at the stage boundary)
-                    cands = [c.index for c in self.sched.contexts if c.alive]
-                    tgt = min(cands,
-                              key=lambda k: self.sched.predicted_finish(k, self.now))
-                    old = inst.job.ctx
-                    if inst.job in self.sched.active_jobs.get(old, []):
-                        self.sched.active_jobs[old].remove(inst.job)
-                        self.sched.active_jobs[tgt].append(inst.job)
-                    inst.job.ctx = tgt
-                    self.sched.queues[tgt].push(inst)
-                    self.metrics.stragglers += 1
-            self._dispatch()
-        ctx_active: Dict[int, int] = {}
-        for lane in self.running:
-            ctx_active[lane[0]] = ctx_active.get(lane[0], 0) + 1
-        entries = list(self.running.items())
-        rates = self.sched.contention.rates([
-            (lane, e[0].profile, self.sched.contexts[lane[0]].cap,
-             ctx_active[lane[0]]) for lane, e in entries])
-        for (lane, entry), rate in zip(entries, rates):
-            entry[2] = max(rate, 1e-6)
-            entry[3] = next(_tie)
-            eta = self.now + entry[1] / entry[2]
-            self._push(eta, FINISH, (lane, entry[3]))
+        return self.core.run()

@@ -1,26 +1,37 @@
-"""Real-execution serving engine: DARIS over jitted stage functions.
+"""Deprecated shim: ``RealtimeEngine`` now delegates to the unified runtime.
 
-The same ``DarisScheduler`` that drives the simulator here dispatches real
-XLA computations on wall-clock time: worker threads own lanes (XLA releases
-the GIL, so lanes genuinely overlap), stage completions feed MRET with
-*measured* times, and the admission/migration/priority machinery runs
-unmodified. This is the laptop-scale validation path (DESIGN.md §2); on a
-pod each lane maps to a sub-mesh program queue instead of a thread.
+Real execution (worker threads running jitted stage functions on wall
+clock, measured times feeding MRET) lives in ``RealtimeBackend``
+(runtime/backend.py), driven by the same ``EngineCore`` loop as the
+simulator. New code should construct servers through the ``repro.api``
+facade:
+
+    from repro.api import ServerConfig
+    metrics = (ServerConfig.realtime().tasks(specs).contexts(2)
+               .horizon_ms(4000).realtime_io(input_hw=32).build().run())
+
+``staged_cnn_taskspec`` (AFET-style calibration of staged CNNs into
+TaskSpecs with jitted payloads) still lives here; ``RealtimeEngine``
+remains importable for one release.
 """
 from __future__ import annotations
 
-import queue
-import threading
 import time
-from typing import Callable, Dict, List, Optional
+import warnings
+from typing import Callable, List
 
 import jax
 import numpy as np
 
-from ..core.metrics import RunMetrics, empty_metrics
+from ..core.metrics import RunMetrics
 from ..core.scheduler import DarisScheduler
-from ..core.task import HP, LP, StageProfile, TaskSpec
-from ..models.cnn import BUILDERS, StagedCNN
+from ..core.task import StageProfile, TaskSpec
+from ..models.cnn import StagedCNN
+from ..runtime.arrivals import PeriodicArrival
+from ..runtime.backend import RealtimeBackend
+from ..runtime.engine_core import EngineCore
+
+__all__ = ["RealtimeEngine", "staged_cnn_taskspec"]
 
 
 def staged_cnn_taskspec(model: StagedCNN, *, priority: int, jps: float,
@@ -56,79 +67,25 @@ def staged_cnn_taskspec(model: StagedCNN, *, priority: int, jps: float,
 
 
 class RealtimeEngine:
-    """Wall-clock event loop + one worker thread per lane."""
+    """Thin deprecated wrapper: EngineCore + RealtimeBackend with the
+    historic constructor signature. Prefer ``repro.api.DarisServer``."""
 
     def __init__(self, sched: DarisScheduler, horizon_ms: float,
                  input_hw: int = 64, batch: int = 1):
+        warnings.warn(
+            "RealtimeEngine is deprecated; build a server via repro.api."
+            "ServerConfig.realtime() instead", DeprecationWarning,
+            stacklevel=2)
+        self.core = EngineCore(
+            sched, RealtimeBackend(input_hw=input_hw, batch=batch),
+            horizon_ms=horizon_ms,
+            arrivals={t.index: PeriodicArrival(phase_ms=0.0)
+                      for t in sched.tasks})
         self.sched = sched
-        self.horizon = horizon_ms / 1000.0
-        self.input_hw = input_hw
-        self.batch = batch
-        self.metrics = empty_metrics(horizon_ms)
-        self._lock = threading.Lock()
-        self._done_q: "queue.Queue" = queue.Queue()
-        # per-job intermediate state (activations between stages)
-        self._job_state: Dict[int, object] = {}
 
-    def _now_ms(self) -> float:
-        return (time.perf_counter() - self._t0) * 1000.0
-
-    def _worker(self, lane, inst):
-        prof = inst.profile
-        x = self._job_state.get(inst.job.job_id)
-        if x is None:
-            x = jax.device_put(np.zeros(
-                (self.batch, self.input_hw, self.input_hw, 3), np.float32))
-        t0 = time.perf_counter()
-        out = prof.payload(x)
-        jax.block_until_ready(out)
-        et_ms = (time.perf_counter() - t0) * 1000.0
-        self._job_state[inst.job.job_id] = out
-        self._done_q.put((lane, inst, et_ms))
-
-    def _dispatch_free_lanes(self):
-        with self._lock:
-            for lane in self.sched.free_lanes():
-                inst = self.sched.next_for_lane(lane[0], self._now_ms())
-                if inst is None:
-                    continue
-                inst.start_ms = self._now_ms()
-                self.sched.lanes[lane] = inst
-                threading.Thread(target=self._worker, args=(lane, inst),
-                                 daemon=True).start()
+    @property
+    def metrics(self) -> RunMetrics:
+        return self.core.metrics
 
     def run(self) -> RunMetrics:
-        self._t0 = time.perf_counter()
-        next_release = {t.index: 0.0 for t in self.sched.tasks}
-        while True:
-            now = self._now_ms()
-            if now >= self.horizon * 1000.0:
-                break
-            # periodic releases
-            with self._lock:
-                for t in self.sched.tasks:
-                    if now >= next_release[t.index]:
-                        self.sched.on_release(t, now)
-                        next_release[t.index] += t.spec.period_ms
-            self._dispatch_free_lanes()
-            # harvest completions
-            try:
-                lane, inst, et = self._done_q.get(timeout=0.002)
-            except queue.Empty:
-                continue
-            with self._lock:
-                self.sched.lanes[lane] = None
-                done = self.sched.on_stage_finish(inst, self._now_ms(), et)
-            if done is not None:
-                self._job_state.pop(done.job_id, None)
-                p = done.task.priority
-                self.metrics.completed[p] += 1
-                resp = self._now_ms() - done.release_ms
-                self.metrics.response_ms[p].append(resp)
-                if self._now_ms() > done.abs_deadline_ms:
-                    self.metrics.missed[p] += 1
-            self._dispatch_free_lanes()
-        self.metrics.migrations = self.sched.migrations
-        for r in self.sched.rejections:
-            self.metrics.rejected[r.priority] += 1
-        return self.metrics
+        return self.core.run()
