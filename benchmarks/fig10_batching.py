@@ -1,34 +1,59 @@
-"""Paper Fig 10 / §VI-H: batching + DARIS (batch 4/2/8 for RN18/UNet/IncV3).
+"""Paper Fig 10 / §VI-H: DARIS + dynamic batching (batch 4/2/8 for
+RN18/UNet/IncV3).
 
-Key paper observations to reproduce: fewer parallel tasks needed to exceed
-the upper baseline; InceptionV3 gains >= 55% over unbatched DARIS; UNet DMR
-drops under 0.5%.
+Jobs arrive at the paper's UNSCALED Table II rates and the scheduler forms
+batches itself: queued releases of the same task coalesce into batched
+jobs under the earliest member's virtual deadline (core/batching.py),
+instead of callers pre-scaling arrival rates — so this benchmark actually
+exercises runtime batch formation, which is what §VI-H measures.
+
+Key paper observations to reproduce: InceptionV3 gains >= 55% over
+unbatched DARIS; per-DNN gain ordering follows Table I
+(InceptionV3 > ResNet18 > UNet, narrow DNNs gain most).
 """
 from __future__ import annotations
 
+from repro.api import BatchPolicy
 from repro.serving.profiles import TABLE1
 from repro.serving.requests import table2_taskset
 
-from .common import cache_json, load_json, mps_cfg, run_sim
+from .common import HORIZON_MS, cache_json, load_json, mps_cfg, run_sim
 
 BATCH = {"resnet18": 4, "unet": 2, "inceptionv3": 8}
 
 
-def run() -> dict:
+def run(fast: bool = False) -> dict:
     cached = load_json("fig10")
-    if cached:
+    # reuse the cache only if it is from this benchmark format AND the
+    # same fidelity: pre-rewrite caches lack the dynamic-path fields, and
+    # a --fast run's trimmed sweep must never masquerade as the full one
+    if (cached and cached.get("_meta", {}).get("fast") == fast
+            and all("batching_gain" in b for k, b in cached.items()
+                    if k != "_meta")):
         return cached
-    out = {}
+    horizon = 2500.0 if fast else HORIZON_MS
+    ncs = (2, 6) if fast else (1, 2, 4, 6, 8)
+    out = {"_meta": {"fast": fast}}
     for dnn, b in BATCH.items():
         rows = []
-        for nc in (1, 2, 4, 6, 8):
-            # batched jobs arrive at rate/b (each carries b inputs)
-            specs = table2_taskset(dnn, batch=b, load_scale=1.0 / b)
-            s = run_sim(specs, mps_cfg(max(nc, 1), float(max(nc, 1))))
-            s["jps_inputs"] = s["jps"] * b
-            s["jps_hp_inputs"] = s["jps_hp"] * b
-            rows.append(dict(nc=nc, batch=b, **s))
-        out[dnn] = {"rows": rows, "upper_baseline": TABLE1[dnn][1]}
+        for nc in ncs:
+            cfg = mps_cfg(max(nc, 1), float(max(nc, 1)))
+            base = run_sim(table2_taskset(dnn), cfg, horizon_ms=horizon)
+            cfg_b = mps_cfg(max(nc, 1), float(max(nc, 1)),
+                            batch_policy=BatchPolicy(max_batch=b))
+            bat = run_sim(table2_taskset(dnn), cfg_b, horizon_ms=horizon)
+            rows.append(dict(nc=nc, batch=b,
+                             unbatched_jps_inputs=base["jps_inputs"],
+                             unbatched_dmr_lp=base["dmr_lp"], **bat))
+        best = max(rows, key=lambda r: r["jps_inputs"])
+        best_unbatched = max(r["unbatched_jps_inputs"] for r in rows)
+        out[dnn] = {
+            "rows": rows,
+            "upper_baseline": TABLE1[dnn][1],
+            "best_jps_inputs": best["jps_inputs"],
+            "best_unbatched_jps_inputs": best_unbatched,
+            "batching_gain": best["jps_inputs"] / max(best_unbatched, 1e-9),
+        }
     cache_json("fig10", out)
     return out
 
@@ -36,8 +61,13 @@ def run() -> dict:
 def csv_lines(out) -> list:
     lines = []
     for dnn, blob in out.items():
+        if dnn == "_meta":
+            continue
         best = max(blob["rows"], key=lambda r: r["jps_inputs"])
         lines.append(f"fig10/{dnn}_batched_best,{best['wall_s']*1e6:.0f},"
                      f"{best['jps_inputs']:.0f}")
+        lines.append(f"fig10/{dnn}_batching_gain,0,"
+                     f"{blob['batching_gain']:.3f}")
         lines.append(f"fig10/{dnn}_batched_dmr_lp,0,{best['dmr_lp']:.4f}")
+        lines.append(f"fig10/{dnn}_mean_batch,0,{best['mean_batch']:.2f}")
     return lines

@@ -28,7 +28,8 @@ def main() -> None:
         ("fig7", lambda: fig7_mixed.csv_lines(fig7_mixed.run())),
         ("fig8", lambda: fig8_ablation.csv_lines(fig8_ablation.run())),
         ("fig9", lambda: fig9_mret.csv_lines(fig9_mret.run())),
-        ("fig10", lambda: fig10_batching.csv_lines(fig10_batching.run())),
+        ("fig10", lambda: fig10_batching.csv_lines(
+            fig10_batching.run(fast=args.fast))),
         ("fig11", lambda: fig11_overload.csv_lines(fig11_overload.run())),
         ("baselines", lambda: baselines.csv_lines(baselines.run())),
     ]

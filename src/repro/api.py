@@ -6,7 +6,8 @@ facade over it. A ``DarisServer`` is built from a fluent ``ServerConfig``
 and drives the shared ``EngineCore`` loop against a pluggable
 ``ExecutionBackend`` — the calibrated fluid simulator or the threaded
 real-JAX executor — with first-class arrival processes (periodic, Poisson
-open-loop, recorded trace) and injectable fault / scale-out events.
+open-loop, recorded trace), dynamic deadline-aware batching
+(``.batching(max_batch)``), and injectable fault / scale-out events.
 
     from repro.api import ServerConfig
     from repro.serving.profiles import device
@@ -36,6 +37,7 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
+from .core.batching import BatchPolicy
 from .core.metrics import RunMetrics
 from .core.scheduler import DarisScheduler, SchedulerConfig
 from .core.task import HP, LP, StageProfile, TaskSpec
@@ -51,7 +53,7 @@ __all__ = [
     "ArrivalProcess", "PeriodicArrival", "PoissonArrival", "TraceArrival",
     "ExecutionBackend", "SimBackend", "RealtimeBackend",
     "SchedulerConfig", "DeviceModel", "TaskSpec", "StageProfile",
-    "HP", "LP", "RunMetrics", "EngineCore", "Completion",
+    "BatchPolicy", "HP", "LP", "RunMetrics", "EngineCore", "Completion",
 ]
 
 SIM, REALTIME = "sim", "realtime"
@@ -78,6 +80,7 @@ class ServerConfig:
         self._arrivals: Dict[str, ArrivalProcess] = {}
         self._open_loop: Optional[tuple] = None   # (rate_jps, seed)
         self._fault_plan: Optional[FaultPlan] = None
+        self._batch_policy: Optional[BatchPolicy] = None
         self._record_decisions = False
         self._input_hw = 64
         self._batch = 1
@@ -157,6 +160,21 @@ class ServerConfig:
         self._device = dm
         return self
 
+    def batching(self, max_batch: int = 8,
+                 max_wait_ms: Optional[float] = None,
+                 scope: str = "model") -> "ServerConfig":
+        """Dynamic deadline-aware batching (core/batching.py): while a job
+        waits at its first stage, later releases of the same model (or the
+        same task, ``scope="task"``) coalesce into it — up to ``max_batch``
+        inputs, bounded by the earliest member's virtual deadline (and
+        optionally ``max_wait_ms``), with admission charging the batched
+        utilization. Composes with any backend/policy; leave unset for the
+        paper's unbatched scheduler."""
+        self._batch_policy = BatchPolicy(max_batch=max_batch,
+                                         max_wait_ms=max_wait_ms,
+                                         scope=scope)
+        return self
+
     # --------------------------------------------------------------- run
     def horizon_ms(self, ms: float) -> "ServerConfig":
         self._horizon_ms = ms
@@ -203,7 +221,10 @@ class ServerConfig:
 
     # --------------------------------------------------------------- build
     def _scheduler_config(self) -> SchedulerConfig:
-        return self._sched_cfg or SchedulerConfig(**self._sched_kw)
+        cfg = self._sched_cfg or SchedulerConfig(**self._sched_kw)
+        if self._batch_policy is not None:
+            cfg = dataclasses.replace(cfg, batch_policy=self._batch_policy)
+        return cfg
 
     def _validate(self) -> None:
         if self._horizon_ms <= 0:

@@ -2,7 +2,16 @@
 
 DMR = missed deadlines / accepted jobs, per priority class. A job that
 finishes after its deadline still completes (soft real-time); rejected
-jobs are counted separately (admission).
+jobs are counted separately (admission). Jobs still queued or in flight
+when the run ends are swept into ``unfinished`` — and into ``missed`` if
+already past their deadline — so overload DMR is not understated by work
+the horizon cut off.
+
+Dynamic batching (core/batching.py) makes jobs and inputs distinct units:
+``completed`` counts jobs, ``completed_inputs`` counts the inputs they
+carried, and ``jps_inputs`` is the throughput figure comparable to the
+paper's batched baselines. ``batch_hist`` maps batch size -> number of
+completed jobs of that size (all-1 when batching is off).
 """
 from __future__ import annotations
 
@@ -27,6 +36,14 @@ class RunMetrics:
     # periodic releases skipped because the drive loop stalled past whole
     # periods (wall-clock backends under load; see PeriodicArrival)
     skipped_releases: int = 0
+    # jobs still queued/in-flight when the run ended (per priority)
+    unfinished: Dict[int, int] = dataclasses.field(
+        default_factory=lambda: {HP: 0, LP: 0})
+    # inputs carried by completed jobs (== completed when batching is off)
+    completed_inputs: Dict[int, int] = dataclasses.field(
+        default_factory=lambda: {HP: 0, LP: 0})
+    # batch size -> completed jobs of that size
+    batch_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def jps(self) -> float:
@@ -35,9 +52,25 @@ class RunMetrics:
     def jps_by(self, p: int) -> float:
         return self.completed[p] / (self.horizon_ms / 1000.0)
 
+    @property
+    def jps_inputs(self) -> float:
+        """Input throughput — the number comparable to batched baselines."""
+        return (sum(self.completed_inputs.values())
+                / (self.horizon_ms / 1000.0))
+
+    def jps_inputs_by(self, p: int) -> float:
+        return self.completed_inputs[p] / (self.horizon_ms / 1000.0)
+
     def dmr(self, p: int) -> float:
-        acc = self.completed[p]
+        acc = self.completed[p] + self.unfinished[p]
         return self.missed[p] / acc if acc else 0.0
+
+    def mean_batch(self) -> float:
+        """Mean batch size over completed jobs (1.0 when batching is off)."""
+        jobs = sum(self.batch_hist.values())
+        if not jobs:
+            return 0.0
+        return sum(b * n for b, n in self.batch_hist.items()) / jobs
 
     def resp_stats(self, p: int) -> Dict[str, float]:
         r = self.response_ms[p]
@@ -54,9 +87,16 @@ class RunMetrics:
         return {
             "jps": self.jps,
             "jps_hp": self.jps_by(HP), "jps_lp": self.jps_by(LP),
+            "jps_inputs": self.jps_inputs,
+            "jps_hp_inputs": self.jps_inputs_by(HP),
+            "jps_lp_inputs": self.jps_inputs_by(LP),
             "dmr_hp": self.dmr(HP), "dmr_lp": self.dmr(LP),
             "rejected_hp": self.rejected[HP], "rejected_lp": self.rejected[LP],
+            "unfinished_hp": self.unfinished[HP],
+            "unfinished_lp": self.unfinished[LP],
             "resp_hp": self.resp_stats(HP), "resp_lp": self.resp_stats(LP),
+            "mean_batch": self.mean_batch(),
+            "batch_hist": dict(sorted(self.batch_hist.items())),
             "migrations": self.migrations, "stragglers": self.stragglers,
             "faults": self.faults, "skipped_releases": self.skipped_releases,
         }

@@ -16,9 +16,11 @@ MPS = N_c x 1; MPS+STR = N_c x N_s. Oversubscription per Eq. 9.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
-from ..runtime.contention import ContentionModel, DeviceModel
+from ..runtime.contention import ContentionModel, DeviceModel, batch_cost
+from .batching import BatchCoalescer, BatchPolicy
 from .mret import TaskMret
 from .partition import Context, make_contexts
 from .stage_queue import QueueConfig, StageQueue
@@ -37,6 +39,8 @@ class SchedulerConfig:
     no_prior: bool = False
     no_fixed: bool = False
     straggler_kappa: float = 3.0      # beyond-paper: straggler threshold
+    batch_policy: Optional[BatchPolicy] = None   # dynamic batching (off =
+                                                 # pre-batching behavior)
 
     @property
     def queue_cfg(self) -> QueueConfig:
@@ -74,6 +78,13 @@ class DarisScheduler:
                                                   for c in self.contexts}
         self.rejections: List[Rejection] = []
         self.migrations = 0
+        self.coalesced = 0            # releases absorbed into batched jobs
+        self._coalescer = (BatchCoalescer(cfg.batch_policy)
+                           if cfg.batch_policy is not None else None)
+        # next time the drive loop is guaranteed to call dispatch again
+        # (EngineCore refreshes it every iteration); inf = no pending
+        # events, so batch heads must never be held back
+        self.next_wake_ms: float = math.inf
         self._offline_phase()
 
     # ------------------------------------------------------------- offline
@@ -134,13 +145,31 @@ class DarisScheduler:
         return task
 
     # ----------------------------------------------------- utilization (Eq. 4-7)
+    @staticmethod
+    def spec_batch_cost(spec: TaskSpec, n_inputs: int) -> float:
+        """Device-time multiplier of a b-input job of ``spec`` vs a single
+        release: per-stage b / g(b), weighted by stage work (stages may
+        carry different batch gains). Exactly 1.0 for b = 1, so the
+        paper's utilization math is unchanged when batching is off."""
+        if n_inputs <= 1:
+            return 1.0
+        tot = sum(s.t_alone_ms for s in spec.stages)
+        if tot <= 0:
+            return batch_cost(spec.stages[0], n_inputs)
+        return sum(s.t_alone_ms * batch_cost(s, n_inputs)
+                   for s in spec.stages) / tot
+
+    @classmethod
+    def job_cost(cls, job: Job) -> float:
+        return cls.spec_batch_cost(job.task.spec, job.n_inputs)
+
     def util_hp_total(self, k: int, now: float) -> float:
         return sum(t.utilization(now) for t in self.tasks
                    if t.ctx == k and t.priority == HP)
 
     def util_lp_active(self, k: int, now: float) -> float:
-        return sum(j.task.utilization(now) for j in self.active_jobs[k]
-                   if j.task.priority == LP)
+        return sum(j.task.utilization(now) * self.job_cost(j)
+                   for j in self.active_jobs[k] if j.task.priority == LP)
 
     def remaining_util(self, k: int, now: float) -> float:
         """Eq. 11: U_r = N_s - U_h,t."""
@@ -155,20 +184,28 @@ class DarisScheduler:
                 < self.remaining_util(k, now))
 
     def predicted_finish(self, k: int, now: float) -> float:
-        """Backlog-based earliest-finish estimate for migration targets."""
+        """Backlog-based earliest-finish estimate for migration targets.
+        Batched stages cost b/g(b) x their normalized MRET, here and in
+        ``StageQueue.backlog_ms``."""
         ctx = self.contexts[k]
         running = [i for (c, _), i in self.lanes.items()
                    if c == k and i is not None]
         rem = 0.0
         for inst in running:
-            mret = inst.task.mret.stage_mret(inst.job.stage_idx)
+            mret = (inst.task.mret.stage_mret(inst.job.stage_idx)
+                    * batch_cost(inst.profile, inst.job.n_inputs))
             rem += max(mret - inst.work_done, 0.0)
         rem += self.queues[k].backlog_ms()
         return now + rem / max(ctx.n_streams, 1)
 
     # --------------------------------------------------------------- online
     def on_release(self, task: Task, now: float) -> Optional[Job]:
-        """Admission test + (possibly migrated) enqueue. None = rejected."""
+        """Coalesce into an open batch head (if policy allows), else
+        admission test + (possibly migrated) enqueue. None = rejected."""
+        if self._coalescer is not None:
+            head = self._try_coalesce(task, now)
+            if head is not None:
+                return head
         job = Job(task=task, release_ms=now)
         needs_test = task.priority == LP or self.cfg.overload_hpa
         k = task.ctx
@@ -186,7 +223,66 @@ class DarisScheduler:
                 self.migrations += 1  # simply enqueues on the new partition)
         job.ctx = k
         self.active_jobs[k].append(job)
-        self._enqueue_stage(job, now)
+        inst = self._enqueue_stage(job, now)
+        if self._coalescer is not None:
+            self._coalescer.register(task, inst)
+        return job
+
+    def _try_coalesce(self, task: Task, now: float) -> Optional[Job]:
+        """Join this release onto its group's open batch head if the
+        policy, the head's virtual deadline, and admission (Eq. 12) all
+        allow it. Returns the (grown) head job, or None to fall through
+        to the normal release path."""
+        pol = self._coalescer.policy
+        inst = self._coalescer.head(task)
+        if inst is None:
+            return None
+        job = inst.job
+        if inst.lane is not None or job.stage_idx != 0:
+            self._coalescer.close(task)          # stale head: already runs
+            return None
+        if task.fixed_ctx and job.ctx != task.ctx:
+            # an HP task's context is fixed (Algorithm 1): its inputs may
+            # only ride batches executing on its own partition — Eq. 11
+            # charges HP load by task.ctx, so cross-context joins would
+            # execute work the admission math attributes elsewhere
+            return None
+        if job.n_inputs >= pol.max_batch:
+            self._coalescer.close(task)          # full: seal the batch
+            return None
+        if (pol.max_wait_ms is not None
+                and now - job.release_ms > pol.max_wait_ms):
+            self._coalescer.close(task)
+            return None
+        # slack bound: the enlarged batch must still be predicted to meet
+        # the earliest member's stage-0 virtual deadline — unless the head
+        # already cannot, in which case waiting is free (throughput mode).
+        # The head's task owns the deadline, so its profile/MRET govern
+        # (identical to the joiner's under scope="task"; same-model under
+        # scope="model").
+        prof = job.task.spec.stages[0]
+        mret0 = job.task.mret.stage_mret(0)
+        cost_now = batch_cost(prof, job.n_inputs)
+        cost_join = batch_cost(prof, job.n_inputs + 1)
+        fits = now + mret0 * cost_join <= inst.virtual_deadline_ms
+        late_anyway = now + mret0 * cost_now > inst.virtual_deadline_ms
+        if not fits and not late_anyway:
+            return None
+        # admission charges the *incremental* batched utilization (Eq. 12)
+        # — job-level (work-weighted over stages), unlike the stage-0
+        # costs above which predict stage-0 completion only
+        if task.priority == LP or self.cfg.overload_hpa:
+            du = task.utilization(now) * (
+                self.spec_batch_cost(job.task.spec, job.n_inputs + 1)
+                - self.spec_batch_cost(job.task.spec, job.n_inputs))
+            k = job.ctx
+            if (not self.contexts[k].alive
+                    or self.util_lp_active(k, now) + du
+                    >= self.remaining_util(k, now)):
+                return None
+        job.extra_release_ms.append(now)
+        job.extra_member_idx.append(task.index)
+        self.coalesced += 1
         return job
 
     def _enqueue_stage(self, job: Job, now: float) -> StageInstance:
@@ -199,9 +295,15 @@ class DarisScheduler:
 
     def on_stage_finish(self, inst: StageInstance, now: float,
                         et_ms: float) -> Optional[Job]:
-        """MRET update + vdl bookkeeping. Returns the job if it completed."""
+        """MRET update + vdl bookkeeping. Returns the job if it completed.
+        Batched executions are normalized back to single-input time before
+        feeding MRET — by the finished stage's own cost, matching the
+        backend's per-stage work scaling — so Eq. 1-2 keep their
+        per-release semantics (and the utilization/vdl math built on
+        them) whatever the batch size."""
         job = inst.job
-        job.task.mret.observe(job.stage_idx, et_ms)
+        stage_cost = batch_cost(job.stage_profile(), job.n_inputs)
+        job.task.mret.observe(job.stage_idx, et_ms / stage_cost)
         missed_vdl = now > inst.virtual_deadline_ms
         if job.is_last_stage():
             job.finish_ms = now
@@ -213,7 +315,41 @@ class DarisScheduler:
         return None
 
     def next_for_lane(self, ctx_idx: int, now: float) -> Optional[StageInstance]:
-        return self.queues[ctx_idx].pop()
+        if self._coalescer is None:
+            return self.queues[ctx_idx].pop()
+        # lazy dispatch (D-STACK-style): a growable batch head stays queued
+        # until its latest start time, as long as the drive loop will wake
+        # us again before that — work behind it dispatches meanwhile
+        q = self.queues[ctx_idx]
+        held: List[StageInstance] = []
+        inst = q.pop()
+        while inst is not None and self._should_hold(inst, now):
+            held.append(inst)
+            inst = q.pop()
+        for h in held:
+            q.push(h)
+        if inst is not None:
+            self._coalescer.on_pop(inst)     # dispatch seals the batch
+        return inst
+
+    def _should_hold(self, inst: StageInstance, now: float) -> bool:
+        """Hold a growable stage-0 batch head iff the engine's next
+        wake-up still leaves time to dispatch it within its virtual
+        deadline (with its current batch size)."""
+        job = inst.job
+        pol = self._coalescer.policy
+        if job.stage_idx != 0 or self._coalescer.head(job.task) is not inst:
+            return False
+        if job.n_inputs >= pol.max_batch:
+            return False
+        if (pol.max_wait_ms is not None
+                and self.next_wake_ms - job.release_ms > pol.max_wait_ms):
+            return False
+        prof = job.task.spec.stages[0]
+        mret0 = job.task.mret.stage_mret(0)
+        latest_start = (inst.virtual_deadline_ms
+                        - mret0 * batch_cost(prof, job.n_inputs))
+        return self.next_wake_ms <= latest_start
 
     def free_lanes(self) -> List[tuple]:
         return [lane for lane, inst in self.lanes.items()
@@ -234,11 +370,18 @@ class DarisScheduler:
             raise RuntimeError("all contexts failed")
         util = {a: self.util_hp_total(a, now) + self.util_lp_active(a, now)
                 for a in alive}
-        for t in self.tasks:
-            if t.ctx == k:
-                tgt = min(util, key=util.get)
-                t.ctx = tgt
-                util[tgt] += t.utilization(now)
+        # Algorithm 1 re-run: HP first (descending utilization), then LP —
+        # an LP task must never claim the min-utilization survivor ahead
+        # of an HP task (mirrors _offline_phase)
+        orphaned = [t for t in self.tasks if t.ctx == k]
+        ordered = (sorted([t for t in orphaned if t.priority == HP],
+                          key=lambda t: -t.utilization(now))
+                   + sorted([t for t in orphaned if t.priority == LP],
+                            key=lambda t: -t.utilization(now)))
+        for t in ordered:
+            tgt = min(util, key=util.get)
+            t.ctx = tgt
+            util[tgt] += t.utilization(now)
         requeued = []
         for inst in orphans:
             job = inst.job

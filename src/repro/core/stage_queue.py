@@ -14,6 +14,7 @@ import heapq
 import itertools
 from typing import Optional
 
+from ..runtime.contention import batch_cost
 from .task import HP, StageInstance
 
 _seq = itertools.count()
@@ -28,8 +29,6 @@ class QueueConfig:
 
 def stage_level(inst: StageInstance, qcfg: QueueConfig) -> int:
     hp_bit = 0 if (inst.task.priority == HP or qcfg.no_fixed) else 1
-    if qcfg.no_fixed:
-        hp_bit = 0
     last_bit = 0 if (inst.job.is_last_stage() and not qcfg.no_last) else 1
     prior_bit = 0 if (inst.job.vdl_missed_prev and not qcfg.no_prior) else 1
     return hp_bit * 4 + last_bit * 2 + prior_bit
@@ -65,8 +64,10 @@ class StageQueue:
         return items
 
     def backlog_ms(self) -> float:
-        """Sum of MRET of queued stages (migration target estimation)."""
+        """Sum of MRET of queued stages (migration target estimation);
+        batched stages cost b/g(b) x their normalized MRET."""
         total = 0.0
         for _, inst in self._heap:
-            total += inst.task.mret.stage_mret(inst.job.stage_idx)
+            total += (inst.task.mret.stage_mret(inst.job.stage_idx)
+                      * batch_cost(inst.profile, inst.job.n_inputs))
         return total

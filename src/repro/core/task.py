@@ -29,6 +29,8 @@ class StageProfile:
     mem_frac: float            # memory-bandwidth-bound fraction
     overhead_ms: float = 0.05  # dispatch/sync overhead (staging cost)
     payload: Optional[object] = None   # real-mode callable
+    batch_gain: float = 1.0    # asymptotic batching speedup g_inf (Table I);
+                               # 1.0 = batching scales work linearly
 
 
 @dataclasses.dataclass
@@ -74,7 +76,15 @@ class Task:
 
 @dataclasses.dataclass
 class Job:
-    """One periodic release of a task."""
+    """One release of a task — or, under dynamic batching, one *batched*
+    release: later releases of the same task that coalesced into this job
+    (core/batching.py) append their timestamps to ``extra_release_ms`` and
+    the job executes each stage once over ``n_inputs`` inputs.
+
+    ``release_ms`` is always the EARLIEST member's release: the batched
+    job inherits that member's absolute deadline and virtual-deadline
+    anchoring, so batching can only ever tighten, never relax, the
+    deadline the scheduler works against."""
     task: Task
     release_ms: float
     job_id: int = dataclasses.field(default_factory=lambda: next(_job_counter))
@@ -83,6 +93,21 @@ class Job:
     start_ms: Optional[float] = None
     finish_ms: Optional[float] = None
     vdl_missed_prev: bool = False     # did the previous stage miss its vdl?
+    extra_release_ms: List[float] = dataclasses.field(default_factory=list)
+    # task.index of each extra member, in lockstep with extra_release_ms
+    # (scope="model" batches span tasks; completion must reach each
+    # member's own handle)
+    extra_member_idx: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_inputs(self) -> int:
+        return 1 + len(self.extra_release_ms)
+
+    @property
+    def release_times(self) -> List[float]:
+        """Per-input release timestamps (earliest first) — each input's
+        response time is measured from its own release."""
+        return [self.release_ms, *self.extra_release_ms]
 
     @property
     def abs_deadline_ms(self) -> float:

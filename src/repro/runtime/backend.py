@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Protocol
 import numpy as np
 
 from ..core.task import Job, StageInstance
+from .contention import batch_cost, batched_stage_ms
 from .engine_core import Completion, EngineCore
 
 _tie = itertools.count()
@@ -120,11 +121,17 @@ class SimBackend:
     # ----------------------------------------------------------- execution
     def launch(self, lane: tuple, inst: StageInstance) -> None:
         prof = inst.profile
+        b = inst.job.n_inputs
         noise = math.exp(self.rng.normal(0.0, self.noise_sigma))
-        work = (prof.t_alone_ms + prof.overhead_ms) * noise
+        # batched jobs carry b inputs in one dispatch: work scales by
+        # b / g(b) (Table-I-calibrated curve), overhead is paid once
+        work = (batched_stage_ms(prof, b) + prof.overhead_ms) * noise
+        # batched kernels also widen — the effective profile competes for
+        # more units in the rate computation (identity object for b = 1)
+        eff = self.core.sched.contention.batched_profile(prof, b)
         # version must be globally unique: a reset-to-0 counter lets a
         # stale FINISH from the lane's previous occupant fire early
-        self.running[lane] = [inst, work, 0.0, next(_tie)]
+        self.running[lane] = [inst, work, 0.0, next(_tie), eff]
 
     def cancel_ctx(self, ctx_idx: int) -> None:
         for lane in list(self.running):
@@ -152,20 +159,31 @@ class SimBackend:
                     continue
                 projected = ((self.now - inst.start_ms)
                              + entry[1] / max(entry[2], 1e-6))
-                mret = inst.task.mret.stage_mret(inst.job.stage_idx)
-                floor = 4.0 * (inst.profile.t_alone_ms
+                cost = batch_cost(inst.profile, inst.job.n_inputs)
+                mret = (inst.task.mret.stage_mret(inst.job.stage_idx)
+                        * cost)
+                floor = 4.0 * (batched_stage_ms(inst.profile,
+                                                inst.job.n_inputs)
                                + inst.profile.overhead_ms)
                 if projected > max(kappa * mret, floor) and len(self.running) > 1:
                     del self.running[lane]
                     sched.lanes[lane] = None
                     inst.work_done = 0.0
                     inst.lane = None
-                    # re-enqueue on the least-backlogged live context
-                    # (zero-delay migration at the stage boundary)
-                    cands = [c.index for c in sched.contexts if c.alive]
-                    tgt = min(cands,
-                              key=lambda k: sched.predicted_finish(k, self.now))
+                    # re-enqueue at the stage boundary (zero-delay): an HP
+                    # task's context is FIXED (Algorithm 1) — its straggler
+                    # replays on its own partition, never migrates. Only
+                    # LP jobs move, to the least-backlogged live context,
+                    # and each such move is a migration.
                     old = inst.job.ctx
+                    if inst.task.fixed_ctx:
+                        tgt = inst.task.ctx
+                    else:
+                        cands = [c.index for c in sched.contexts if c.alive]
+                        tgt = min(cands, key=lambda k:
+                                  sched.predicted_finish(k, self.now))
+                        if tgt != old:
+                            sched.migrations += 1
                     if inst.job in sched.active_jobs.get(old, []):
                         sched.active_jobs[old].remove(inst.job)
                         sched.active_jobs[tgt].append(inst.job)
@@ -180,7 +198,7 @@ class SimBackend:
             ctx_active[lane[0]] = ctx_active.get(lane[0], 0) + 1
         entries = list(self.running.items())
         rates = sched.contention.rates([
-            (lane, e[0].profile, sched.contexts[lane[0]].cap,
+            (lane, e[4], sched.contexts[lane[0]].cap,
              ctx_active[lane[0]]) for lane, e in entries])
         for (lane, entry), rate in zip(entries, rates):
             entry[2] = max(rate, 1e-6)
@@ -190,11 +208,13 @@ class SimBackend:
 
 
 def _default_input_factory(input_hw: int, batch: int) -> Callable[[Job], object]:
-    """Image-shaped zero input matching the staged-CNN payload convention."""
+    """Image-shaped zero input matching the staged-CNN payload convention.
+    A dynamically batched job widens the leading axis by ``n_inputs`` so
+    the whole batch rides through the staged payload in one dispatch."""
     def make(job: Job):
         import jax
         return jax.device_put(np.zeros(
-            (batch, input_hw, input_hw, 3), np.float32))
+            (batch * job.n_inputs, input_hw, input_hw, 3), np.float32))
     return make
 
 
@@ -267,7 +287,8 @@ class RealtimeBackend:
         prof = inst.profile
         t0 = time.perf_counter()
         if prof.payload is None:
-            time.sleep(prof.t_alone_ms / 1000.0)     # synthetic stage
+            # synthetic stage: sleep the batched work (b/g(b) scaling)
+            time.sleep(batched_stage_ms(prof, inst.job.n_inputs) / 1000.0)
             out = self._job_state.get(inst.job.job_id)
         else:
             x = self._job_state.get(inst.job.job_id)

@@ -28,6 +28,39 @@ from typing import Dict, List, Sequence, Tuple
 from ..core.task import StageProfile
 
 
+def speedup_curve(g_inf: float, n_inputs: int) -> float:
+    """g(b) = 1 + (g_inf - 1)(1 - 1/b): throughput gain of a b-input batch
+    over b single-input executions, approaching the asymptote ``g_inf``.
+    The ONE place the curve shape lives — the dynamic batching path and
+    the static pre-batched profiles (serving/profiles.py) both call it."""
+    if n_inputs <= 1:
+        return 1.0
+    return 1.0 + (max(g_inf, 1.0) - 1.0) * (1.0 - 1.0 / n_inputs)
+
+
+def batch_speedup(prof: StageProfile, n_inputs: int) -> float:
+    """Stage-level g(b): ``batch_gain`` is the stage's Table-I-calibrated
+    asymptote (serving/profiles.py wires max_JPS / min_JPS through here),
+    so wide DNNs — UNet, g_inf 1.08 — gain least and narrow ones —
+    InceptionV3, g_inf 3.13 — gain most."""
+    return speedup_curve(prof.batch_gain, n_inputs)
+
+
+def batch_cost(prof: StageProfile, n_inputs: int) -> float:
+    """Device-time multiplier of a b-input stage vs a single-input one:
+    b / g(b). Exactly 1.0 for unbatched jobs (bit-identical guarantee)."""
+    if n_inputs <= 1:
+        return 1.0
+    return n_inputs / batch_speedup(prof, n_inputs)
+
+
+def batched_stage_ms(prof: StageProfile, n_inputs: int) -> float:
+    """Single-stream-alone execution time of a b-input stage (excludes
+    the per-dispatch ``overhead_ms``, which batching amortizes: one
+    dispatch regardless of b)."""
+    return prof.t_alone_ms * batch_cost(prof, n_inputs)
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviceModel:
     n_units: float = 68.0        # SMs (RTX 2080 Ti) | chips (pod slice)
@@ -78,6 +111,22 @@ class ContentionModel:
             speeds = [s / ((1.0 - p.mem_frac) + p.mem_frac * phi)
                       for (_, p, _, _), s in zip(running, speeds)]
         return speeds
+
+    def batched_profile(self, prof: StageProfile, n_inputs: int
+                        ) -> StageProfile:
+        """Effective profile of a b-input stage for the rate computation.
+        The batch converts half its log-speedup into *width* (deeper SM
+        occupancy -> more units demanded) and half into *per-unit
+        efficiency* (amortized launches, fuller pipelines): n_sat scales
+        by sqrt(g(b)). Under unit starvation a b-batch therefore still
+        outruns b singles by sqrt(g(b)) — narrow DNNs (InceptionV3) keep
+        most of their Table I gain under colocation, wide ones (UNet)
+        keep almost none, matching §VI-H. Returns ``prof`` for b = 1."""
+        if n_inputs <= 1:
+            return prof
+        ns = min(self.device.n_units,
+                 prof.n_sat * batch_speedup(prof, n_inputs) ** 0.5)
+        return dataclasses.replace(prof, n_sat=ns)
 
     def solo_speed(self, prof: StageProfile, units: float) -> float:
         """Speed of a stage running alone on ``units`` units."""

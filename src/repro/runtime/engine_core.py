@@ -113,6 +113,11 @@ class EngineCore:
         """Register a one-shot job release at ``at_ms`` (before run())."""
         if self._ran:
             raise RuntimeError("EngineCore.run() already executed")
+        if at_ms > self.horizon:
+            raise ValueError(
+                f"submit at_ms={at_ms} is beyond the horizon "
+                f"({self.horizon} ms): the release would never fire and "
+                f"the handle would stay PENDING forever")
         task = self.sched.add_task(spec)
         handle = SubmitHandle(task)
         self._handles[task.index] = handle
@@ -164,9 +169,24 @@ class EngineCore:
                 break
             elif not self._timeline and not self.backend.has_inflight():
                 break    # nothing can ever happen again
+            # tell the scheduler when this loop is guaranteed to run again
+            # (lazy batch-head holds must release before then)
+            self.sched.next_wake_ms = (self._timeline[0][0]
+                                       if self._timeline else math.inf)
             self._dispatch()
             self.backend.running_set_changed()
 
+        # horizon sweep: jobs still queued/in-flight are real work the run
+        # accepted — count them, and count the ones already past their
+        # deadline as missed (otherwise overload DMR is understated by
+        # exactly the jobs the horizon cut off)
+        end_ms = self.backend.now_ms()
+        for jobs in self.sched.active_jobs.values():
+            for job in jobs:
+                p = job.task.priority
+                self.metrics.unfinished[p] += 1
+                if end_ms > job.abs_deadline_ms:
+                    self.metrics.missed[p] += 1
         self.metrics.migrations = self.sched.migrations
         for r in self.sched.rejections:
             self.metrics.rejected[r.priority] += 1
@@ -180,6 +200,7 @@ class EngineCore:
         backends may observe ``now > sched_t``, and the periodic successor
         must be anchored to the schedule, not the observation."""
         now = self.backend.now_ms()
+        pre_coalesced = self.sched.coalesced
         job = self.sched.on_release(task, now)
         if job is None:
             self._log(f"reject {task.name}")
@@ -187,7 +208,11 @@ class EngineCore:
             if h:
                 h.status = SubmitHandle.REJECTED
         else:
-            self._log(f"admit {task.name} -> ctx{job.ctx}")
+            if self.sched.coalesced > pre_coalesced:
+                self._log(f"batch {task.name} -> ctx{job.ctx} "
+                          f"b={job.n_inputs}")
+            else:
+                self._log(f"admit {task.name} -> ctx{job.ctx}")
             h = self._handles.get(task.index)
             if h:
                 h.status = SubmitHandle.ADMITTED
@@ -218,14 +243,27 @@ class EngineCore:
         self.backend.on_job_done(done)
         p = done.task.priority
         self.metrics.completed[p] += 1
+        self.metrics.completed_inputs[p] += done.n_inputs
+        b = done.n_inputs
+        self.metrics.batch_hist[b] = self.metrics.batch_hist.get(b, 0) + 1
+        # each batched input gets its own response time, measured from its
+        # own release (the head's deadline governed the whole batch)
         resp = now - done.release_ms
-        self.metrics.response_ms[p].append(resp)
+        for r_ms in done.release_times:
+            self.metrics.response_ms[p].append(now - r_ms)
         if now > done.abs_deadline_ms:
             self.metrics.missed[p] += 1
         h = self._handles.get(done.task.index)
         if h:
             h.status = SubmitHandle.COMPLETED
             h.response_ms = resp
+        # coalesced members may belong to other tasks (scope="model"):
+        # complete their handles too, each at its own response time
+        for idx, r_ms in zip(done.extra_member_idx, done.extra_release_ms):
+            h = self._handles.get(idx)
+            if h:
+                h.status = SubmitHandle.COMPLETED
+                h.response_ms = now - r_ms
 
     def _dispatch(self) -> None:
         now = self.backend.now_ms()
@@ -264,6 +302,9 @@ class EngineCore:
             "active_jobs": {k: len(v)
                             for k, v in self.sched.active_jobs.items()},
             "completed": dict(self.metrics.completed),
+            "completed_inputs": dict(self.metrics.completed_inputs),
+            "batch_hist": dict(sorted(self.metrics.batch_hist.items())),
+            "coalesced": self.sched.coalesced,
             "rejected": {p: sum(1 for r in self.sched.rejections
                                 if r.priority == p) for p in (0, 1)},
             "migrations": self.sched.migrations,

@@ -25,7 +25,7 @@ import dataclasses
 from typing import Dict, List
 
 from ..core.task import StageProfile, TaskSpec
-from ..runtime.contention import DeviceModel
+from ..runtime.contention import DeviceModel, speedup_curve
 
 N_UNITS = 68.0          # RTX 2080 Ti SMs
 
@@ -66,10 +66,9 @@ def t_alone_ms(name: str) -> float:
 
 def effective_batch_profile(name: str, batch: int) -> tuple:
     """(t_alone_b, n_sat_b) for a batched instance: kernels widen with batch
-    (n_sat grows, saturating at the device) and per-job gain approaches the
-    Table I asymptote: g(b) = 1 + (g_inf - 1) * (1 - 1/b)."""
-    g_inf = batching_gain(name)
-    g_b = 1.0 + (g_inf - 1.0) * (1.0 - 1.0 / batch)
+    (n_sat grows, saturating at the device) and per-job gain follows the
+    shared ``speedup_curve`` toward the Table I asymptote."""
+    g_b = speedup_curve(batching_gain(name), batch)
     t_b = batch * t_alone_ms(name) / g_b
     ns_b = min(N_UNITS, n_sat(name) * (batch ** 0.7))
     return t_b, ns_b
@@ -77,15 +76,18 @@ def effective_batch_profile(name: str, batch: int) -> tuple:
 
 def make_stages(name: str, batch: int = 1, n_stages: int = 4) -> List[StageProfile]:
     if batch > 1:
-        t_total, ns = effective_batch_profile(name, batch)
+        # statically pre-batched spec: the gain is already folded into
+        # t_alone, so dynamic batching on top would double-count it
+        t_total, ns, gain = (*effective_batch_profile(name, batch), 1.0)
     else:
         t_total, ns = t_alone_ms(name), n_sat(name)
+        gain = batching_gain(name)     # drives contention.batch_speedup
     split = STAGE_SPLIT[name][:n_stages]
     norm = sum(split)
     return [StageProfile(name=f"{name}/s{j}",
                          t_alone_ms=t_total * w / norm,
                          n_sat=ns, mem_frac=MEM_FRAC[name],
-                         overhead_ms=OVERHEAD_MS)
+                         overhead_ms=OVERHEAD_MS, batch_gain=gain)
             for j, w in enumerate(split)]
 
 

@@ -1,0 +1,316 @@
+"""Dynamic deadline-aware batching (core/batching.py) + the scheduler
+correctness fixes that shipped with it: horizon-miss sweep, fixed-ctx
+straggler replay, HP-first fault re-placement, late-submit rejection."""
+import math
+
+import pytest
+
+from repro.api import (HP, LP, BatchPolicy, DeviceModel, ServerConfig,
+                       StageProfile, TaskSpec, TraceArrival)
+from repro.core.scheduler import DarisScheduler, SchedulerConfig
+from repro.runtime.backend import SimBackend
+from repro.runtime.contention import batch_cost, batch_speedup
+from repro.runtime.engine_core import EngineCore
+from repro.serving.requests import table2_taskset
+
+
+def make_spec(name, prio, stage_times, period_ms, n_sat=1.0, batch_gain=1.0):
+    return TaskSpec(
+        name=name, period_ms=period_ms, priority=prio,
+        stages=[StageProfile(f"{name}/s{j}", t, n_sat=n_sat, mem_frac=0.0,
+                             overhead_ms=0.0, batch_gain=batch_gain)
+                for j, t in enumerate(stage_times)])
+
+
+def ideal_device():
+    """Device on which one stage per lane runs at exactly t_alone speed."""
+    return DeviceModel(n_units=4.0, bubble=0.0, l2_pressure=0.0)
+
+
+def serve(specs_with_traces, *, policy=None, horizon=500.0,
+          device=None, n_contexts=1):
+    cfg = (ServerConfig.sim()
+           .contexts(n_contexts).streams(1).oversubscribe(1.0)
+           .device(device or ideal_device())
+           .horizon_ms(horizon).noise(0.0).phase_offsets(False)
+           .record_decisions())
+    for spec, times in specs_with_traces:
+        cfg.task(spec, arrival=TraceArrival(times))
+    if policy is not None:
+        cfg.batching(max_batch=policy.max_batch,
+                     max_wait_ms=policy.max_wait_ms)
+    return cfg.build()
+
+
+# ------------------------------------------------------------ speedup curve
+def test_batch_speedup_curve_anchors():
+    prof = StageProfile("s", 1.0, 1.0, 0.0, batch_gain=3.0)
+    assert batch_speedup(prof, 1) == 1.0
+    assert batch_cost(prof, 1) == 1.0                  # exact: bit-identical
+    assert batch_speedup(prof, 2) == pytest.approx(2.0)
+    # asymptote: g(b) -> g_inf, cost grows sublinearly
+    assert batch_speedup(prof, 1000) == pytest.approx(3.0, rel=1e-2)
+    assert batch_cost(prof, 4) < 4.0
+    # gain 1.0 means linear scaling (no free lunch for wide DNNs)
+    flat = StageProfile("s", 1.0, 1.0, 0.0, batch_gain=1.0)
+    assert batch_cost(flat, 8) == pytest.approx(8.0)
+
+
+def test_batch_policy_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        BatchPolicy(max_batch=0)
+    with pytest.raises(ValueError, match="max_wait_ms"):
+        BatchPolicy(max_wait_ms=-1.0)
+    with pytest.raises(ValueError, match="scope"):
+        BatchPolicy(scope="dnn")
+
+
+# --------------------------------------------------------------- coalescing
+def test_releases_coalesce_into_batched_job():
+    """Releases arriving while a job of the same task is queued at stage 0
+    join it; the batch carries per-input release times and input-level
+    accounting (jps_inputs > jps)."""
+    spec = make_spec("t", HP, [10.0], 200.0)
+    srv = serve([(spec, [0.0, 1.0, 2.0, 3.0])],
+                policy=BatchPolicy(max_batch=4))
+    m = srv.run()
+    # t=0 is held for the pending releases (lazy dispatch); 1, 2, 3 join
+    # -> one full 4-batch, sealed the moment it hits max_batch
+    assert m.completed[HP] == 1
+    assert m.completed_inputs[HP] == 4
+    assert m.batch_hist == {4: 1}
+    assert len(m.response_ms[HP]) == 4      # one response per input
+    assert m.jps_inputs == 4 * m.jps
+    assert m.mean_batch() == pytest.approx(4.0)
+    snap = srv.snapshot()
+    assert snap["coalesced"] == 3
+    assert any(d.startswith("batch ") for d in srv.decisions)
+
+
+def test_slack_bound_respected():
+    """A release may not join if the enlarged batch would newly push the
+    head past its stage-0 virtual deadline."""
+    # single stage -> vdl == absolute deadline (release + 25); afet = 10
+    spec = make_spec("t", HP, [10.0], 25.0)
+    srv = serve([(spec, [0.0, 1.0, 2.0, 3.0])],
+                policy=BatchPolicy(max_batch=8))
+    m = srv.run()
+    # head released at 0 (vdl 25): t=1 joins (1 + 2*10 <= 25); t=3 would
+    # need 30ms more while the 2-batch can still make its deadline ->
+    # refused, a second job forms instead (which t=3's successor joins)
+    assert m.batch_hist == {2: 2}
+    assert 3 not in m.batch_hist
+    assert m.completed_inputs[HP] == 4
+
+
+def test_max_wait_bounds_joining():
+    spec = make_spec("t", HP, [10.0], 500.0)
+    srv = serve([(spec, [0.0, 1.0, 9.0])],
+                policy=BatchPolicy(max_batch=8, max_wait_ms=5.0))
+    m = srv.run()
+    # head at t=0, t=1 joins; despite 500ms of deadline slack the head may
+    # not keep accumulating past max_wait -> t=9 starts a fresh job
+    assert m.batch_hist == {1: 1, 2: 1}
+    assert m.completed[HP] == 2
+    assert m.completed_inputs[HP] == 3
+
+
+def test_admission_charges_batched_utilization():
+    """Joining charges the incremental b/g(b) utilization against Eq. 12:
+    batching cannot sneak LP load past the admission test."""
+    dev = DeviceModel(n_units=1.0, bubble=0.0, l2_pressure=0.0)
+    hog = make_spec("hog", HP, [70.0], 100.0)       # U_r = 1 - 0.7 = 0.3
+    lp = make_spec("lp", LP, [10.0], 100.0)         # u = 0.1 per input
+    srv = serve([(hog, [0.0]), (lp, [5.0, 10.0, 15.0])],
+                policy=BatchPolicy(max_batch=8), device=dev)
+    m = srv.run()
+    # t=5 admitted (0.1 < 0.3); t=10 joins (charge 0.2 < 0.3); t=15 can
+    # neither join (0.2 + 0.1 >= 0.3) nor be admitted alone -> rejected
+    assert m.batch_hist.get(2) == 1
+    assert m.rejected[LP] == 1
+    assert m.completed_inputs[LP] == 2
+
+
+def test_model_scope_batches_across_streams_task_scope_does_not():
+    """scope='model' (default) coalesces identical-profile streams — the
+    Table II population; scope='task' keeps streams separate."""
+    specs = [(make_spec(f"t{i}", HP, [10.0], 200.0), [float(i)])
+             for i in range(4)]
+
+    def run_with(scope):
+        cfg = (ServerConfig.sim().contexts(1).streams(1).oversubscribe(1.0)
+               .device(ideal_device()).horizon_ms(500.0).noise(0.0)
+               .phase_offsets(False))
+        for spec, times in specs:
+            cfg.task(spec, arrival=TraceArrival(times))
+        cfg.batching(max_batch=4, scope=scope)
+        return cfg.build().run()
+
+    m_model = run_with("model")
+    m_task = run_with("task")
+    assert max(m_model.batch_hist) > 1        # cross-stream batch formed
+    assert max(m_task.batch_hist) == 1        # streams never coalesce
+    assert m_model.completed_inputs[HP] == m_task.completed_inputs[HP] == 4
+
+
+def test_lazy_dispatch_holds_head_for_forming_batch():
+    """A growable head is held until its latest start time when the engine
+    will wake again before then — so batches form even with free lanes."""
+    spec = make_spec("t", HP, [10.0], 100.0)
+    srv = serve([(spec, [0.0, 2.0, 4.0])], policy=BatchPolicy(max_batch=4))
+    m = srv.run()
+    # t=0 job is dispatchable immediately, but the pending release at t=2
+    # lets the scheduler hold it; t=2 and t=4 join -> one 3-batch
+    assert m.batch_hist == {3: 1}
+    assert m.completed_inputs[HP] == 3
+
+
+def test_unbatched_path_identical_without_policy():
+    """BatchPolicy off => decision traces and metrics match a server that
+    never heard of batching (the no-drift contract), including under
+    straggler-heavy noise."""
+    def run_one(with_noop_policy):
+        cfg = (ServerConfig.sim()
+               .tasks(table2_taskset("resnet18"))
+               .contexts(4).oversubscribe(4.0)
+               .horizon_ms(600.0).seed(0).record_decisions())
+        if with_noop_policy:
+            cfg.batching(max_batch=1)     # policy present, coalescing off
+        srv = cfg.build()
+        m = srv.run()
+        return srv.decisions, m.completed, m.missed, m.unfinished
+
+    plain = run_one(False)
+    noop = run_one(True)
+    assert plain == noop
+
+
+# ------------------------------------------------------- horizon-miss sweep
+def test_horizon_sweep_counts_unfinished_and_late_jobs():
+    """Jobs still in flight past their deadline when run() exits count as
+    missed (fig11 overload DMR is otherwise understated)."""
+    late = make_spec("late", HP, [50.0], 20.0)     # deadline 20 < exec 50
+    srv = serve([(late, [0.0])], horizon=30.0)
+    m = srv.run()
+    assert m.completed[HP] == 0
+    assert m.unfinished[HP] == 1
+    assert m.missed[HP] == 1
+    assert m.dmr(HP) == 1.0
+
+
+def test_horizon_sweep_spares_jobs_still_within_deadline():
+    fresh = make_spec("fresh", HP, [50.0], 100.0)  # deadline 100 > horizon
+    srv = serve([(fresh, [0.0])], horizon=30.0)
+    m = srv.run()
+    assert m.unfinished[HP] == 1
+    assert m.missed[HP] == 0
+    assert m.dmr(HP) == 0.0
+
+
+# -------------------------------------------------- straggler replay fixes
+def _straggler_rig(first, second):
+    """Two tasks on separate contexts, both launched at t=0; returns
+    (sched, backend, jobs, insts) with rates computed. ``first`` launches
+    first, so the straggler pass kills it first."""
+    cfg = SchedulerConfig(n_contexts=2, n_streams=1, oversubscription=1.0,
+                          straggler_kappa=3.0)
+    sched = DarisScheduler([first, second], cfg, ideal_device())
+    backend = SimBackend(noise_sigma=0.0)
+    core = EngineCore(sched, backend, horizon_ms=10_000.0)
+    backend.bind(core)
+    backend.start()
+    jobs, insts = {}, {}
+    order = sorted(sched.tasks, key=lambda t: t.spec.name != first.name)
+    for task in order:
+        job = sched.on_release(task, 0.0)
+        inst = sched.next_for_lane(job.ctx, 0.0)
+        lane = (job.ctx, 0)
+        inst.start_ms = 0.0
+        inst.lane = lane
+        sched.lanes[lane] = inst
+        backend.launch(lane, inst)
+        jobs[task.spec.name], insts[task.spec.name] = job, inst
+    backend.running_set_changed()      # set rates + predictions
+    return sched, backend, jobs, insts
+
+
+def test_straggler_replay_respects_fixed_ctx():
+    """An HP straggler replays on its OWN fixed context (Algorithm 1),
+    never migrating; no migration is counted for it."""
+    hp = make_spec("hp", HP, [1.0], 30.0)
+    other = make_spec("lp-long", LP, [1000.0], 3000.0)
+    sched, backend, jobs, insts = _straggler_rig(hp, other)
+    own_ctx = sched.tasks[0].ctx
+    backend.now = 500.0                # projected >> max(kappa*mret, floor)
+    backend.running_set_changed()      # straggler pass fires on hp
+    assert backend.core.metrics.stragglers == 1
+    assert jobs["hp"].ctx == own_ctx                 # replayed in place
+    assert sched.migrations == 0
+    # the replayed instance went back through hp's own context queue/lane
+    relaunched = sched.lanes[(own_ctx, 0)]
+    assert relaunched is insts["hp"]
+
+
+def test_straggler_move_of_lp_counts_as_migration():
+    lp = make_spec("lp", LP, [1.0], 30.0)
+    other = make_spec("hp", HP, [1.0], 30.0)
+    sched, backend, jobs, insts = _straggler_rig(lp, other)
+    lp_task = next(t for t in sched.tasks if t.priority == LP)
+    old_ctx = lp_task.ctx
+    # back up lp's own context so the predicted-finish argmin moves it
+    sched.on_release(lp_task, 0.0)
+    sched.on_release(lp_task, 0.0)
+    backend.now = 500.0
+    backend.running_set_changed()
+    assert backend.core.metrics.stragglers == 1
+    assert jobs["lp"].ctx != old_ctx
+    assert sched.migrations == 1
+
+
+# --------------------------------------------- HP-first fault re-placement
+def test_fail_context_replaces_hp_before_lp():
+    """Algorithm 1 re-run on fault: HP orphans claim the min-utilization
+    survivor before any LP orphan, regardless of registration order."""
+    specs = [make_spec("lp-big", LP, [8.0], 10.0),     # LP listed first
+             make_spec("hp-mid", HP, [5.0], 10.0),
+             make_spec("r-small", LP, [1.0], 10.0),
+             make_spec("r-large", LP, [4.0], 10.0)]
+    sched = DarisScheduler(
+        specs, SchedulerConfig(n_contexts=3, n_streams=1,
+                               oversubscription=1.0), ideal_device())
+    lp_big, hp_mid, r_small, r_large = sched.tasks
+    lp_big.ctx = 0
+    hp_mid.ctx = 0
+    r_small.ctx = 1
+    r_large.ctx = 2
+    sched.fail_context(0, 0.0)
+    # HP goes first to ctx1 (the least-utilized survivor); the big LP then
+    # lands on ctx2. The buggy self.tasks-order placement gave ctx1 to the
+    # LP (listed first) and pushed the HP task to ctx2.
+    assert hp_mid.ctx == 1
+    assert lp_big.ctx == 2
+    assert hp_mid.fixed_ctx
+
+
+def test_coalesced_submit_handles_complete():
+    """A submitted release that coalesces into another task's batch head
+    still completes its own handle, at its own response time."""
+    from repro.api import SubmitHandle
+    srv = (ServerConfig.sim().contexts(1).streams(1).oversubscribe(1.0)
+           .device(ideal_device()).horizon_ms(500.0).noise(0.0)
+           .batching(max_batch=4).build())
+    a = srv.submit(make_spec("a", HP, [10.0], 200.0), at_ms=0.0)
+    b = srv.submit(make_spec("b", HP, [10.0], 200.0), at_ms=1.0)
+    m = srv.run()
+    assert m.batch_hist == {2: 1}            # b joined a's job
+    assert a.status == SubmitHandle.COMPLETED
+    assert b.status == SubmitHandle.COMPLETED
+    assert a.response_ms == pytest.approx(b.response_ms + 1.0)
+
+
+# ------------------------------------------------------ late-submit reject
+def test_submit_beyond_horizon_raises():
+    srv = (ServerConfig.sim().contexts(1).streams(1).oversubscribe(1.0)
+           .horizon_ms(100.0).build())
+    with pytest.raises(ValueError, match="horizon"):
+        srv.submit(make_spec("t", HP, [1.0], 10.0), at_ms=200.0)
