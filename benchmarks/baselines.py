@@ -16,8 +16,12 @@ from repro.serving.requests import table2_taskset
 from .common import cache_json, load_json, mps_cfg, run_sim
 
 
+def load_cached(fast: bool = False):
+    return load_json("baselines")
+
+
 def run() -> dict:
-    cached = load_json("baselines")
+    cached = load_cached()
     if cached:
         return cached
     dnn = "resnet50" if False else "resnet18"   # paper quotes RN50; RN18 set is richer

@@ -22,7 +22,7 @@ from .common import HORIZON_MS, cache_json, load_json, mps_cfg, run_sim
 BATCH = {"resnet18": 4, "unet": 2, "inceptionv3": 8}
 
 
-def run(fast: bool = False) -> dict:
+def load_cached(fast: bool = False):
     cached = load_json("fig10")
     # reuse the cache only if it is from this benchmark format AND the
     # same fidelity: pre-rewrite caches lack the dynamic-path fields, and
@@ -30,6 +30,13 @@ def run(fast: bool = False) -> dict:
     if (cached and cached.get("_meta", {}).get("fast") == fast
             and all("batching_gain" in b for k, b in cached.items()
                     if k != "_meta")):
+        return cached
+    return None
+
+
+def run(fast: bool = False) -> dict:
+    cached = load_cached(fast)
+    if cached:
         return cached
     horizon = 2500.0 if fast else HORIZON_MS
     ncs = (2, 6) if fast else (1, 2, 4, 6, 8)

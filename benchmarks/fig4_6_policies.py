@@ -14,35 +14,52 @@ from repro.serving.requests import table2_taskset
 from .common import cache_json, load_json, mps_cfg, mps_str_cfg, run_sim, str_cfg
 
 
-def run(fast: bool = False) -> dict:
-    cached = load_json("fig4_6")
-    if cached:
-        return cached
-    out = {}
+# parallel-unit protocol (benchmarks.run): one unit per DNN task set —
+# this figure is by far the widest sweep, so --jobs splits it below the
+# figure level
+UNITS = ("resnet18", "unet", "inceptionv3")
+
+
+def load_cached(fast: bool = False):
+    return load_json("fig4_6")
+
+
+def run_unit(dnn: str, fast: bool = False) -> dict:
+    """Full policy sweep for one DNN task set (one parallel work unit)."""
     ncs = (2, 4, 6, 8, 10) if fast else (2, 3, 4, 5, 6, 7, 8, 9, 10)
-    for dnn in ("resnet18", "unet", "inceptionv3"):
-        specs_fn = lambda: table2_taskset(dnn)
-        rows = []
-        for nc in ncs:
-            for os_ in (1.0, 2.0, float(nc)):
-                s = run_sim(specs_fn(), mps_cfg(nc, os_))
-                rows.append(dict(policy="MPS", nc=nc, ns=1, os=os_, **s))
-        for ns in ncs:
-            s = run_sim(specs_fn(), str_cfg(ns))
-            rows.append(dict(policy="STR", nc=1, ns=ns, os=1.0, **s))
-        for nc in (2, 3, 4):
-            for ns in (2, 3):
-                for os_ in (1.0, float(nc)):
-                    s = run_sim(specs_fn(), mps_str_cfg(nc, ns, os_))
-                    rows.append(dict(policy="MPS+STR", nc=nc, ns=ns, os=os_,
-                                     **s))
-        out[dnn] = {
-            "rows": rows,
-            "upper_baseline": TABLE1[dnn][1],
-            "lower_baseline": TABLE1[dnn][0],
-        }
+    specs_fn = lambda: table2_taskset(dnn)
+    rows = []
+    for nc in ncs:
+        for os_ in (1.0, 2.0, float(nc)):
+            s = run_sim(specs_fn(), mps_cfg(nc, os_))
+            rows.append(dict(policy="MPS", nc=nc, ns=1, os=os_, **s))
+    for ns in ncs:
+        s = run_sim(specs_fn(), str_cfg(ns))
+        rows.append(dict(policy="STR", nc=1, ns=ns, os=1.0, **s))
+    for nc in (2, 3, 4):
+        for ns in (2, 3):
+            for os_ in (1.0, float(nc)):
+                s = run_sim(specs_fn(), mps_str_cfg(nc, ns, os_))
+                rows.append(dict(policy="MPS+STR", nc=nc, ns=ns, os=os_,
+                                 **s))
+    return {
+        "rows": rows,
+        "upper_baseline": TABLE1[dnn][1],
+        "lower_baseline": TABLE1[dnn][0],
+    }
+
+
+def merge_units(parts: dict, fast: bool = False) -> dict:
+    out = {dnn: parts[dnn] for dnn in UNITS}
     cache_json("fig4_6", out)
     return out
+
+
+def run(fast: bool = False) -> dict:
+    cached = load_cached(fast)
+    if cached:
+        return cached
+    return merge_units({dnn: run_unit(dnn, fast) for dnn in UNITS}, fast)
 
 
 def best_of(rows, policy):

@@ -6,8 +6,12 @@ from repro.serving.requests import mixed_taskset
 from .common import cache_json, load_json, mps_cfg, run_sim, str_cfg
 
 
+def load_cached(fast: bool = False):
+    return load_json("fig7")
+
+
 def run() -> dict:
-    cached = load_json("fig7")
+    cached = load_cached()
     if cached:
         return cached
     rows = []

@@ -14,8 +14,12 @@ from .common import cache_json, load_json, mps_cfg, run_sim
 BEST = dict(nc=8, os_=8.0)
 
 
+def load_cached(fast: bool = False):
+    return load_json("fig8")
+
+
 def run() -> dict:
-    cached = load_json("fig8")
+    cached = load_cached()
     if cached:
         return cached
     variants = {

@@ -47,8 +47,12 @@ def _run_cfg(nc, os_, ws) -> dict:
     }
 
 
+def load_cached(fast: bool = False):
+    return load_json("fig9")
+
+
 def run() -> dict:
-    cached = load_json("fig9")
+    cached = load_cached()
     if cached:
         return cached
     out = {

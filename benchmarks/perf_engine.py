@@ -1,0 +1,250 @@
+"""Engine performance harness: simulated-events/sec per scenario.
+
+This is the repo's perf trajectory anchor. Each scenario builds a
+representative DARIS workload (policy sweeps, batching, overload), runs it
+through the sim engine, and reports
+
+    events          = job releases + stage completions harvested
+    wall_s          = wall-clock time of ``server.run()``
+    events_per_sec  = events / wall_s
+
+Events are counted by wrapping ``backend.advance`` and the release
+handler, not by touching engine internals, so the harness measures any
+engine version identically — that is what makes the committed
+before/after numbers in ``benchmarks/BENCH_engine.json`` comparable.
+
+Usage:
+    python -m benchmarks.perf_engine [--fast]          # measure + write
+        artifacts/bench/BENCH_engine.json
+    python -m benchmarks.perf_engine --fast --check    # compare against
+        the committed benchmarks/BENCH_engine.json; exit 1 if any
+        scenario's events/sec regressed more than --tolerance (30%)
+    python -m benchmarks.perf_engine --fast --write-baseline
+        # refresh the committed baseline (keeps before_* fields)
+
+CI runs the ``--check`` mode on every push. Absolute events/sec moves
+with host hardware, so the gate is *shape-normalized*: each scenario is
+compared by its events/sec relative to the run's geometric mean, which
+is hardware-independent and catches any single hot path regressing
+(a wide absolute floor backstops uniform slowdowns). See ``check``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+import time
+
+BASELINE = pathlib.Path(__file__).resolve().parent / "BENCH_engine.json"
+OUT = pathlib.Path("artifacts/bench/BENCH_engine.json")
+
+
+def _scenarios(fast: bool):
+    """name -> zero-arg builder returning an unrun DarisServer."""
+    from repro.api import BatchPolicy
+    from repro.core.scheduler import SchedulerConfig
+    from repro.serving.profiles import TABLE1
+    from repro.serving.requests import ratio_taskset, table2_taskset
+
+    from .common import make_server, mps_cfg, mps_str_cfg, str_cfg
+
+    h = 1500.0 if fast else 4000.0
+
+    def build(specs, cfg, horizon=None):
+        return make_server(specs, cfg, horizon_ms=horizon or h).build()
+
+    rn18_over_jps = TABLE1["resnet18"][1] * 1.5 / 30
+    return {
+        "mps_rn18_6x1_os6": lambda: build(
+            table2_taskset("resnet18"), mps_cfg(6, 6.0)),
+        "mps_incv3_8x1_os8": lambda: build(
+            table2_taskset("inceptionv3"), mps_cfg(8, 8.0)),
+        "str_unet_6": lambda: build(table2_taskset("unet"), str_cfg(6)),
+        "mps_str_rn18_3x3_os3": lambda: build(
+            table2_taskset("resnet18"), mps_str_cfg(3, 3, 3.0)),
+        "batch_incv3_6x1_os6": lambda: build(
+            table2_taskset("inceptionv3"),
+            mps_cfg(6, 6.0, batch_policy=BatchPolicy(max_batch=8))),
+        "overload_rn18_hpa": lambda: build(
+            ratio_taskset("resnet18", 0.66, 30, rn18_over_jps),
+            mps_cfg(6, 6.0, overload_hpa=True)),
+    }
+
+
+def run_scenario(build, repeat: int = 1) -> dict:
+    """Best-of-``repeat`` measurement: scenarios are deterministic, so
+    event counts are identical across repeats and the fastest wall time
+    is the least-noisy estimate — fast-mode runs are short enough that
+    shared-runner noise would otherwise dominate a single shot."""
+    best = None
+    for _ in range(max(repeat, 1)):
+        r = _run_scenario_once(build)
+        if best is None or r["wall_s"] < best["wall_s"]:
+            best = r
+    return best
+
+
+def _run_scenario_once(build) -> dict:
+    server = build()
+    core = server.core
+    counts = {"releases": 0, "stage_completions": 0}
+
+    orig_advance = core.backend.advance
+    orig_release = core._handle_release
+
+    def advance(cap_ms):
+        out = orig_advance(cap_ms)
+        counts["stage_completions"] += len(out)
+        return out
+
+    def handle_release(task, proc, t):
+        counts["releases"] += 1
+        return orig_release(task, proc, t)
+
+    core.backend.advance = advance
+    core._handle_release = handle_release
+    t0 = time.perf_counter()
+    m = server.run()
+    wall = time.perf_counter() - t0
+    events = counts["releases"] + counts["stage_completions"]
+    return {
+        "events": events,
+        "releases": counts["releases"],
+        "stage_completions": counts["stage_completions"],
+        "wall_s": round(wall, 4),
+        "events_per_sec": round(events / max(wall, 1e-9), 1),
+        "jps": round(m.jps, 2),
+    }
+
+
+def measure(fast: bool, repeat: int = 1) -> dict:
+    out = {"meta": {"fast": fast}, "scenarios": {}}
+    for name, build in _scenarios(fast).items():
+        r = run_scenario(build, repeat)
+        out["scenarios"][name] = r
+        print(f"# {name}: {r['events']} events in {r['wall_s']:.2f}s "
+              f"-> {r['events_per_sec']:.0f} ev/s", file=sys.stderr)
+    return out
+
+
+def _geomean(xs) -> float:
+    xs = [max(x, 1e-9) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def check(fresh: dict, baseline: dict, tolerance: float,
+          abs_tolerance: float = 0.30) -> int:
+    """Exit code 1 on regression.
+
+    Absolute events/sec moves with host hardware (the committed baseline
+    was measured on a developer machine; CI runners are often 2-3x
+    slower), so a scenario passes if EITHER of two views is healthy:
+
+    * shape-normalized: its events/sec relative to the run's geometric
+      mean, vs the same ratio in the baseline — hardware-independent,
+      catches one hot path regressing (e.g. the MPS+STR pathology
+      returning) on any machine;
+    * absolute: its events/sec within ``abs_tolerance`` of the
+      committed number — so a large speedup of ONE scenario (which
+      shifts the geomean and lowers every other scenario's ratio) does
+      not flag the unchanged ones as regressions.
+
+    A true regression fails both: it drops relative to its siblings AND
+    below its absolute floor. The residual blind spot is a uniform
+    slowdown measured on much slower hardware — refresh the baseline
+    with ``--write-baseline`` when hardware or engine generations
+    change."""
+    if fresh["meta"].get("fast") != baseline.get("meta", {}).get("fast"):
+        print("# baseline fidelity (meta.fast) does not match this run; "
+              "refresh it with the same mode (--write-baseline)",
+              file=sys.stderr)
+        return 1
+    base = baseline.get("scenarios", {})
+    common = [n for n in fresh["scenarios"] if n in base]
+    for name in fresh["scenarios"]:
+        if name not in base:
+            print(f"# {name}: no committed baseline, skipping",
+                  file=sys.stderr)
+    if not common:
+        return 0
+    f_gm = _geomean([fresh["scenarios"][n]["events_per_sec"]
+                     for n in common])
+    b_gm = _geomean([base[n]["events_per_sec"] for n in common])
+    failed = 0
+    for name in common:
+        r, b = fresh["scenarios"][name], base[name]
+        rel_fresh = r["events_per_sec"] / f_gm
+        rel_base = b["events_per_sec"] / b_gm
+        rel_ok = rel_fresh >= rel_base * (1.0 - tolerance)
+        abs_ok = (r["events_per_sec"]
+                  >= b["events_per_sec"] * (1.0 - abs_tolerance))
+        ok = rel_ok or abs_ok
+        print(f"# {name}: {r['events_per_sec']:.0f} ev/s "
+              f"(norm {rel_fresh:.2f} vs baseline {rel_base:.2f}; "
+              f"committed {b['events_per_sec']:.0f}) "
+              f"{'OK' if ok else 'REGRESSION'}", file=sys.stderr)
+        failed += 0 if ok else 1
+    return 1 if failed else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="compare against the committed baseline")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max normalized events/sec drop per scenario")
+    ap.add_argument("--abs-tolerance", type=float, default=0.30,
+                    help="absolute events/sec floor; a scenario passes "
+                         "on EITHER the normalized or the absolute view")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh benchmarks/BENCH_engine.json (keeps "
+                         "before_* fields)")
+    ap.add_argument("--repeat", type=int, default=0,
+                    help="best-of-N per scenario (default: 3 with "
+                         "--check, else 1)")
+    ap.add_argument("--out", default=str(OUT))
+    args = ap.parse_args()
+
+    repeat = args.repeat or (3 if args.check else 1)
+    fresh = measure(args.fast, repeat)
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(fresh, indent=1))
+    print(f"# wrote {out}", file=sys.stderr)
+
+    if args.write_baseline:
+        old = (json.loads(BASELINE.read_text()) if BASELINE.exists()
+               else {"scenarios": {}, "meta": {}})
+        for name, r in fresh["scenarios"].items():
+            prev = old["scenarios"].get(name, {})
+            merged = dict(r)
+            for k in ("before_events_per_sec", "before_wall_s"):
+                if k in prev:
+                    merged[k] = prev[k]
+            old["scenarios"][name] = merged
+        # refresh fidelity, keep provenance fields (the note explaining
+        # where before_* numbers came from must survive refreshes)
+        meta = old.get("meta", {})
+        meta["fast"] = fresh["meta"]["fast"]
+        old["meta"] = meta
+        BASELINE.write_text(json.dumps(old, indent=1))
+        print(f"# wrote {BASELINE}", file=sys.stderr)
+
+    if args.check:
+        if not BASELINE.exists():
+            print("# no committed baseline; nothing to check",
+                  file=sys.stderr)
+            return
+        sys.exit(check(fresh, json.loads(BASELINE.read_text()),
+                       args.tolerance, args.abs_tolerance))
+
+    for name, r in fresh["scenarios"].items():
+        print(f"perf_engine/{name},{r['wall_s']*1e6:.0f},"
+              f"{r['events_per_sec']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,45 +3,163 @@
 Prints ``name,us_per_call,derived`` CSV per the harness contract; each
 module also caches full JSON under artifacts/bench/ (EXPERIMENTS.md reads
 those). ``--fast`` trims sweep widths for CI.
+
+``--jobs N`` runs figures process-parallel (default: one worker per CPU,
+capped at the number of work items). Figures that declare ``UNITS``
+(fig4_6: one unit per DNN task set) are split below the figure level so
+the widest sweep doesn't serialize the whole suite; their unit results
+are merged and cached in the parent process. ``--jobs 1`` preserves the
+historic in-process sequential path. Results and cache files are
+identical whichever path runs — workers only compute, the CSV is emitted
+in canonical figure order by the parent.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import os
 import sys
 import time
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+
+# canonical figure order: (name, module, runner of last resort)
+FIGURES = [
+    ("table1", "benchmarks.table1_batching"),
+    ("fig4_6", "benchmarks.fig4_6_policies"),
+    ("fig7", "benchmarks.fig7_mixed"),
+    ("fig8", "benchmarks.fig8_ablation"),
+    ("fig9", "benchmarks.fig9_mret"),
+    ("fig10", "benchmarks.fig10_batching"),
+    ("fig11", "benchmarks.fig11_overload"),
+    ("baselines", "benchmarks.baselines"),
+]
+
+
+def _run_figure(modname: str, fast: bool):
+    """Worker: compute (and cache) a whole figure."""
+    import inspect
+    mod = importlib.import_module(modname)
+    # inspect the signature instead of catching TypeError: a TypeError
+    # raised inside run(fast=...) must surface, not silently rerun the
+    # figure at full fidelity
+    if "fast" in inspect.signature(mod.run).parameters:
+        return mod.run(fast=fast)
+    return mod.run()
+
+
+def _run_unit(modname: str, unit: str, fast: bool):
+    """Worker: compute one parallel unit of a UNITS-declaring figure."""
+    mod = importlib.import_module(modname)
+    return mod.run_unit(unit, fast)
+
+
+def _sequential(selected, fast: bool) -> dict:
+    out = {}
+    for name, modname in selected:
+        t0 = time.time()
+        try:
+            out[name] = _run_figure(modname, fast)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # keep the harness running
+            print(f"# {name} FAILED: {e!r}", file=sys.stderr)
+            out[name] = None
+    return out
+
+
+def _parallel(selected, fast: bool, jobs: int) -> dict:
+    out = {}
+    t0 = {}
+    pending_units: dict = {}   # name -> {unit: result|None}
+    fut_info = {}
+    with ProcessPoolExecutor(max_workers=jobs) as pool:
+        for name, modname in selected:
+            mod = importlib.import_module(modname)
+            cached = None
+            t0[name] = time.time()
+            try:
+                if hasattr(mod, "load_cached"):
+                    cached = mod.load_cached(fast)
+            except Exception as e:   # e.g. a truncated cache file
+                print(f"# {name} cache unreadable ({e!r}), recomputing",
+                      file=sys.stderr)
+                cached = None
+            if cached:
+                out[name] = cached
+                print(f"# {name} cached", file=sys.stderr)
+            elif hasattr(mod, "UNITS"):
+                pending_units[name] = {u: None for u in mod.UNITS}
+                for u in mod.UNITS:
+                    fut = pool.submit(_run_unit, modname, u, fast)
+                    fut_info[fut] = (name, modname, u)
+            else:
+                fut = pool.submit(_run_figure, modname, fast)
+                fut_info[fut] = (name, modname, None)
+        not_done = set(fut_info)
+        while not_done:
+            done, not_done = wait(not_done, return_when=FIRST_COMPLETED)
+            for fut in done:
+                name, modname, unit = fut_info[fut]
+                err = fut.exception()
+                if err is not None:
+                    print(f"# {name} FAILED: {err!r}", file=sys.stderr)
+                    out.setdefault(name, None)
+                    pending_units.pop(name, None)
+                    continue
+                if unit is None:
+                    out[name] = fut.result()
+                    print(f"# {name} done in {time.time()-t0[name]:.1f}s",
+                          file=sys.stderr)
+                    continue
+                units = pending_units.get(name)
+                if units is None:
+                    continue       # a sibling unit already failed
+                units[unit] = fut.result()
+                if all(v is not None for v in units.values()):
+                    mod = importlib.import_module(modname)
+                    try:
+                        out[name] = mod.merge_units(units, fast)
+                        print(f"# {name} done in "
+                              f"{time.time()-t0[name]:.1f}s "
+                              f"({len(units)} units)", file=sys.stderr)
+                    except Exception as e:   # keep the harness running
+                        print(f"# {name} FAILED: {e!r}", file=sys.stderr)
+                        out[name] = None
+                    pending_units.pop(name)
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="parallel worker processes (0 = one per CPU, "
+                         "capped; 1 = historic sequential path)")
     args, _ = ap.parse_known_args()
 
-    from . import (baselines, fig4_6_policies, fig7_mixed, fig8_ablation,
-                   fig9_mret, fig10_batching, fig11_overload, table1_batching)
+    selected = [(n, m) for n, m in FIGURES
+                if not args.only or n == args.only]
+    n_items = sum(len(getattr(importlib.import_module(m), "UNITS", ())) or 1
+                  for _, m in selected)
+    jobs = args.jobs or min(os.cpu_count() or 1, 8, n_items)
+    if jobs > 1 and len(selected) > 1 or jobs > 1 and any(
+            hasattr(importlib.import_module(m), "UNITS")
+            for _, m in selected):
+        results = _parallel(selected, args.fast, jobs)
+    else:
+        results = _sequential(selected, args.fast)
 
     lines = []
-    jobs = [
-        ("table1", lambda: table1_batching.csv_lines(table1_batching.run())),
-        ("fig4_6", lambda: fig4_6_policies.csv_lines(
-            fig4_6_policies.run(fast=args.fast))),
-        ("fig7", lambda: fig7_mixed.csv_lines(fig7_mixed.run())),
-        ("fig8", lambda: fig8_ablation.csv_lines(fig8_ablation.run())),
-        ("fig9", lambda: fig9_mret.csv_lines(fig9_mret.run())),
-        ("fig10", lambda: fig10_batching.csv_lines(
-            fig10_batching.run(fast=args.fast))),
-        ("fig11", lambda: fig11_overload.csv_lines(fig11_overload.run())),
-        ("baselines", lambda: baselines.csv_lines(baselines.run())),
-    ]
-    for name, fn in jobs:
-        if args.only and name != args.only:
+    for name, modname in selected:
+        blob = results.get(name)
+        if blob is None:
+            lines.append(f"{name}/FAILED,0,0")
             continue
-        t0 = time.time()
+        mod = importlib.import_module(modname)
         try:
-            lines.extend(fn())
-            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
-        except Exception as e:  # keep the harness running
-            print(f"# {name} FAILED: {e!r}", file=sys.stderr)
+            lines.extend(mod.csv_lines(blob))
+        except Exception as e:
+            print(f"# {name} csv FAILED: {e!r}", file=sys.stderr)
             lines.append(f"{name}/FAILED,0,0")
 
     # roofline summary rows (from dry-run artifacts, if present)

@@ -104,3 +104,4 @@ def load_scheduler_state(sched, path: str) -> None:
         for s, win in zip(t.mret.stages, rec["mret_windows"]):
             s.window.clear()
             s.window.extend(win)
+        t.mret.invalidate()   # windows were mutated behind the memo

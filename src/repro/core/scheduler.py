@@ -55,6 +55,50 @@ class Rejection:
     priority: int
 
 
+class LaneMap(dict):
+    """Lane occupancy table ``(ctx, slot) -> StageInstance | None`` with
+    free/busy indexes maintained on assignment.
+
+    ``free_lanes``/``predicted_finish`` used to scan every lane on every
+    engine iteration; the indexes make both reads O(result). Plain
+    ``lanes[lane] = inst`` assignment (engine, backends, tests) keeps the
+    indexes coherent because ``__setitem__`` is the single write path.
+    Iteration order everywhere is sorted lane order — identical to the
+    historic insertion order (contexts ascending, slots ascending), which
+    the bit-exactness guarantee relies on."""
+
+    def __init__(self):
+        super().__init__()
+        self._free: set = set()
+        self._busy_by_ctx: Dict[int, Dict[tuple, StageInstance]] = {}
+        self._dead: set = set()
+
+    def __setitem__(self, lane: tuple, inst: Optional[StageInstance]) -> None:
+        dict.__setitem__(self, lane, inst)
+        ctx = lane[0]
+        busy = self._busy_by_ctx.setdefault(ctx, {})
+        if inst is None:
+            busy.pop(lane, None)
+            if ctx not in self._dead:
+                self._free.add(lane)
+        else:
+            busy.pop(lane, None)
+            busy[lane] = inst
+            self._free.discard(lane)
+
+    def retire_ctx(self, ctx: int) -> None:
+        """Mark a context dead: its lanes never report free again."""
+        self._dead.add(ctx)
+        self._free = {ln for ln in self._free if ln[0] != ctx}
+
+    def free_lanes(self) -> List[tuple]:
+        return sorted(self._free)
+
+    def busy_in_ctx(self, ctx: int) -> List[tuple]:
+        """Sorted (lane, inst) pairs of occupied lanes in one context."""
+        return sorted(self._busy_by_ctx.get(ctx, {}).items())
+
+
 class DarisScheduler:
     def __init__(self, specs: List[TaskSpec], cfg: SchedulerConfig,
                  device: Optional[DeviceModel] = None):
@@ -70,13 +114,18 @@ class DarisScheduler:
             int(self.device.n_units))
         self.queues: Dict[int, StageQueue] = {
             c.index: StageQueue(cfg.queue_cfg) for c in self.contexts}
-        # lane occupancy: (ctx, slot) -> StageInstance | None
-        self.lanes: Dict[tuple, Optional[StageInstance]] = {
-            (c.index, s): None for c in self.contexts
-            for s in range(c.n_streams)}
-        self.active_jobs: Dict[int, List[Job]] = {c.index: []
-                                                  for c in self.contexts}
+        # lane occupancy: (ctx, slot) -> StageInstance | None (indexed)
+        self.lanes = LaneMap()
+        for c in self.contexts:
+            for s in range(c.n_streams):
+                self.lanes[(c.index, s)] = None
+        # per-context insertion-ordered job sets (Job hashes by identity):
+        # membership tests and removals are O(1) where list.remove used to
+        # walk — and value-compare — every active job
+        self.active_jobs: Dict[int, Dict[Job, None]] = {
+            c.index: {} for c in self.contexts}
         self.rejections: List[Rejection] = []
+        self.rejected_counts: Dict[int, int] = {HP: 0, LP: 0}
         self.migrations = 0
         self.coalesced = 0            # releases absorbed into batched jobs
         self._coalescer = (BatchCoalescer(cfg.batch_policy)
@@ -188,12 +237,11 @@ class DarisScheduler:
         Batched stages cost b/g(b) x their normalized MRET, here and in
         ``StageQueue.backlog_ms``."""
         ctx = self.contexts[k]
-        running = [i for (c, _), i in self.lanes.items()
-                   if c == k and i is not None]
         rem = 0.0
-        for inst in running:
-            mret = (inst.task.mret.stage_mret(inst.job.stage_idx)
-                    * batch_cost(inst.profile, inst.job.n_inputs))
+        for _, inst in self.lanes.busy_in_ctx(k):
+            # running instances always entered through StageQueue.push,
+            # so their cached estimator/cost fields are populated
+            mret = inst.smret.value() * inst.cost_b
             rem += max(mret - inst.work_done, 0.0)
         rem += self.queues[k].backlog_ms()
         return now + rem / max(ctx.n_streams, 1)
@@ -216,13 +264,14 @@ class DarisScheduler:
                      if c.index != k and self.admits(c.index, task, now)]
             if not cands:
                 self.rejections.append(Rejection(task.name, now, task.priority))
+                self.rejected_counts[task.priority] += 1
                 return None
             k = min(cands, key=lambda c: self.predicted_finish(c, now))
             if task.priority == LP and not task.fixed_ctx:
                 task.ctx = k          # sticky migration (zero-delay: the job
                 self.migrations += 1  # simply enqueues on the new partition)
         job.ctx = k
-        self.active_jobs[k].append(job)
+        self.active_jobs[k][job] = None
         inst = self._enqueue_stage(job, now)
         if self._coalescer is not None:
             self._coalescer.register(task, inst)
@@ -282,6 +331,9 @@ class DarisScheduler:
                 return None
         job.extra_release_ms.append(now)
         job.extra_member_idx.append(task.index)
+        # the head instance is still queued: refresh its cached backlog
+        # cost to the grown batch size (see StageInstance.cost_b)
+        inst.cost_b = batch_cost(inst.profile, job.n_inputs)
         self.coalesced += 1
         return job
 
@@ -307,7 +359,7 @@ class DarisScheduler:
         missed_vdl = now > inst.virtual_deadline_ms
         if job.is_last_stage():
             job.finish_ms = now
-            self.active_jobs[job.ctx].remove(job)
+            del self.active_jobs[job.ctx][job]
             return job
         job.stage_idx += 1
         job.vdl_missed_prev = missed_vdl     # §IV-B2 priority boost
@@ -352,19 +404,18 @@ class DarisScheduler:
         return self.next_wake_ms <= latest_start
 
     def free_lanes(self) -> List[tuple]:
-        return [lane for lane, inst in self.lanes.items()
-                if inst is None and self.contexts[lane[0]].alive]
+        return self.lanes.free_lanes()
 
     # ------------------------------------------------------ fault / elastic
     def fail_context(self, k: int, now: float) -> List[StageInstance]:
         """Partition loss: survivors inherit tasks via Algorithm 1 re-run;
         in-flight stages replay (stage granularity bounds lost work)."""
         self.contexts[k].alive = False
+        self.lanes.retire_ctx(k)
         orphans = self.queues[k].drain()
-        for lane, inst in list(self.lanes.items()):
-            if lane[0] == k and inst is not None:
-                orphans.append(inst)
-                self.lanes[lane] = None
+        for lane, inst in self.lanes.busy_in_ctx(k):
+            orphans.append(inst)
+            self.lanes[lane] = None
         alive = [c.index for c in self.contexts if c.alive]
         if not alive:
             raise RuntimeError("all contexts failed")
@@ -386,8 +437,8 @@ class DarisScheduler:
         for inst in orphans:
             job = inst.job
             if job in self.active_jobs[k]:
-                self.active_jobs[k].remove(job)
-                self.active_jobs[job.task.ctx].append(job)
+                del self.active_jobs[k][job]
+                self.active_jobs[job.task.ctx][job] = None
             job.ctx = job.task.ctx
             inst.work_done = 0.0      # replay from stage start
             inst.lane = None
@@ -407,7 +458,7 @@ class DarisScheduler:
                       n_streams=self.cfg.n_streams)
         self.contexts.append(ctx)
         self.queues[idx] = StageQueue(self.cfg.queue_cfg)
-        self.active_jobs[idx] = []
+        self.active_jobs[idx] = {}
         for s in range(ctx.n_streams):
             self.lanes[(idx, s)] = None
         return ctx

@@ -42,6 +42,12 @@ class StageQueue:
         self._heap = []
 
     def push(self, inst: StageInstance) -> None:
+        if inst.smret is None:
+            job = inst.job
+            mret = job.task.mret
+            if mret is not None:     # bare tasks in unit tests carry none
+                inst.smret = mret.stages[job.stage_idx]
+                inst.cost_b = batch_cost(inst.profile, job.n_inputs)
         key = (stage_level(inst, self.qcfg), inst.virtual_deadline_ms,
                next(_seq))
         heapq.heappush(self._heap, (key, inst))
@@ -65,9 +71,10 @@ class StageQueue:
 
     def backlog_ms(self) -> float:
         """Sum of MRET of queued stages (migration target estimation);
-        batched stages cost b/g(b) x their normalized MRET."""
+        batched stages cost b/g(b) x their normalized MRET. Uses the
+        per-instance cached estimator/cost (see StageInstance): same
+        floats, same left-to-right order, none of the property chains."""
         total = 0.0
         for _, inst in self._heap:
-            total += (inst.task.mret.stage_mret(inst.job.stage_idx)
-                      * batch_cost(inst.profile, inst.job.n_inputs))
+            total += inst.smret.value() * inst.cost_b
         return total

@@ -51,9 +51,13 @@ class TaskSpec:
         return len(self.stages)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Task:
-    """Runtime task state: MRET estimates + context assignment."""
+    """Runtime task state: MRET estimates + context assignment.
+
+    ``eq=False``: runtime objects compare by identity. Value equality
+    would recurse through spec/stage dataclasses on every membership
+    test, which made ``list.remove`` on job collections quadratic."""
     spec: TaskSpec
     index: int
     ctx: int = -1                     # current context (ctx_i(t))
@@ -74,7 +78,7 @@ class Task:
         return self.mret.task_mret(now_ms) / self.spec.period_ms
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Job:
     """One release of a task — or, under dynamic batching, one *batched*
     release: later releases of the same task that coalesced into this job
@@ -120,15 +124,24 @@ class Job:
         return self.stage_idx == self.task.spec.n_stages - 1
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class StageInstance:
-    """The schedulable unit: stage ``job.stage_idx`` of ``job``."""
+    """The schedulable unit: stage ``job.stage_idx`` of ``job``.
+    Identity equality (``eq=False``): two instances are never "the same
+    stage" unless they are the same object."""
     job: Job
     enqueue_ms: float
     virtual_deadline_ms: float        # absolute (Eq. 8 slice end)
     work_done: float = 0.0            # device-seconds already executed
     lane: Optional[tuple] = None      # (ctx, slot) while running
     start_ms: Optional[float] = None
+    # backlog-estimation constants, filled on first queue entry
+    # (StageQueue.push): the stage's MRET estimator and its batch cost
+    # b/g(b) are fixed for the instance's lifetime, and resolving them
+    # through job -> task -> spec property chains per queued stage made
+    # backlog_ms the hottest loop on overload runs
+    smret: Optional[object] = None    # core.mret.StageMret
+    cost_b: float = 1.0
 
     @property
     def profile(self) -> StageProfile:

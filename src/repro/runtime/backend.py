@@ -16,9 +16,20 @@ policy lives entirely in ``EngineCore``/``DarisScheduler``. The contract:
 
 ``SimBackend`` wraps the processor-sharing fluid simulation (versioned
 finish predictions, lognormal stage noise, straggler mitigation);
-``RealtimeBackend`` wraps threaded execution of real (jitted JAX) stage
-payloads on wall-clock time. Both are driven by the same EngineCore loop,
-which is what makes sim-vs-real scheduler-decision parity testable.
+``RealtimeBackend`` wraps pooled-thread execution of real (jitted JAX)
+stage payloads on wall-clock time. Both are driven by the same EngineCore
+loop, which is what makes sim-vs-real scheduler-decision parity testable.
+
+RNG-draw-order invariant
+------------------------
+The sim's RNG stream is shared between arrival phase offsets (drawn when
+``EngineCore.run`` seeds the timeline) and per-launch lognormal stage
+noise (drawn inside ``launch``, one draw per dispatched stage, in
+dispatch order). Every metric the repo treats as reproducible — and the
+golden fixtures in tests/test_engine_golden.py — depends on that order.
+Any engine change (vectorization, batching, reordering of dispatch) MUST
+keep the number and order of draws identical; draw noise at launch, never
+earlier or later, and never draw speculatively.
 """
 from __future__ import annotations
 
@@ -37,6 +48,19 @@ from .contention import batch_cost, batched_stage_ms
 from .engine_core import Completion, EngineCore
 
 _tie = itertools.count()
+
+# SimBackend.running entry layout (kept as a mutable list for speed):
+#   [0] inst          StageInstance
+#   [1] rem           remaining work, ms of single-stream-alone time
+#   [2] rate          current speed fraction
+#   [3] version       stamp matching the live heap prediction
+#   [4] eff_prof      effective (possibly batch-widened) StageProfile
+#   [5] eta           finish time of the live heap prediction (None until
+#                     the first prediction is pushed)
+#   [6] smret         the instance's StageMret estimator (live ref)
+#   [7] cost          batch cost b/g(b) of this stage (static per launch)
+#   [8] floor         straggler kill floor, 4 x batched work (static)
+_INST, _REM, _RATE, _VER, _EFF, _ETA, _SMRET, _COST, _FLOOR = range(9)
 
 
 class ExecutionBackend(Protocol):
@@ -58,23 +82,43 @@ class SimBackend:
     """Fluid-rate discrete-event substrate (virtual time).
 
     Whenever the running set changes, per-lane rates are recomputed from
-    the contention model and finish times re-predicted. Predictions are
+    the contention model — as one vectorized NumPy pass over preallocated
+    per-lane arrays — and finish times re-predicted. Predictions are
     version-stamped so a rate change invalidates stale ones in O(1).
     Stage work carries seeded lognormal noise so MRET has variability to
     track (paper Fig. 9).
+
+    Incremental re-prediction: rates are only recomputed when the running
+    set actually changed (launch/harvest/cancel/straggler-kill marks the
+    epoch dirty), and a lane's prediction is only re-pushed when its
+    recomputed finish time moved beyond ``predict_eps`` from the one
+    already in the heap. With the default ``predict_eps=0.0`` this is
+    exact: the live prediction always carries the same float the full
+    recompute would produce, so results are bit-identical to the historic
+    push-everything engine while the heap stays near its live size
+    (stale entries are compacted away once they outnumber live ones).
+
+    ``full_repredict=True`` restores the historic behavior (recompute +
+    re-push every lane on every call) — kept as the reference for the
+    incremental-vs-full property test.
     """
 
     EPS = 1e-6   # ms; snap-to-zero tolerance
+    _COMPACT_MIN = 64   # never bother compacting heaps smaller than this
 
     def __init__(self, noise_sigma: float = 0.06,
-                 rng: Optional[np.random.Generator] = None):
+                 rng: Optional[np.random.Generator] = None, *,
+                 predict_eps: float = 0.0,
+                 full_repredict: bool = False):
         self.noise_sigma = noise_sigma
         self.rng = rng
+        self.predict_eps = predict_eps
+        self.full_repredict = full_repredict
         self.core: Optional[EngineCore] = None
         self.now = 0.0
-        # lane -> [inst, remaining_ms, rate, version]
-        self.running: Dict[tuple, list] = {}
+        self.running: Dict[tuple, list] = {}   # lane -> entry (layout above)
         self._heap: List[tuple] = []   # (t, seq, lane, version)
+        self._rates_dirty = True
 
     # ----------------------------------------------------------- lifecycle
     def bind(self, core: EngineCore) -> None:
@@ -99,21 +143,22 @@ class SimBackend:
         dt = t - self.now
         if dt > 0:
             for entry in self.running.values():
-                entry[1] = max(entry[1] - entry[2] * dt, 0.0)
-                if entry[1] < self.EPS:
-                    entry[1] = 0.0
-                entry[0].work_done += entry[2] * dt
+                done = entry[_RATE] * dt
+                rem = entry[_REM] - done
+                entry[_REM] = rem if rem >= self.EPS else 0.0
+                entry[_INST].work_done += done
         self.now = t
 
     def advance(self, cap_ms: float) -> List[Completion]:
         while self._heap and self._heap[0][0] < cap_ms:
             t, _, lane, ver = heapq.heappop(self._heap)
             entry = self.running.get(lane)
-            if entry is None or entry[3] != ver:
+            if entry is None or entry[_VER] != ver:
                 continue                      # stale prediction
             self._advance_to(t)
-            inst = entry[0]
+            inst = entry[_INST]
             del self.running[lane]
+            self._rates_dirty = True
             return [Completion(lane, inst, t - inst.start_ms)]
         self._advance_to(cap_ms)
         return []
@@ -125,86 +170,129 @@ class SimBackend:
         noise = math.exp(self.rng.normal(0.0, self.noise_sigma))
         # batched jobs carry b inputs in one dispatch: work scales by
         # b / g(b) (Table-I-calibrated curve), overhead is paid once
-        work = (batched_stage_ms(prof, b) + prof.overhead_ms) * noise
+        alone = batched_stage_ms(prof, b)
+        work = (alone + prof.overhead_ms) * noise
         # batched kernels also widen — the effective profile competes for
         # more units in the rate computation (identity object for b = 1)
         eff = self.core.sched.contention.batched_profile(prof, b)
+        # straggler-check constants, hoisted out of the per-event loop:
+        # the stage's MRET estimator, its batch cost, and its kill floor
+        # are fixed for the lifetime of this launch
+        smret = inst.task.mret.stages[inst.job.stage_idx]
+        cost = batch_cost(prof, b)
+        floor = 4.0 * (alone + prof.overhead_ms)
         # version must be globally unique: a reset-to-0 counter lets a
         # stale FINISH from the lane's previous occupant fire early
-        self.running[lane] = [inst, work, 0.0, next(_tie), eff]
+        self.running[lane] = [inst, work, 0.0, next(_tie), eff, None,
+                              smret, cost, floor]
+        self._rates_dirty = True
 
     def cancel_ctx(self, ctx_idx: int) -> None:
         for lane in list(self.running):
             if lane[0] == ctx_idx:
                 del self.running[lane]
+                self._rates_dirty = True
 
     def on_job_done(self, job: Job) -> None:
         pass
 
+    # ------------------------------------------------------------- predict
+    def _check_stragglers(self) -> None:
+        """Straggler mitigation (beyond-paper, DESIGN.md §7): a stage whose
+        projected completion exceeds kappa x its MRET is killed and
+        re-enqueued — the Eq. 12 machinery then places it on the
+        least-loaded context. Stage granularity bounds the lost work."""
+        sched = self.core.sched
+        kappa = sched.cfg.straggler_kappa
+        if not kappa:
+            return
+        killed = False
+        now = self.now
+        for lane, entry in list(self.running.items()):
+            inst = entry[_INST]
+            if entry[_RATE] <= 0:
+                continue
+            projected = ((now - inst.start_ms)
+                         + entry[_REM] / max(entry[_RATE], 1e-6))
+            mret = entry[_SMRET].value() * entry[_COST]
+            floor = entry[_FLOOR]
+            if projected > max(kappa * mret, floor) and len(self.running) > 1:
+                del self.running[lane]
+                self._rates_dirty = True
+                sched.lanes[lane] = None
+                inst.work_done = 0.0
+                inst.lane = None
+                # re-enqueue at the stage boundary (zero-delay): an HP
+                # task's context is FIXED (Algorithm 1) — its straggler
+                # replays on its own partition, never migrates. Only
+                # LP jobs move, to the least-backlogged live context,
+                # and each such move is a migration.
+                old = inst.job.ctx
+                if inst.task.fixed_ctx:
+                    tgt = inst.task.ctx
+                else:
+                    cands = [c.index for c in sched.contexts if c.alive]
+                    tgt = min(cands, key=lambda k:
+                              sched.predicted_finish(k, self.now))
+                    if tgt != old:
+                        sched.migrations += 1
+                if inst.job in sched.active_jobs.get(old, {}):
+                    del sched.active_jobs[old][inst.job]
+                    sched.active_jobs[tgt][inst.job] = None
+                inst.job.ctx = tgt
+                sched.queues[tgt].push(inst)
+                self.core.metrics.stragglers += 1
+                killed = True
+        if killed:
+            self.core._dispatch()
+
     def running_set_changed(self) -> None:
-        """Recompute all rates; re-predict and version-stamp finishes.
-        Also runs straggler mitigation (beyond-paper, DESIGN.md §7): a
-        stage whose projected completion exceeds kappa x its MRET is
-        killed and re-enqueued — the Eq. 12 machinery then places it on
-        the least-loaded context. Stage granularity bounds the lost work."""
+        """Recompute rates (only when the running-set epoch is dirty) and
+        re-push finish predictions for lanes whose predicted finish moved
+        (see class docstring for the exactness argument)."""
+        if not self.running:
+            return
+        self._check_stragglers()
         if not self.running:
             return
         sched = self.core.sched
-        kappa = sched.cfg.straggler_kappa
-        if kappa:
-            killed = False
-            for lane, entry in list(self.running.items()):
-                inst = entry[0]
-                if entry[2] <= 0:
-                    continue
-                projected = ((self.now - inst.start_ms)
-                             + entry[1] / max(entry[2], 1e-6))
-                cost = batch_cost(inst.profile, inst.job.n_inputs)
-                mret = (inst.task.mret.stage_mret(inst.job.stage_idx)
-                        * cost)
-                floor = 4.0 * (batched_stage_ms(inst.profile,
-                                                inst.job.n_inputs)
-                               + inst.profile.overhead_ms)
-                if projected > max(kappa * mret, floor) and len(self.running) > 1:
-                    del self.running[lane]
-                    sched.lanes[lane] = None
-                    inst.work_done = 0.0
-                    inst.lane = None
-                    # re-enqueue at the stage boundary (zero-delay): an HP
-                    # task's context is FIXED (Algorithm 1) — its straggler
-                    # replays on its own partition, never migrates. Only
-                    # LP jobs move, to the least-backlogged live context,
-                    # and each such move is a migration.
-                    old = inst.job.ctx
-                    if inst.task.fixed_ctx:
-                        tgt = inst.task.ctx
-                    else:
-                        cands = [c.index for c in sched.contexts if c.alive]
-                        tgt = min(cands, key=lambda k:
-                                  sched.predicted_finish(k, self.now))
-                        if tgt != old:
-                            sched.migrations += 1
-                    if inst.job in sched.active_jobs.get(old, []):
-                        sched.active_jobs[old].remove(inst.job)
-                        sched.active_jobs[tgt].append(inst.job)
-                    inst.job.ctx = tgt
-                    sched.queues[tgt].push(inst)
-                    self.core.metrics.stragglers += 1
-                    killed = True
-            if killed:
-                self.core._dispatch()
-        ctx_active: Dict[int, int] = {}
-        for lane in self.running:
-            ctx_active[lane[0]] = ctx_active.get(lane[0], 0) + 1
         entries = list(self.running.items())
-        rates = sched.contention.rates([
-            (lane, e[4], sched.contexts[lane[0]].cap,
-             ctx_active[lane[0]]) for lane, e in entries])
-        for (lane, entry), rate in zip(entries, rates):
-            entry[2] = max(rate, 1e-6)
-            entry[3] = next(_tie)
-            eta = self.now + entry[1] / entry[2]
-            heapq.heappush(self._heap, (eta, next(_tie), lane, entry[3]))
+        m = len(entries)
+        if self._rates_dirty or self.full_repredict:
+            ctx_active: Dict[int, int] = {}
+            for lane, _ in entries:
+                ctx_active[lane[0]] = ctx_active.get(lane[0], 0) + 1
+            contexts = sched.contexts
+            u, ns, mf = [], [], []
+            for lane, e in entries:
+                eff = e[_EFF]
+                u.append(contexts[lane[0]].cap / max(ctx_active[lane[0]], 1))
+                ns.append(eff.n_sat)
+                mf.append(eff.mem_frac)
+            rates = sched.contention.rates_seq(u, ns, mf)
+            for (_, entry), rate in zip(entries, rates):
+                entry[_RATE] = rate if rate > 1e-6 else 1e-6
+            self._rates_dirty = False
+        now, eps, full = self.now, self.predict_eps, self.full_repredict
+        heap = self._heap
+        for lane, entry in entries:
+            eta = now + entry[_REM] / entry[_RATE]
+            old = entry[_ETA]
+            if not full and old is not None and abs(eta - old) <= eps:
+                continue        # live prediction already carries this eta
+            entry[_VER] = next(_tie)
+            entry[_ETA] = eta
+            heapq.heappush(heap, (eta, next(_tie), lane, entry[_VER]))
+        # compaction: once stale predictions outnumber live ones 2:1,
+        # rebuild the heap with only the live entries (pop order of
+        # survivors is unchanged — the seq tie-breaker is preserved)
+        if len(heap) > self._COMPACT_MIN and len(heap) > 2 * m:
+            running = self.running
+            live = [e for e in heap
+                    if (ent := running.get(e[2])) is not None
+                    and ent[_VER] == e[3]]
+            heapq.heapify(live)
+            self._heap = live
 
 
 def _default_input_factory(input_hw: int, batch: int) -> Callable[[Job], object]:
@@ -218,8 +306,55 @@ def _default_input_factory(input_hw: int, batch: int) -> Callable[[Job], object]
     return make
 
 
+class _WorkerPool:
+    """Persistent daemon-thread pool for ``RealtimeBackend``.
+
+    The backend used to spawn one fresh thread per dispatched stage;
+    thread start latency (~100-300us) landed inside every measured stage
+    wall time. The pool keeps one long-lived worker per lane — sized via
+    ``ensure`` so elastic scale-out grows it — and hands stages over
+    through a queue, so the dispatch path is a lock-free put."""
+
+    def __init__(self):
+        self._q: "queue.Queue" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+
+    def ensure(self, n: int) -> None:
+        while len(self._threads) < n:
+            t = threading.Thread(target=self._loop, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, lane, inst = item
+            try:
+                fn(lane, inst)
+            except Exception as e:   # noqa: BLE001 — worker must survive
+                # a raising payload loses that stage (exactly what the old
+                # thread-per-stage design did) but must not kill the
+                # worker: a dead worker would starve every later stage
+                # queued to the pool
+                import sys
+                print(f"worker: stage {getattr(inst.task, 'name', '?')} "
+                      f"on lane {lane} raised {e!r}", file=sys.stderr)
+
+    def submit(self, fn, lane: tuple, inst: StageInstance) -> None:
+        self._q.put((fn, lane, inst))
+
+    def stop(self, timeout_s: float = 1.0) -> None:
+        for _ in self._threads:
+            self._q.put(None)
+        for t in self._threads:
+            t.join(timeout=timeout_s)
+        self._threads = []
+
+
 class RealtimeBackend:
-    """Wall-clock substrate: one worker thread per dispatched stage.
+    """Wall-clock substrate: persistent worker pool, one lane per worker.
 
     Stage payloads are arbitrary callables (jitted JAX stage functions in
     production — XLA releases the GIL so lanes genuinely overlap). A stage
@@ -244,16 +379,20 @@ class RealtimeBackend:
         self._inflight = 0
         self._cancelled_ctx: set = set()
         self._t0 = 0.0
+        self._pool = _WorkerPool()
 
     # ----------------------------------------------------------- lifecycle
     def bind(self, core: EngineCore) -> None:
         self.core = core
 
     def start(self) -> None:
+        # one persistent worker per lane: concurrency is bounded by lane
+        # count, so a bigger pool would only idle
+        self._pool.ensure(len(self.core.sched.lanes))
         self._t0 = time.perf_counter()
 
     def stop(self) -> None:
-        pass
+        self._pool.stop()
 
     def now_ms(self) -> float:
         return (time.perf_counter() - self._t0) * 1000.0
@@ -305,13 +444,15 @@ class RealtimeBackend:
 
     def launch(self, lane: tuple, inst: StageInstance) -> None:
         self._inflight += 1
-        threading.Thread(target=self._worker, args=(lane, inst),
-                         daemon=True).start()
+        # elastic scale-out may have added lanes since start()
+        self._pool.ensure(len(self.core.sched.lanes))
+        self._pool.submit(self._worker, lane, inst)
 
     def cancel_ctx(self, ctx_idx: int) -> None:
-        # threads can't be killed; mark the context so their completions
-        # are dropped at harvest (fail_context re-enqueues the instances,
-        # whose .lane is reset — that's the drop signal advance() checks)
+        # workers can't be interrupted; mark the context so their
+        # completions are dropped at harvest (fail_context re-enqueues the
+        # instances, whose .lane is reset — that's the drop signal
+        # advance() checks)
         self._cancelled_ctx.add(ctx_idx)
 
     def on_job_done(self, job: Job) -> None:

@@ -14,6 +14,13 @@ DNNs like InceptionV3 saturate few; wide ones like UNet use all), and
   5. bandwidth:      phi = sum mem_frac_j * speed_j; if phi > 1,
                      speed_i /= (1 - mf_i) + mf_i * phi   (Amdahl-style)
 
+The hot path is ``rates_arrays``: one vectorized NumPy pass over per-lane
+arrays (the sim backend keeps them preallocated). Reductions (device cap,
+unit budget, bandwidth phi) are evaluated in sequential left-to-right
+order, NOT with NumPy's pairwise summation — that keeps every speed
+bit-identical to the historic per-lane Python loops, which is what the
+golden determinism tests (tests/test_engine_golden.py) lock in.
+
 Calibration inputs are the paper's own Table I only (min JPS -> t_alone,
 batching gain -> n_sat; see serving/profiles.py). The model reproduces the
 phenomena the paper measures: OS=1 strands idle capacity, full sharing
@@ -23,7 +30,10 @@ batching/colocation.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
 
 from ..core.task import StageProfile
 
@@ -46,12 +56,20 @@ def batch_speedup(prof: StageProfile, n_inputs: int) -> float:
     return speedup_curve(prof.batch_gain, n_inputs)
 
 
+@functools.lru_cache(maxsize=4096)
+def _batch_cost_cached(g_inf: float, n_inputs: int) -> float:
+    # depends on the profile only through its batch_gain asymptote
+    return n_inputs / speedup_curve(g_inf, n_inputs)
+
+
 def batch_cost(prof: StageProfile, n_inputs: int) -> float:
     """Device-time multiplier of a b-input stage vs a single-input one:
-    b / g(b). Exactly 1.0 for unbatched jobs (bit-identical guarantee)."""
+    b / g(b). Exactly 1.0 for unbatched jobs (bit-identical guarantee).
+    Memoized on (batch_gain, b): the sim hot path (launch, straggler
+    check, backlog estimation) calls this per stage instance."""
     if n_inputs <= 1:
         return 1.0
-    return n_inputs / batch_speedup(prof, n_inputs)
+    return _batch_cost_cached(prof.batch_gain, n_inputs)
 
 
 def batched_stage_ms(prof: StageProfile, n_inputs: int) -> float:
@@ -59,6 +77,12 @@ def batched_stage_ms(prof: StageProfile, n_inputs: int) -> float:
     the per-dispatch ``overhead_ms``, which batching amortizes: one
     dispatch regardless of b)."""
     return prof.t_alone_ms * batch_cost(prof, n_inputs)
+
+
+def _seq_sum(a: np.ndarray) -> float:
+    """Left-to-right float sum, bit-compatible with ``builtins.sum`` over
+    the same values (NumPy's pairwise reduction associates differently)."""
+    return sum(a.tolist())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,47 +94,117 @@ class DeviceModel:
 
 
 class ContentionModel:
+    # below this running-set size the scalar path beats NumPy call
+    # overhead; both paths execute the identical float-op sequence
+    VECTOR_MIN = 16
+
     def __init__(self, device: DeviceModel):
         self.device = device
+        # (id(prof), b) -> (prof, effective prof); the strong ref to prof
+        # in the value keeps its id from being reused by a new object
+        self._batched_prof_cache: Dict[tuple, tuple] = {}
+        # preallocated per-lane columns for the vectorized kernel
+        self._cap = 0
+        self._bu = self._bns = self._bmf = np.empty(0)
 
-    def rates(self, running: Sequence[Tuple[object, StageProfile, float, int]]
-              ) -> List[float]:
-        """running: list of (key, profile, ctx_cap, n_active_in_ctx).
+    def rates_arrays(self, u: np.ndarray, n_sat: np.ndarray,
+                     mem_frac: np.ndarray) -> np.ndarray:
+        """Vectorized rate kernel. ``u`` is each lane's context share
+        (cap_k / n_active_k), ``n_sat``/``mem_frac`` its effective profile
+        columns. Returns speed fractions (1.0 = single-stream-alone).
 
-        Returns speed fractions (1.0 = single-stream-alone speed)."""
-        if not running:
-            return []
+        All elementwise steps are plain IEEE-754 ops and the three
+        reductions run in sequential order, so the output is bit-identical
+        to the scalar reference implementation in ``rates``."""
+        m = u.shape[0]
+        if m == 0:
+            return u
         dev = self.device
-        m = len(running)
-        u = [cap / max(n_act, 1) for _, _, cap, n_act in running]
+        total = _seq_sum(u)
+        if total > dev.n_units:
+            u = u * (dev.n_units / total)
+        beta = dev.bubble
+        bubble_gain = (1.0 - beta / m) / (1.0 - beta)
+        speeds = np.minimum(1.0, np.minimum(u, n_sat) / n_sat * bubble_gain)
+        # unit conservation: total busy units can't exceed the device plus
+        # the bubble-recovery headroom multi-tenancy unlocks (a stream can
+        # fill a neighbour's issue gaps but can't mint new SMs)
+        used = _seq_sum(speeds * n_sat)
+        budget = dev.n_units * (1.0 + beta * (1.0 - 1.0 / m))
+        if used > budget:
+            speeds = speeds * (budget / used)
+        # bandwidth demand grows superlinearly with co-tenant count: more
+        # resident working sets thrash L2 so each stream's effective DRAM
+        # demand rises (the knee-point mechanism SGPRS reports)
+        thrash = 1.0 + dev.l2_pressure * max(m - 1, 0)
+        phi = _seq_sum(mem_frac * speeds) * thrash
+        if phi > 1.0:
+            speeds = speeds / ((1.0 - mem_frac) + mem_frac * phi)
+        return speeds
+
+    def _rates_scalar(self, u: List[float], n_sat: List[float],
+                      mem_frac: List[float]) -> List[float]:
+        """Scalar reference path: the exact op sequence of
+        ``rates_arrays`` on Python floats. Faster below VECTOR_MIN lanes;
+        bit-identical by construction (the incremental-vs-full property
+        test locks the two paths together)."""
+        dev = self.device
+        m = len(u)
         total = sum(u)
         if total > dev.n_units:
             scale = dev.n_units / total
             u = [x * scale for x in u]
         beta = dev.bubble
         bubble_gain = (1.0 - beta / m) / (1.0 - beta)
-        speeds = []
-        for (_, prof, _, _), ui in zip(running, u):
-            rc = min(ui, prof.n_sat) / prof.n_sat
-            speeds.append(min(1.0, rc * bubble_gain))
-        # unit conservation: total busy units can't exceed the device plus
-        # the bubble-recovery headroom multi-tenancy unlocks (a stream can
-        # fill a neighbour's issue gaps but can't mint new SMs)
-        used = sum(s * p.n_sat for (_, p, _, _), s in zip(running, speeds))
+        speeds = [min(1.0, min(ui, ns) / ns * bubble_gain)
+                  for ui, ns in zip(u, n_sat)]
+        used = sum(s * ns for s, ns in zip(speeds, n_sat))
         budget = dev.n_units * (1.0 + beta * (1.0 - 1.0 / m))
         if used > budget:
             shrink = budget / used
             speeds = [s * shrink for s in speeds]
-        # bandwidth demand grows superlinearly with co-tenant count: more
-        # resident working sets thrash L2 so each stream's effective DRAM
-        # demand rises (the knee-point mechanism SGPRS reports)
         thrash = 1.0 + dev.l2_pressure * max(m - 1, 0)
-        phi = sum(p.mem_frac * s for (_, p, _, _), s in zip(running, speeds))
-        phi *= thrash
+        phi = sum(mf * s for mf, s in zip(mem_frac, speeds)) * thrash
         if phi > 1.0:
-            speeds = [s / ((1.0 - p.mem_frac) + p.mem_frac * phi)
-                      for (_, p, _, _), s in zip(running, speeds)]
+            speeds = [s / ((1.0 - mf) + mf * phi)
+                      for s, mf in zip(speeds, mem_frac)]
         return speeds
+
+    def rates_seq(self, u: List[float], n_sat: List[float],
+                  mem_frac: List[float]) -> List[float]:
+        """Rate kernel over parallel per-lane lists — the sim backend's
+        entry point. Dispatches to the scalar path for small running sets
+        and to the preallocated-array NumPy kernel for large ones; both
+        produce identical bits."""
+        m = len(u)
+        if m == 0:
+            return []
+        if m < self.VECTOR_MIN:
+            return self._rates_scalar(u, n_sat, mem_frac)
+        if m > self._cap:
+            self._cap = max(m, 2 * self._cap)
+            self._bu = np.empty(self._cap)
+            self._bns = np.empty(self._cap)
+            self._bmf = np.empty(self._cap)
+        self._bu[:m] = u
+        self._bns[:m] = n_sat
+        self._bmf[:m] = mem_frac
+        return self.rates_arrays(self._bu[:m], self._bns[:m],
+                                 self._bmf[:m]).tolist()
+
+    def rates(self, running: Sequence[Tuple[object, StageProfile, float, int]]
+              ) -> List[float]:
+        """running: list of (key, profile, ctx_cap, n_active_in_ctx).
+
+        Returns speed fractions (1.0 = single-stream-alone speed). List
+        front-end over the kernel for callers without per-lane columns
+        (tests, offline estimates)."""
+        if not running:
+            return []
+        return self.rates_seq(
+            [cap / max(n_act, 1) for _, _, cap, n_act in running],
+            [p.n_sat for _, p, _, _ in running],
+            [p.mem_frac for _, p, _, _ in running])
 
     def batched_profile(self, prof: StageProfile, n_inputs: int
                         ) -> StageProfile:
@@ -121,12 +215,20 @@ class ContentionModel:
         by sqrt(g(b)). Under unit starvation a b-batch therefore still
         outruns b singles by sqrt(g(b)) — narrow DNNs (InceptionV3) keep
         most of their Table I gain under colocation, wide ones (UNet)
-        keep almost none, matching §VI-H. Returns ``prof`` for b = 1."""
+        keep almost none, matching §VI-H. Returns ``prof`` for b = 1.
+        Memoized per (profile, b): the dataclasses.replace + sqrt work
+        used to run on every launch of a batched stage."""
         if n_inputs <= 1:
             return prof
+        key = (id(prof), n_inputs)
+        hit = self._batched_prof_cache.get(key)
+        if hit is not None and hit[0] is prof:
+            return hit[1]
         ns = min(self.device.n_units,
                  prof.n_sat * batch_speedup(prof, n_inputs) ** 0.5)
-        return dataclasses.replace(prof, n_sat=ns)
+        eff = dataclasses.replace(prof, n_sat=ns)
+        self._batched_prof_cache[key] = (prof, eff)
+        return eff
 
     def solo_speed(self, prof: StageProfile, units: float) -> float:
         """Speed of a stage running alone on ``units`` units."""

@@ -188,8 +188,8 @@ class EngineCore:
                 if end_ms > job.abs_deadline_ms:
                     self.metrics.missed[p] += 1
         self.metrics.migrations = self.sched.migrations
-        for r in self.sched.rejections:
-            self.metrics.rejected[r.priority] += 1
+        for p, n in self.sched.rejected_counts.items():
+            self.metrics.rejected[p] += n
         self.backend.stop()
         return self.metrics
 
@@ -305,8 +305,7 @@ class EngineCore:
             "completed_inputs": dict(self.metrics.completed_inputs),
             "batch_hist": dict(sorted(self.metrics.batch_hist.items())),
             "coalesced": self.sched.coalesced,
-            "rejected": {p: sum(1 for r in self.sched.rejections
-                                if r.priority == p) for p in (0, 1)},
+            "rejected": dict(self.sched.rejected_counts),
             "migrations": self.sched.migrations,
             "skipped_releases": self.metrics.skipped_releases,
         }

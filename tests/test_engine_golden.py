@@ -1,0 +1,103 @@
+"""Golden-snapshot determinism tests for the sim event engine.
+
+The fixture ``tests/golden/engine_golden.json`` was captured from the
+pre-vectorization engine (PR 2 head). These tests assert that the current
+engine reproduces those runs BIT-IDENTICALLY — counts exactly, response
+times by SHA-256 over their IEEE-754 hex forms — across all three
+policies (MPS, STR, MPS+STR), with dynamic batching on and off.
+
+Regenerate (only when a *deliberate* semantic change is made, never to
+paper over a perf refactor):
+
+    PYTHONPATH=src python -m tests.test_engine_golden --regen
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+
+import pytest
+
+GOLDEN = pathlib.Path(__file__).resolve().parent / "golden" / "engine_golden.json"
+
+
+def _scenarios():
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core.batching import BatchPolicy
+    from repro.serving.requests import table2_taskset
+
+    def cfg(nc, ns, os_, batched):
+        pol = BatchPolicy(max_batch=4) if batched else None
+        return SchedulerConfig(n_contexts=nc, n_streams=ns,
+                               oversubscription=os_, batch_policy=pol)
+
+    out = {}
+    for batched in (False, True):
+        tag = "batch" if batched else "plain"
+        out[f"mps_unet_4x1_os4_{tag}"] = (
+            lambda b=batched: (table2_taskset("unet"), cfg(4, 1, 4.0, b), 1200.0))
+        out[f"str_unet_1x4_{tag}"] = (
+            lambda b=batched: (table2_taskset("unet"), cfg(1, 4, 1.0, b), 1200.0))
+        out[f"mpsstr_unet_2x2_os2_{tag}"] = (
+            lambda b=batched: (table2_taskset("unet"), cfg(2, 2, 2.0, b), 1200.0))
+        out[f"mps_rn18_6x1_os6_{tag}"] = (
+            lambda b=batched: (table2_taskset("resnet18"), cfg(6, 1, 6.0, b), 700.0))
+        out[f"mpsstr_rn18_3x3_os3_{tag}"] = (
+            lambda b=batched: (table2_taskset("resnet18"), cfg(3, 3, 3.0, b), 500.0))
+    return out
+
+
+def _capture(build) -> dict:
+    """Run one scenario and reduce its RunMetrics to a bit-exact digest."""
+    from repro.core.task import HP, LP
+    from benchmarks.common import make_server
+
+    specs, cfg, horizon = build()
+    server = make_server(specs, cfg, horizon_ms=horizon, seed=0).build()
+    m = server.run()
+
+    def float_digest(xs):
+        h = hashlib.sha256()
+        for x in xs:
+            h.update(float(x).hex().encode())
+        return h.hexdigest()
+
+    return {
+        "completed": {str(p): m.completed[p] for p in (HP, LP)},
+        "missed": {str(p): m.missed[p] for p in (HP, LP)},
+        "rejected": {str(p): m.rejected[p] for p in (HP, LP)},
+        "unfinished": {str(p): m.unfinished[p] for p in (HP, LP)},
+        "completed_inputs": {str(p): m.completed_inputs[p] for p in (HP, LP)},
+        "batch_hist": {str(k): v for k, v in sorted(m.batch_hist.items())},
+        "migrations": m.migrations,
+        "stragglers": m.stragglers,
+        "skipped_releases": m.skipped_releases,
+        "n_resp": {str(p): len(m.response_ms[p]) for p in (HP, LP)},
+        "resp_sha256": {str(p): float_digest(m.response_ms[p])
+                        for p in (HP, LP)},
+    }
+
+
+@pytest.mark.parametrize("name", sorted(_scenarios()))
+def test_engine_matches_golden(name):
+    golden = json.loads(GOLDEN.read_text())
+    assert name in golden, f"{name} missing from fixture; --regen?"
+    got = _capture(_scenarios()[name])
+    assert got == golden[name]
+
+
+def _regen() -> None:
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    out = {name: _capture(build)
+           for name, build in sorted(_scenarios().items())}
+    GOLDEN.write_text(json.dumps(out, indent=1))
+    print(f"wrote {GOLDEN} ({len(out)} scenarios)")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

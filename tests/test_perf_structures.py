@@ -1,0 +1,163 @@
+"""Tests for the vectorized/incremental engine hot-path structures.
+
+Covers the exactness contracts the perf work leans on:
+  * incremental re-prediction (skip heap re-push while the recomputed
+    finish time is unchanged) == full recompute-and-repush, bit for bit;
+  * the scalar and NumPy rate kernels produce identical bits;
+  * LaneMap's free/busy indexes stay coherent under plain assignment;
+  * MRET memoization is invalidated by observation.
+"""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import DarisScheduler, LaneMap, SchedulerConfig
+from repro.core.task import HP, LP, Job, StageInstance, StageProfile, Task, TaskSpec
+from repro.runtime.arrivals import PeriodicArrival
+from repro.runtime.backend import SimBackend
+from repro.runtime.contention import ContentionModel, DeviceModel
+from repro.runtime.engine_core import EngineCore
+
+
+def _random_taskset(rng, n_tasks=6):
+    specs = []
+    for i in range(n_tasks):
+        stages = [StageProfile(f"t{i}/s{j}",
+                               float(rng.uniform(0.3, 3.0)),
+                               float(rng.uniform(10, 68)),
+                               float(rng.uniform(0.1, 0.8)),
+                               batch_gain=float(rng.uniform(1.0, 3.0)))
+                  for j in range(int(rng.integers(1, 5)))]
+        specs.append(TaskSpec(name=f"t{i}",
+                              period_ms=float(rng.uniform(15, 80)),
+                              priority=HP if rng.random() < 0.4 else LP,
+                              stages=stages))
+    return specs
+
+
+def _run(specs, cfg, backend, horizon=1500.0, seed=7):
+    sched = DarisScheduler(specs, cfg, DeviceModel())
+    core = EngineCore(
+        sched, backend, horizon_ms=horizon, seed=seed,
+        arrivals={t.index: PeriodicArrival(phase_ms="random")
+                  for t in sched.tasks})
+    return core.run()
+
+
+def _fingerprint(m):
+    return (m.completed, m.missed, m.rejected, m.unfinished,
+            m.migrations, m.stragglers, m.batch_hist,
+            tuple(m.response_ms[HP]), tuple(m.response_ms[LP]))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_incremental_repredict_matches_full_recompute(seed):
+    """The incremental engine (epoch-dirty rates + skip-unchanged-eta)
+    must be indistinguishable — bitwise — from recomputing and re-pushing
+    every lane's prediction on every running-set change."""
+    rng = np.random.default_rng(seed)
+    specs = _random_taskset(rng)
+    nc = int(rng.integers(1, 5))
+    cfg = SchedulerConfig(n_contexts=nc, n_streams=int(rng.integers(1, 4)),
+                          oversubscription=float(rng.uniform(1.0, nc)))
+    fresh = lambda: [TaskSpec(s.name, s.period_ms, s.priority,
+                              list(s.stages)) for s in specs]
+    m_inc = _run(fresh(), cfg, SimBackend())
+    m_full = _run(fresh(), cfg, SimBackend(full_repredict=True))
+    assert _fingerprint(m_inc) == _fingerprint(m_full)
+
+
+def test_incremental_with_batching_matches_full():
+    from repro.core.batching import BatchPolicy
+    rng = np.random.default_rng(11)
+    specs = _random_taskset(rng, n_tasks=4)
+    cfg = SchedulerConfig(n_contexts=2, n_streams=1, oversubscription=2.0,
+                          batch_policy=BatchPolicy(max_batch=4))
+    fresh = lambda: [TaskSpec(s.name, s.period_ms, s.priority,
+                              list(s.stages)) for s in specs]
+    m_inc = _run(fresh(), cfg, SimBackend())
+    m_full = _run(fresh(), cfg, SimBackend(full_repredict=True))
+    assert _fingerprint(m_inc) == _fingerprint(m_full)
+
+
+def test_predict_eps_relaxes_but_still_completes():
+    """predict_eps > 0 trades prediction freshness for fewer heap pushes;
+    it must still complete comparable work (sanity, not bit-equality)."""
+    rng = np.random.default_rng(3)
+    specs = _random_taskset(rng)
+    cfg = SchedulerConfig(n_contexts=2, n_streams=2, oversubscription=2.0)
+    fresh = lambda: [TaskSpec(s.name, s.period_ms, s.priority,
+                              list(s.stages)) for s in specs]
+    m0 = _run(fresh(), cfg, SimBackend())
+    m1 = _run(fresh(), cfg, SimBackend(predict_eps=1e-6))
+    total0 = sum(m0.completed.values())
+    total1 = sum(m1.completed.values())
+    assert total1 > 0
+    assert abs(total1 - total0) <= max(3, 0.05 * total0)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_rates_scalar_matches_vector_kernel(seed):
+    """Scalar fast path and NumPy kernel are the same float program."""
+    rng = np.random.default_rng(seed)
+    cm = ContentionModel(DeviceModel())
+    m = int(rng.integers(1, 40))
+    u = [float(rng.uniform(1.0, 40.0)) for _ in range(m)]
+    ns = [float(rng.uniform(6.0, 68.0)) for _ in range(m)]
+    mf = [float(rng.uniform(0.05, 0.9)) for _ in range(m)]
+    scalar = cm._rates_scalar(list(u), list(ns), list(mf))
+    vector = cm.rates_arrays(np.array(u), np.array(ns),
+                             np.array(mf)).tolist()
+    assert scalar == vector          # bitwise: no tolerance
+
+
+def test_rates_seq_dispatch_consistency():
+    """rates_seq must agree with both paths regardless of which side of
+    VECTOR_MIN the input lands on."""
+    rng = np.random.default_rng(42)
+    cm = ContentionModel(DeviceModel())
+    for m in (1, 2, cm.VECTOR_MIN - 1, cm.VECTOR_MIN, 3 * cm.VECTOR_MIN):
+        u = [float(rng.uniform(1.0, 40.0)) for _ in range(m)]
+        ns = [float(rng.uniform(6.0, 68.0)) for _ in range(m)]
+        mf = [float(rng.uniform(0.05, 0.9)) for _ in range(m)]
+        assert cm.rates_seq(list(u), list(ns), list(mf)) == \
+            cm._rates_scalar(list(u), list(ns), list(mf))
+
+
+def test_lane_map_indexes_stay_coherent():
+    lm = LaneMap()
+    for c in range(2):
+        for s in range(2):
+            lm[(c, s)] = None
+    assert lm.free_lanes() == [(0, 0), (0, 1), (1, 0), (1, 1)]
+
+    spec = TaskSpec("t", 30.0, HP,
+                    [StageProfile("t/s0", 1.0, 30.0, 0.3)])
+    task = Task(spec=spec, index=0)
+    inst = StageInstance(job=Job(task=task, release_ms=0.0),
+                         enqueue_ms=0.0, virtual_deadline_ms=10.0)
+    lm[(0, 1)] = inst
+    assert lm.free_lanes() == [(0, 0), (1, 0), (1, 1)]
+    assert lm.busy_in_ctx(0) == [((0, 1), inst)]
+    lm[(0, 1)] = None
+    assert lm.busy_in_ctx(0) == []
+    assert (0, 1) in set(lm.free_lanes())
+
+    lm[(1, 0)] = inst
+    lm.retire_ctx(1)
+    assert lm.free_lanes() == [(0, 0), (0, 1)]
+    lm[(1, 0)] = None                  # harvest after death
+    assert lm.free_lanes() == [(0, 0), (0, 1)]   # stays retired
+
+
+def test_mret_memoization_invalidates_on_observe():
+    from repro.core.mret import TaskMret
+    tm = TaskMret([2.0, 3.0], ws=2)
+    assert tm.task_mret() == 5.0
+    tm.observe(0, 7.0)
+    assert tm.stage_mret(0) == 7.0
+    assert tm.task_mret() == 10.0
+    tm.observe(0, 1.0)
+    tm.observe(0, 0.5)                 # window of 2 -> max(1.0, 0.5)
+    assert tm.stage_mret(0) == 1.0
+    tm.invalidate()
+    assert tm.task_mret() == 4.0
