@@ -1,0 +1,141 @@
+"""Fig 12 (beyond-paper): live elastic repartitioning under shifting load.
+
+Three scenarios drive the online reconfiguration controller
+(``scheduler.reconfigure`` — Eq. 9 re-derived mid-run, Algorithm 1
+re-placement, zero-delay stage-boundary migration):
+
+  * step    — offered load doubles mid-run (per-task step traces); the
+              utilization-driven autoscaler grows the partition, compared
+              against static under- and over-provisioned servers.
+  * diurnal — a ramp of timed ``reconfigure_at`` events (grow for the
+              peak, shrink after, oversubscription retuned each time).
+  * chaos   — fault + scale-out + repartition in a single run: ctx0 dies,
+              a context is added, then the whole geometry is reshaped.
+              The acceptance bar: ZERO HP deadline misses end to end.
+
+Every row carries the migration count and HP DMR next to throughput —
+the two columns that show reshaping is actually free for HP work.
+"""
+from __future__ import annotations
+
+from repro.api import ServerConfig
+from repro.serving.profiles import device
+from repro.serving.requests import table2_taskset
+
+from .common import HORIZON_MS, cache_json, load_json
+
+DNN = "resnet18"
+
+
+def load_cached(fast: bool = False):
+    cached = load_json("fig12")
+    # cache is fidelity-keyed: a full-horizon cache must not satisfy a
+    # --fast run (and vice versa) — same contract as fig10
+    if cached and cached.get("_meta", {}).get("fast") == fast:
+        return cached
+    return None
+
+
+def _base(specs, nc: int, os_: float, horizon: float) -> ServerConfig:
+    return (ServerConfig.sim()
+            .tasks(specs)
+            .contexts(nc).streams(1).oversubscribe(os_)
+            .device(device())
+            .horizon_ms(horizon).seed(0))
+
+
+def _row(name: str, server) -> dict:
+    m = server.run()
+    s = m.summary()
+    live = sum(1 for c in server.scheduler.contexts if c.alive)
+    return dict(name=name, live_contexts=live, **s)
+
+
+def _step_traces(specs, horizon: float):
+    """Per-task step traces: period T up to the midpoint, T/2 after —
+    offered load doubles at horizon/2."""
+    half = horizon / 2.0
+    traces = {}
+    for i, spec in enumerate(specs):
+        t = (i / max(len(specs), 1)) * spec.period_ms   # staggered phases
+        times = []
+        while t <= horizon:
+            times.append(t)
+            t += spec.period_ms if t < half else spec.period_ms / 2.0
+        traces[spec.name] = times
+    return traces
+
+
+def run_step(horizon: float) -> list:
+    """Step load: autoscaler vs static small vs static big."""
+    from repro.api import TraceArrival
+    rows = []
+    variants = {
+        "step_static2": lambda c: c,
+        "step_static6": lambda c: c,
+        "step_autoscale": lambda c: c.autoscale(
+            0.35, 0.8, check_every_ms=max(horizon / 24.0, 100.0),
+            min_contexts=2, max_contexts=8,
+            cooldown_ms=max(horizon / 12.0, 200.0)),
+    }
+    for name, decorate in variants.items():
+        nc = 6 if name.endswith("6") else 2
+        specs = table2_taskset(DNN, load_scale=0.5)
+        cfg = decorate(_base(specs, nc, float(nc), horizon))
+        for task_name, times in _step_traces(specs, horizon).items():
+            cfg.arrival(task_name, TraceArrival(times))
+        rows.append(_row(name, cfg.build()))
+    return rows
+
+
+def run_diurnal(horizon: float) -> list:
+    """Diurnal ramp: timed repartitions track a known load curve."""
+    specs = table2_taskset(DNN)
+    plain = _base(specs, 4, 4.0, horizon)
+    ramp = (_base(specs, 4, 4.0, horizon)
+            .reconfigure_at(horizon * 0.25, n_contexts=6,
+                            oversubscription=6.0)
+            .reconfigure_at(horizon * 0.60, n_contexts=8,
+                            oversubscription=8.0)
+            .reconfigure_at(horizon * 0.85, n_contexts=3,
+                            oversubscription=3.0))
+    return [_row("diurnal_static4", plain.build()),
+            _row("diurnal_ramp", ramp.build())]
+
+
+def run_chaos(horizon: float) -> list:
+    """Fail + scale-out + repartition in one run; HP must never miss."""
+    specs = table2_taskset(DNN)
+    chaos = (_base(specs, 6, 6.0, horizon)
+             .fail_context_at(0, horizon * 0.3)
+             .scale_out_at(horizon * 0.5)
+             .reconfigure_at(horizon * 0.7, n_contexts=6,
+                             oversubscription=5.0))
+    return [_row("chaos_fault_scale_reconfig", chaos.build())]
+
+
+def run(fast: bool = False) -> dict:
+    cached = load_cached(fast)
+    if cached:
+        return cached
+    horizon = 2000.0 if fast else HORIZON_MS
+    out = {"_meta": {"fast": fast},
+           "step": run_step(horizon),
+           "diurnal": run_diurnal(horizon),
+           "chaos": run_chaos(horizon)}
+    cache_json("fig12", out)
+    return out
+
+
+def csv_lines(out) -> list:
+    lines = []
+    for key, rows in out.items():
+        if key == "_meta":
+            continue
+        for r in rows:
+            lines.append(f"fig12/{r['name']}_jps,0,{r['jps']:.0f}")
+            lines.append(f"fig12/{r['name']}_dmr_hp,0,{r['dmr_hp']:.4f}")
+            lines.append(f"fig12/{r['name']}_migrations,0,{r['migrations']}")
+            lines.append(
+                f"fig12/{r['name']}_reconfigures,0,{r['reconfigures']}")
+    return lines

@@ -31,6 +31,7 @@ FIGURES = [
     ("fig9", "benchmarks.fig9_mret"),
     ("fig10", "benchmarks.fig10_batching"),
     ("fig11", "benchmarks.fig11_overload"),
+    ("fig12", "benchmarks.fig12_elastic"),
     ("baselines", "benchmarks.baselines"),
 ]
 

@@ -45,11 +45,12 @@ from .runtime.arrivals import (ArrivalProcess, PeriodicArrival,
                                PoissonArrival, TraceArrival)
 from .runtime.backend import (ExecutionBackend, RealtimeBackend, SimBackend)
 from .runtime.contention import DeviceModel
-from .runtime.engine_core import (Completion, EngineCore, FaultPlan,
-                                  SubmitHandle)
+from .runtime.engine_core import (AutoscalePolicy, Completion, EngineCore,
+                                  FaultPlan, SubmitHandle)
 
 __all__ = [
-    "ServerConfig", "DarisServer", "FaultPlan", "SubmitHandle",
+    "ServerConfig", "DarisServer", "FaultPlan", "AutoscalePolicy",
+    "SubmitHandle",
     "ArrivalProcess", "PeriodicArrival", "PoissonArrival", "TraceArrival",
     "ExecutionBackend", "SimBackend", "RealtimeBackend",
     "SchedulerConfig", "DeviceModel", "TaskSpec", "StageProfile",
@@ -80,11 +81,13 @@ class ServerConfig:
         self._arrivals: Dict[str, ArrivalProcess] = {}
         self._open_loop: Optional[tuple] = None   # (rate_jps, seed)
         self._fault_plan: Optional[FaultPlan] = None
+        self._autoscale: Optional[AutoscalePolicy] = None
         self._batch_policy: Optional[BatchPolicy] = None
         self._record_decisions = False
         self._input_hw = 64
         self._batch = 1
         self._input_factory = None
+        self._ctx_shardings: Optional[Dict[int, object]] = None
 
     # -------------------------------------------------------- entry points
     @classmethod
@@ -210,13 +213,61 @@ class ServerConfig:
         self._fault_plan = dataclasses.replace(fp, add_ctx_at=t_ms)
         return self
 
+    def reconfigure_at(self, t_ms: float, *, n_contexts: Optional[int] = None,
+                       n_streams: Optional[int] = None,
+                       oversubscription: Optional[float] = None
+                       ) -> "ServerConfig":
+        """Schedule an online repartition: at ``t_ms`` the scheduler
+        re-derives Eq. 9 geometry for the new shape without draining —
+        queued work re-homes immediately, in-flight stages finish where
+        they run and migrate at the next stage boundary (zero-delay).
+        Omitted fields keep their current value; call repeatedly to build
+        a schedule (a diurnal ramp, a step plan, ...)."""
+        kwargs = {k: v for k, v in (("n_contexts", n_contexts),
+                                    ("n_streams", n_streams),
+                                    ("oversubscription", oversubscription))
+                  if v is not None}
+        if not kwargs:
+            raise ValueError("reconfigure_at needs at least one of "
+                             "n_contexts / n_streams / oversubscription")
+        fp = self._fault_plan or FaultPlan()
+        sched = list(fp.reconfigure_at or [])
+        sched.append((t_ms, kwargs))
+        self._fault_plan = dataclasses.replace(fp, reconfigure_at=sched)
+        return self
+
+    def autoscale(self, low: float = 0.3, high: float = 0.85, *,
+                  check_every_ms: float = 250.0, min_contexts: int = 1,
+                  max_contexts: int = 8,
+                  cooldown_ms: float = 500.0) -> "ServerConfig":
+        """Utilization-driven elasticity: grow/shrink the context count by
+        one whenever the mean Eq. 12 load fraction across live contexts
+        crosses ``high``/``low`` (see ``AutoscalePolicy``). Composes with
+        ``reconfigure_at`` — the autoscaler simply issues the same online
+        repartitions on its own schedule."""
+        self._autoscale = AutoscalePolicy(
+            low=low, high=high, check_every_ms=check_every_ms,
+            min_contexts=min_contexts, max_contexts=max_contexts,
+            cooldown_ms=cooldown_ms)
+        return self
+
     # ------------------------------------------------------------ realtime
     def realtime_io(self, input_hw: int = 64, batch: int = 1,
-                    input_factory: Optional[Callable] = None) -> "ServerConfig":
-        """Input tensor shape / factory for real stage payloads."""
+                    input_factory: Optional[Callable] = None,
+                    ctx_shardings: Optional[Dict[int, object]] = None
+                    ) -> "ServerConfig":
+        """Input tensor shape / factory for real stage payloads.
+
+        ``ctx_shardings`` maps live slot position -> jax sharding (slot 0
+        = lowest-indexed live context; equal to the context index until
+        the first fault/reshape — see ``RealtimeBackend``); when set,
+        inter-stage hidden/cache state physically reshards onto the
+        target partition whenever a job migrates contexts at a stage
+        boundary (``serving.staging.migrate``)."""
         self._input_hw = input_hw
         self._batch = batch
         self._input_factory = input_factory
+        self._ctx_shardings = ctx_shardings
         return self
 
     # --------------------------------------------------------------- build
@@ -240,6 +291,38 @@ class ServerConfig:
             raise ValueError("noise() applies to the sim backend only")
         if self._noise_sigma is not None and self._noise_sigma < 0:
             raise ValueError("noise sigma must be >= 0")
+        if self._autoscale is not None:
+            a = self._autoscale
+            if not (0.0 <= a.low < a.high):
+                raise ValueError(f"autoscale needs 0 <= low < high, got "
+                                 f"low={a.low} high={a.high}")
+            if a.min_contexts < 1 or a.max_contexts < a.min_contexts:
+                raise ValueError(f"autoscale needs 1 <= min_contexts <= "
+                                 f"max_contexts, got [{a.min_contexts}, "
+                                 f"{a.max_contexts}]")
+            if a.check_every_ms <= 0 or a.cooldown_ms < 0:
+                raise ValueError(f"autoscale needs check_every_ms > 0 and "
+                                 f"cooldown_ms >= 0, got "
+                                 f"check_every_ms={a.check_every_ms} "
+                                 f"cooldown_ms={a.cooldown_ms}")
+        fp = self._fault_plan
+        if fp and fp.reconfigure_at:
+            for t_ms, kwargs in fp.reconfigure_at:
+                if t_ms > self._horizon_ms:
+                    raise ValueError(f"reconfigure_at t_ms={t_ms} is beyond "
+                                     f"the horizon ({self._horizon_ms} ms)")
+                nc = kwargs.get("n_contexts")
+                if nc is not None and nc < 1:
+                    raise ValueError(f"reconfigure_at needs n_contexts >= 1, "
+                                     f"got {nc}")
+                ns = kwargs.get("n_streams")
+                if ns is not None and ns < 1:
+                    raise ValueError(f"reconfigure_at needs n_streams >= 1, "
+                                     f"got {ns}")
+                osf = kwargs.get("oversubscription")
+                if osf is not None and osf < 1.0:
+                    raise ValueError(f"reconfigure_at needs oversubscription "
+                                     f">= 1, got {osf}")
         names = {s.name for s in self._specs}
         unknown = set(self._arrivals) - names
         if unknown:
@@ -270,7 +353,8 @@ class DarisServer:
         else:
             backend = RealtimeBackend(input_hw=cfg._input_hw,
                                       batch=cfg._batch,
-                                      input_factory=cfg._input_factory)
+                                      input_factory=cfg._input_factory,
+                                      ctx_shardings=cfg._ctx_shardings)
         self.backend = backend
         phase = "random" if cfg._phase_offsets else 0.0
         arrivals: Dict[int, ArrivalProcess] = {}
@@ -285,6 +369,7 @@ class DarisServer:
         self.core = EngineCore(
             self.scheduler, backend, horizon_ms=cfg._horizon_ms,
             seed=cfg._seed, arrivals=arrivals, fault_plan=cfg._fault_plan,
+            autoscale=cfg._autoscale,
             record_decisions=cfg._record_decisions)
 
     # ------------------------------------------------------------- serving
@@ -306,6 +391,22 @@ class DarisServer:
     def snapshot(self) -> dict:
         """Queue depths, lane occupancy, context liveness, live counters."""
         return self.core.snapshot()
+
+    def save_state(self, path: str) -> str:
+        """Checkpoint the scheduler's learned/elastic state: MRET windows,
+        context assignments, migration count, and the full partition
+        geometry (including retired contexts), so a restore reproduces
+        the exact post-fault/post-reconfigure placement."""
+        from .checkpoint import save_scheduler_state
+        return save_scheduler_state(self.scheduler, path)
+
+    def load_state(self, path: str) -> None:
+        """Restore scheduler state saved by ``save_state`` (call before
+        ``run()``): placement, geometry, and MRET history all survive, so
+        a restarted server skips the AFET cold-start AND lands on the
+        same partition shape the saved one was using."""
+        from .checkpoint import load_scheduler_state
+        load_scheduler_state(self.scheduler, path)
 
     # ---------------------------------------------------------- inspection
     @property

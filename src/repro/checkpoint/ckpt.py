@@ -11,6 +11,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import shutil
 import tempfile
 from typing import Optional
 
@@ -31,33 +32,67 @@ def _flatten(tree):
 
 
 def save_pytree(tree, path: str, step: Optional[int] = None) -> str:
+    """Atomic save: the previous checkpoint survives every crash window.
+
+    The write sequence is stage -> sidestep -> swap -> reap:
+
+      1. materialize the new checkpoint in a fresh staging dir,
+      2. rename the existing ``.ckpt`` (if any) out of the way to ``.old``,
+      3. rename staging to ``.ckpt``,
+      4. delete ``.old``.
+
+    ``os.rename`` is the only operation that touches the live name, so at
+    every instant either ``.ckpt`` or ``.old`` holds a complete
+    checkpoint — the historic code ``rmtree``'d the final dir *before*
+    renaming the staging dir in, so a crash between the two lost the
+    latest checkpoint entirely. ``load_pytree`` falls back to ``.old``
+    when only the sidestep survived (crash between steps 2 and 3).
+    """
     p = pathlib.Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
     manifest = {"step": step, "leaves": {k: {"shape": list(v.shape),
                                              "dtype": str(v.dtype)}
                                          for k, v in flat.items()}}
-    with tempfile.TemporaryDirectory(dir=p.parent) as tmp:
-        tmp_npz = pathlib.Path(tmp) / "data.npz"
-        np.savez(tmp_npz, **{k: v for k, v in flat.items()})
-        (pathlib.Path(tmp) / "manifest.json").write_text(
-            json.dumps(manifest, indent=1))
-        final = p.with_suffix(".ckpt")
-        staging = p.parent / (p.name + ".tmp")
-        if staging.exists():
-            import shutil
-            shutil.rmtree(staging)
-        os.rename(tmp, staging)
-    if final.exists():
-        import shutil
-        shutil.rmtree(final)
-    os.rename(staging, final)
+    final = p.with_suffix(".ckpt")
+    old = p.parent / (final.name + ".old")
+    # reap staging dirs orphaned by earlier crashed saves (SIGKILL skips
+    # the except-cleanup below, and every save stages under a fresh name)
+    for stale in p.parent.glob(p.name + ".tmp*"):
+        shutil.rmtree(stale, ignore_errors=True)
+    # staging lives outside any context manager: TemporaryDirectory's
+    # cleanup used to race on the directory we had just renamed away
+    staging = pathlib.Path(tempfile.mkdtemp(dir=p.parent,
+                                            prefix=p.name + ".tmp"))
+    try:
+        np.savez(staging / "data.npz", **{k: v for k, v in flat.items()})
+        (staging / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            # only now is .old redundant: final is a complete checkpoint.
+            # When final is MISSING (a crash landed between sidestep and
+            # swap last time), .old is the sole survivor — leave it alone
+            # until the swap below completes.
+            if old.exists():
+                shutil.rmtree(old)
+            os.rename(final, old)
+        os.rename(staging, final)
+    except BaseException:
+        shutil.rmtree(staging, ignore_errors=True)
+        raise
+    if old.exists():
+        shutil.rmtree(old)
     return str(final)
 
 
 def load_pytree(template, path: str):
-    """Restore into the structure of ``template`` (shapes must match)."""
+    """Restore into the structure of ``template`` (shapes must match).
+    Falls back to the ``.old`` sidestep if a crash interrupted
+    ``save_pytree`` between sidestep and swap."""
     final = pathlib.Path(path).with_suffix(".ckpt")
+    if not final.exists():
+        old = final.parent / (final.name + ".old")
+        if old.exists():
+            final = old
     data = np.load(final / "data.npz")
     flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
@@ -73,6 +108,11 @@ def load_pytree(template, path: str):
 
 # ------------------------------------------------------- scheduler state
 def save_scheduler_state(sched, path: str) -> str:
+    """Serialize everything a restarted scheduler needs to reproduce this
+    one's placement exactly: per-task MRET windows and context
+    assignments, the migration counter, the runtime shape, and the FULL
+    partition geometry — including retired contexts, so task ``ctx``
+    indices stay meaningful after fail_context / reconfigure events."""
     state = {
         "tasks": [
             {
@@ -83,6 +123,14 @@ def save_scheduler_state(sched, path: str) -> str:
             for t in sched.tasks
         ],
         "migrations": sched.migrations,
+        "contexts": [
+            {"index": c.index, "alive": c.alive, "n_streams": c.n_streams,
+             "units": sorted(c.units)}
+            for c in sched.contexts
+        ],
+        "shape": {"n_contexts": sched.cfg.n_contexts,
+                  "n_streams": sched.cfg.n_streams,
+                  "oversubscription": sched.cfg.oversubscription},
     }
     p = pathlib.Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
@@ -93,15 +141,59 @@ def save_scheduler_state(sched, path: str) -> str:
 
 
 def load_scheduler_state(sched, path: str) -> None:
+    """Inverse of ``save_scheduler_state``: restores MRET history, task
+    placement, the migration counter, and (when present) the saved
+    partition geometry — contexts beyond the constructor-built set are
+    created, geometries overwritten, dead ones retired — so a scheduler
+    restored after fail_context/reconfigure events places work
+    identically to the one that was saved. Raises ``ValueError`` when a
+    task's saved MRET windows don't match its current stage count (a
+    silently truncating ``zip`` here used to corrupt the estimators)."""
     state = msgpack.unpackb(pathlib.Path(path).read_bytes())
     by_name = {t["name"]: t for t in state["tasks"]}
     for t in sched.tasks:
         if t.name not in by_name:
             continue
         rec = by_name[t.name]
+        if len(rec["mret_windows"]) != len(t.mret.stages):
+            raise ValueError(
+                f"checkpoint shape mismatch for task {t.name!r}: saved "
+                f"{len(rec['mret_windows'])} stage windows, scheduler has "
+                f"{len(t.mret.stages)} stages (was the task set or "
+                f"no_staging changed since the save?)")
         t.ctx = rec["ctx"]
         t.fixed_ctx = rec["fixed"]
         for s, win in zip(t.mret.stages, rec["mret_windows"]):
             s.window.clear()
             s.window.extend(win)
         t.mret.invalidate()   # windows were mutated behind the memo
+    sched.migrations = state.get("migrations", sched.migrations)
+    shape = state.get("shape")
+    if shape:
+        sched.cfg.n_contexts = shape["n_contexts"]
+        sched.cfg.n_streams = shape["n_streams"]
+        sched.cfg.oversubscription = shape["oversubscription"]
+    for rec in state.get("contexts", []):
+        idx = rec["index"]
+        while idx >= len(sched.contexts):
+            # geometry is overwritten from the record below
+            from ..core.partition import Context
+            ctx = Context(index=len(sched.contexts), units=set(),
+                          n_streams=rec["n_streams"])
+            sched._install_context(ctx)
+        ctx = sched.contexts[idx]
+        if ctx.n_streams != rec["n_streams"]:
+            # a constructor-built context's lane table cannot be resized
+            # here; silently adopting the saved stream count would skew
+            # Eq. 11 (n_streams) against the lanes that actually exist
+            raise ValueError(
+                f"checkpoint shape mismatch for context {idx}: saved "
+                f"n_streams={rec['n_streams']}, scheduler built with "
+                f"{ctx.n_streams} (restore into a server configured like "
+                f"the saved one)")
+        ctx.units = set(rec["units"])
+        if ctx.alive and not rec["alive"]:
+            sched.lanes.retire_ctx(idx)
+        ctx.alive = rec["alive"]
+    if state.get("contexts"):
+        sched._invalidate_live()

@@ -33,6 +33,9 @@ class RunMetrics:
     migrations: int = 0
     stragglers: int = 0
     faults: int = 0
+    # online elastic repartitions (scheduler.reconfigure invocations:
+    # timed plans and autoscaler decisions alike)
+    reconfigures: int = 0
     # periodic releases skipped because the drive loop stalled past whole
     # periods (wall-clock backends under load; see PeriodicArrival)
     skipped_releases: int = 0
@@ -98,7 +101,8 @@ class RunMetrics:
             "mean_batch": self.mean_batch(),
             "batch_hist": dict(sorted(self.batch_hist.items())),
             "migrations": self.migrations, "stragglers": self.stragglers,
-            "faults": self.faults, "skipped_releases": self.skipped_releases,
+            "faults": self.faults, "reconfigures": self.reconfigures,
+            "skipped_releases": self.skipped_releases,
         }
 
 

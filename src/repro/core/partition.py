@@ -45,6 +45,24 @@ def make_contexts(n_contexts: int, n_streams: int, oversubscription: float,
     return out
 
 
+def reconfigure(n_contexts: int, n_streams: int, oversubscription: float,
+                n_units: int, base_index: int = 0) -> List[Context]:
+    """Eq. 9 re-derivation for a new partition shape.
+
+    Returns fresh ``Context`` objects carrying the wrap-around geometry of
+    ``make_contexts`` but indexed from ``base_index``: a live scheduler
+    retires its old contexts in place (their indices stay addressable for
+    in-flight work) and appends these, so an online reshape never reuses
+    an index and every queued/running stage keeps a valid home.
+    """
+    if n_contexts < 1:
+        raise ValueError(f"need >= 1 context, got {n_contexts}")
+    out = make_contexts(n_contexts, n_streams, oversubscription, n_units)
+    for ctx in out:
+        ctx.index += base_index
+    return out
+
+
 def overlap_matrix(contexts: List[Context]) -> List[List[int]]:
     n = len(contexts)
     return [[len(contexts[a].units & contexts[b].units) for b in range(n)]

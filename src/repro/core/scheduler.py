@@ -22,7 +22,7 @@ from typing import Dict, List, Optional
 from ..runtime.contention import ContentionModel, DeviceModel, batch_cost
 from .batching import BatchCoalescer, BatchPolicy
 from .mret import TaskMret
-from .partition import Context, make_contexts
+from .partition import Context, make_contexts, reconfigure as derive_contexts
 from .stage_queue import QueueConfig, StageQueue
 from .task import HP, LP, Job, StageInstance, Task, TaskSpec
 
@@ -112,6 +112,11 @@ class DarisScheduler:
         self.contexts: List[Context] = make_contexts(
             cfg.n_contexts, cfg.n_streams, cfg.oversubscription,
             int(self.device.n_units))
+        # live-context cache: reconfigure-heavy runs accumulate retired
+        # contexts (indices must stay addressable for draining work), so
+        # hot paths that only want live ones must not rescan the full
+        # history each release
+        self._live_cache: Optional[List[Context]] = None
         self.queues: Dict[int, StageQueue] = {
             c.index: StageQueue(cfg.queue_cfg) for c in self.contexts}
         # lane occupancy: (ctx, slot) -> StageInstance | None (indexed)
@@ -177,6 +182,16 @@ class DarisScheduler:
             t.ctx = k
             util[k] += t.utilization(0.0)
 
+    def live_contexts(self) -> List[Context]:
+        """Live contexts in ascending index order (cached; identical to
+        filtering ``self.contexts`` on ``alive``)."""
+        if self._live_cache is None:
+            self._live_cache = [c for c in self.contexts if c.alive]
+        return self._live_cache
+
+    def _invalidate_live(self) -> None:
+        self._live_cache = None
+
     def add_task(self, spec: TaskSpec, now: float = 0.0) -> Task:
         """Late task registration (the ``DarisServer.submit`` path): same
         staging/AFET treatment as constructor-registered tasks, then
@@ -185,7 +200,7 @@ class DarisScheduler:
             spec = self._merge_stages(spec)
         task = Task(spec=spec, index=len(self.tasks))
         self._seed_mret(task)
-        alive = [c.index for c in self.contexts if c.alive]
+        alive = [c.index for c in self.live_contexts()]
         util = {k: self.util_hp_total(k, now) + self.util_lp_active(k, now)
                 for k in alive}
         task.ctx = min(util, key=util.get)
@@ -258,9 +273,9 @@ class DarisScheduler:
         needs_test = task.priority == LP or self.cfg.overload_hpa
         k = task.ctx
         if needs_test and not self.admits(k, task, now):
-            # migration candidates: every other context (Eq. 12), earliest
-            # predicted finish wins (paper §IV-B1)
-            cands = [c.index for c in self.contexts
+            # migration candidates: every other live context (Eq. 12),
+            # earliest predicted finish wins (paper §IV-B1)
+            cands = [c.index for c in self.live_contexts()
                      if c.index != k and self.admits(c.index, task, now)]
             if not cands:
                 self.rejections.append(Rejection(task.name, now, task.priority))
@@ -411,12 +426,13 @@ class DarisScheduler:
         """Partition loss: survivors inherit tasks via Algorithm 1 re-run;
         in-flight stages replay (stage granularity bounds lost work)."""
         self.contexts[k].alive = False
+        self._invalidate_live()
         self.lanes.retire_ctx(k)
         orphans = self.queues[k].drain()
         for lane, inst in self.lanes.busy_in_ctx(k):
             orphans.append(inst)
             self.lanes[lane] = None
-        alive = [c.index for c in self.contexts if c.alive]
+        alive = [c.index for c in self.live_contexts()]
         if not alive:
             raise RuntimeError("all contexts failed")
         util = {a: self.util_hp_total(a, now) + self.util_lp_active(a, now)
@@ -447,18 +463,115 @@ class DarisScheduler:
         return requeued
 
     def add_context(self, now: float) -> Context:
-        """Elastic scale-out: new context; Eq. 9 re-derivation is the
-        caller's choice (units reused from the dead/average geometry)."""
-        idx = len(self.contexts)
-        per = int(self.contexts[0].cap)
-        units = set(range(int(self.device.n_units)))
-        if per < len(units):
-            units = set(list(units)[:per])
-        ctx = Context(index=idx, units=units,
+        """Elastic scale-out: append one context carrying real Eq. 9
+        geometry — the last wrap-around slot of the shape the device has
+        *after* this scale-out (live contexts + 1). Deterministic: the
+        historic path sliced an unordered set, which made scale-out runs
+        depend on hash iteration order."""
+        n_live = len(self.live_contexts()) + 1
+        geo = derive_contexts(n_live, self.cfg.n_streams,
+                              self.cfg.oversubscription,
+                              int(self.device.n_units))[-1]
+        ctx = Context(index=len(self.contexts), units=geo.units,
                       n_streams=self.cfg.n_streams)
-        self.contexts.append(ctx)
-        self.queues[idx] = StageQueue(self.cfg.queue_cfg)
-        self.active_jobs[idx] = {}
-        for s in range(ctx.n_streams):
-            self.lanes[(idx, s)] = None
+        self._install_context(ctx)
         return ctx
+
+    def _install_context(self, ctx: Context) -> None:
+        """Register a freshly created context with every per-context
+        structure (queue, active-job set, lanes)."""
+        self._invalidate_live()
+        self.contexts.append(ctx)
+        self.queues[ctx.index] = StageQueue(self.cfg.queue_cfg)
+        self.active_jobs[ctx.index] = {}
+        for s in range(ctx.n_streams):
+            self.lanes[(ctx.index, s)] = None
+
+    def reconfigure(self, now: float, n_contexts: Optional[int] = None,
+                    n_streams: Optional[int] = None,
+                    oversubscription: Optional[float] = None) -> dict:
+        """Online elastic repartitioning — the paper's oversubscribed
+        geometry (Eq. 9) re-derived mid-run with zero-delay migration.
+
+        The controller never drains: old contexts are retired in place
+        (their lanes keep executing), a fresh context set with the new
+        ``(n_contexts, n_streams, oversubscription)`` shape is appended at
+        new indices, Algorithm 1 re-places every task (HP first, as in
+        ``fail_context``), queued stage instances re-home to their task's
+        new context, and in-flight stages finish on their old lane and
+        migrate at the next stage boundary — stage granularity is the
+        paper's zero-delay mechanism, so no running stage program is ever
+        interrupted (unlike ``fail_context``, nothing replays).
+
+        Returns a summary dict: retired/created context indices, how many
+        queued instances re-homed, how many in-flight jobs will migrate at
+        their next boundary, and how many of those moves changed the
+        physical unit set (counted into ``self.migrations``).
+        """
+        old_live = list(self.live_contexts())
+        n_contexts = n_contexts if n_contexts is not None else len(old_live)
+        n_streams = n_streams if n_streams is not None else self.cfg.n_streams
+        if oversubscription is None:
+            oversubscription = self.cfg.oversubscription
+        if n_streams < 1:
+            raise ValueError(f"reconfigure needs n_streams >= 1, got "
+                             f"{n_streams}: a zero-lane context would "
+                             f"strand every queued job silently")
+        self.cfg.n_contexts = n_contexts
+        self.cfg.n_streams = n_streams
+        self.cfg.oversubscription = oversubscription
+        base = len(self.contexts)
+        created = derive_contexts(n_contexts, n_streams, oversubscription,
+                                  int(self.device.n_units), base_index=base)
+        # retire the old partition *before* installing the new one: queued
+        # work drains out, running lanes stay busy until their stage ends
+        orphans: List[StageInstance] = []
+        old_units: Dict[int, frozenset] = {}
+        for c in old_live:
+            c.alive = False
+            old_units[c.index] = frozenset(c.units)
+            self.lanes.retire_ctx(c.index)
+            orphans.extend(self.queues[c.index].drain())
+        self._invalidate_live()
+        for ctx in created:
+            self._install_context(ctx)
+        # Algorithm 1 re-run over ALL tasks onto the new shape: HP first
+        # (descending utilization), then LP — identical ordering to
+        # _offline_phase / fail_context
+        util = {c.index: 0.0 for c in created}
+        ordered = (sorted([t for t in self.tasks if t.priority == HP],
+                          key=lambda t: -t.utilization(now))
+                   + sorted([t for t in self.tasks if t.priority == LP],
+                            key=lambda t: -t.utilization(now)))
+        for t in ordered:
+            tgt = min(util, key=util.get)
+            t.ctx = tgt
+            util[tgt] += t.utilization(now)
+        # re-home every live job to its task's new context. Queued stage
+        # instances move queues now (in old-context order, preserving
+        # each queue's drain order); in-flight jobs only re-point their
+        # ``job.ctx`` — the running instance finishes on the old lane and
+        # the job's NEXT stage enqueues on the new context (zero-delay).
+        migrated = 0
+        inflight = 0
+        for k in sorted(old_units):
+            for job in list(self.active_jobs[k]):
+                del self.active_jobs[k][job]
+                self.active_jobs[job.task.ctx][job] = None
+                job.ctx = job.task.ctx
+                if old_units[k] != self.contexts[job.ctx].units:
+                    migrated += 1
+        for inst in orphans:
+            inst.lane = None
+            self.queues[inst.job.ctx].push(inst)
+        for lane, inst in self.lanes.items():
+            if inst is not None and lane[0] in old_units:
+                inflight += 1
+        self.migrations += migrated
+        return {
+            "retired": sorted(old_units),
+            "created": [c.index for c in created],
+            "rehomed": len(orphans),
+            "inflight": inflight,
+            "migrated": migrated,
+        }

@@ -76,6 +76,7 @@ class ExecutionBackend(Protocol):
     def cancel_ctx(self, ctx_idx: int) -> None: ...
     def on_job_done(self, job: Job) -> None: ...
     def has_inflight(self) -> bool: ...
+    def on_reconfigure(self) -> None: ...
 
 
 class SimBackend:
@@ -196,6 +197,12 @@ class SimBackend:
     def on_job_done(self, job: Job) -> None:
         pass
 
+    def on_reconfigure(self) -> None:
+        # in-flight lanes keep their (retired-context) rates, but the new
+        # contexts change what the next dispatch competes against — force
+        # a rate recompute at the next running-set pass
+        self._rates_dirty = True
+
     # ------------------------------------------------------------- predict
     def _check_stragglers(self) -> None:
         """Straggler mitigation (beyond-paper, DESIGN.md §7): a stage whose
@@ -231,7 +238,7 @@ class SimBackend:
                 if inst.task.fixed_ctx:
                     tgt = inst.task.ctx
                 else:
-                    cands = [c.index for c in sched.contexts if c.alive]
+                    cands = [c.index for c in sched.live_contexts()]
                     tgt = min(cands, key=lambda k:
                               sched.predicted_finish(k, self.now))
                     if tgt != old:
@@ -367,28 +374,68 @@ class RealtimeBackend:
     the done queue and ``advance`` commits it at harvest, so a ghost
     worker from a failed context can never clobber a replayed job's
     activations. No lock is needed.
+
+    Zero-delay migration (``ctx_shardings``): when a job's next stage
+    dispatches on a different context than the one that produced its
+    inter-stage state — scheduler migration, fail_context re-homing, or an
+    online ``reconfigure`` — the worker reshards the whole inter-stage
+    tree (hidden activation + the remaining stages' cache slices, see
+    ``serving/staging.slice_cache``) onto the target context's sharding
+    via ``serving.staging.migrate`` before running the stage. This is the
+    paper's zero-delay mechanism made physical: the move happens between
+    stage programs, never inside one. Keys are **live slot positions**
+    (0 = lowest-indexed live context), not raw context indices: an online
+    reconfigure retires contexts and creates replacements at fresh
+    indices, but the physical device groups behind the slots persist —
+    slot keys survive any number of reshapes, raw indices would all go
+    stale at the first one. Before any fault/reshape, slot == index.
+    Slots without an entry keep the state where it is (single-device
+    mode). ``resharded`` counts the migrations actually performed.
     """
 
     def __init__(self, input_hw: int = 64, batch: int = 1,
-                 input_factory: Optional[Callable[[Job], object]] = None):
+                 input_factory: Optional[Callable[[Job], object]] = None,
+                 ctx_shardings: Optional[Dict[int, object]] = None):
         self.input_factory = (input_factory
                               or _default_input_factory(input_hw, batch))
+        self.ctx_shardings: Dict[int, object] = dict(ctx_shardings or {})
+        self.resharded = 0
         self.core: Optional[EngineCore] = None
         self._done_q: "queue.Queue" = queue.Queue()
         self._job_state: Dict[int, object] = {}
+        self._state_ctx: Dict[int, int] = {}   # job_id -> producing context
         self._inflight = 0
         self._cancelled_ctx: set = set()
         self._t0 = 0.0
         self._pool = _WorkerPool()
+        # pool sizing is by LIVE lane count (plus in-flight stages on
+        # retired lanes), recomputed only when the lane table grows: a
+        # reconfigure-heavy run accumulates retired lanes forever, and
+        # one-worker-per-lane-ever would leak a thread per dead lane
+        self._lanes_seen = -1
+        self._pool_target = 0
 
     # ----------------------------------------------------------- lifecycle
     def bind(self, core: EngineCore) -> None:
         self.core = core
 
+    def _ensure_pool(self) -> None:
+        """Grow the worker pool to one worker per live lane (+ stages
+        still finishing on retired lanes); concurrency is bounded by that
+        count, so a bigger pool would only idle."""
+        sched = self.core.sched
+        n = len(sched.lanes)
+        if n != self._lanes_seen:
+            self._lanes_seen = n
+            live = sum(c.n_streams for c in sched.live_contexts())
+            draining = sum(1 for ln, i in sched.lanes.items()
+                           if i is not None
+                           and not sched.contexts[ln[0]].alive)
+            self._pool_target = live + draining
+        self._pool.ensure(self._pool_target)
+
     def start(self) -> None:
-        # one persistent worker per lane: concurrency is bounded by lane
-        # count, so a bigger pool would only idle
-        self._pool.ensure(len(self.core.sched.lanes))
+        self._ensure_pool()
         self._t0 = time.perf_counter()
 
     def stop(self) -> None:
@@ -419,9 +466,36 @@ class RealtimeBackend:
                 # drop its output along with it
                 continue
             self._job_state[inst.job.job_id] = out
+            self._state_ctx[inst.job.job_id] = lane[0]
             return [Completion(lane, inst, et)]
 
     # ----------------------------------------------------------- execution
+    def _sharding_for(self, ctx: int):
+        """Resolve a context's target sharding by its live slot position
+        (see class docstring); raw index is the fallback when no core is
+        bound (unit-test construction)."""
+        if not self.ctx_shardings:
+            return None
+        if self.core is None:
+            return self.ctx_shardings.get(ctx)
+        for slot, c in enumerate(self.core.sched.live_contexts()):
+            if c.index == ctx:
+                return self.ctx_shardings.get(slot)
+        return None      # retired context: never reshard onto it
+
+    def _migrate_state(self, x: object, job_id: int, ctx: int) -> object:
+        """Reshard inter-stage state produced on another context onto this
+        context's partition (zero-delay: between stage programs)."""
+        src = self._state_ctx.get(job_id, ctx)
+        if x is None or src == ctx:
+            return x
+        tgt = self._sharding_for(ctx)
+        if tgt is None:
+            return x
+        from ..serving.staging import migrate
+        self.resharded += 1
+        return migrate(x, tgt)
+
     def _worker(self, lane: tuple, inst: StageInstance) -> None:
         prof = inst.profile
         t0 = time.perf_counter()
@@ -433,6 +507,8 @@ class RealtimeBackend:
             x = self._job_state.get(inst.job.job_id)
             if x is None:
                 x = self.input_factory(inst.job)
+            else:
+                x = self._migrate_state(x, inst.job.job_id, lane[0])
             out = prof.payload(x)
             try:
                 import jax
@@ -444,8 +520,8 @@ class RealtimeBackend:
 
     def launch(self, lane: tuple, inst: StageInstance) -> None:
         self._inflight += 1
-        # elastic scale-out may have added lanes since start()
-        self._pool.ensure(len(self.core.sched.lanes))
+        # elastic scale-out/reconfigure may have added lanes since start()
+        self._ensure_pool()
         self._pool.submit(self._worker, lane, inst)
 
     def cancel_ctx(self, ctx_idx: int) -> None:
@@ -457,6 +533,13 @@ class RealtimeBackend:
 
     def on_job_done(self, job: Job) -> None:
         self._job_state.pop(job.job_id, None)
+        self._state_ctx.pop(job.job_id, None)
+
+    def on_reconfigure(self) -> None:
+        # new contexts mean new lanes: grow the worker pool to match
+        # (force the recompute — lane count AND liveness both changed)
+        self._lanes_seen = -1
+        self._ensure_pool()
 
     def running_set_changed(self) -> None:
         pass

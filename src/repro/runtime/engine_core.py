@@ -38,17 +38,44 @@ from .arrivals import ArrivalProcess, PeriodicArrival
 _seq = itertools.count()
 
 # timeline event kinds; ordering at equal timestamps mirrors the historic
-# simulator heap (releases before faults before scale-outs)
-RELEASE, FAULT, ADD_CTX = 0, 2, 3
+# simulator heap (releases before faults before scale-outs before
+# repartitions before autoscaler checks)
+RELEASE, FAULT, ADD_CTX, RECONFIG, AUTOSCALE = 0, 2, 3, 4, 5
 
 _EPS = 1e-9
 
 
 @dataclasses.dataclass
 class FaultPlan:
-    """Injectable fault / elastic events (DESIGN.md §7)."""
+    """Injectable fault / elastic events (DESIGN.md §7).
+
+    ``reconfigure_at`` holds timed online repartitions: each entry is
+    ``(t_ms, kwargs)`` where kwargs are forwarded to
+    ``DarisScheduler.reconfigure`` (n_contexts / n_streams /
+    oversubscription; omitted fields keep their current value)."""
     fail_ctx_at: Optional[Tuple[int, float]] = None   # (ctx, t_ms)
     add_ctx_at: Optional[float] = None
+    reconfigure_at: Optional[List[Tuple[float, Dict]]] = None
+
+
+@dataclasses.dataclass
+class AutoscalePolicy:
+    """Utilization-driven elastic policy over ``scheduler.reconfigure``.
+
+    Every ``check_every_ms`` the engine reads the Eq. 12 headroom of each
+    live context — used fraction = (U_h + U_l,a) / N_s, i.e. how much of
+    ``remaining_util`` the active load consumes — and averages it. Above
+    ``high`` the partition grows by one context; below ``low`` it shrinks
+    by one (within [min_contexts, max_contexts], at most one decision per
+    ``cooldown_ms``). Each decision re-derives Eq. 9 geometry for the new
+    count, so grow/shrink reshapes every context, not just the edge one.
+    """
+    low: float = 0.3
+    high: float = 0.85
+    check_every_ms: float = 250.0
+    min_contexts: int = 1
+    max_contexts: int = 8
+    cooldown_ms: float = 500.0
 
 
 @dataclasses.dataclass
@@ -83,6 +110,7 @@ class EngineCore:
                  arrivals: Optional[Dict[int, ArrivalProcess]] = None,
                  seed: int = 0,
                  fault_plan: Optional[FaultPlan] = None,
+                 autoscale: Optional[AutoscalePolicy] = None,
                  record_decisions: bool = False):
         self.sched = sched
         self.backend = backend
@@ -90,15 +118,22 @@ class EngineCore:
         self.rng = np.random.default_rng(seed)
         self.metrics = empty_metrics(horizon_ms)
         self.fault_plan = fault_plan
+        self.autoscale = autoscale
+        self._last_scale_ms = -math.inf
         self.decisions: Optional[List[str]] = [] if record_decisions else None
         # task.index -> arrival process (tasks without one never self-release)
         self.arrivals: Dict[int, ArrivalProcess] = dict(arrivals or {})
         self._handles: Dict[int, SubmitHandle] = {}
         self._timeline: List[tuple] = []   # (t, kind, seq, payload)
+        # pending non-AUTOSCALE timeline entries: autoscale checks re-arm
+        # themselves forever, so idleness must not scan the heap for them
+        self._work_events = 0
         self._ran = False
 
     # ------------------------------------------------------------ plumbing
     def _push(self, t: float, kind: int, payload) -> None:
+        if kind != AUTOSCALE:
+            self._work_events += 1
         heapq.heappush(self._timeline, (t, kind, next(_seq), payload))
 
     def _log(self, msg: str) -> None:
@@ -144,6 +179,11 @@ class EngineCore:
             self._push(fp.fail_ctx_at[1], FAULT, fp.fail_ctx_at[0])
         if fp and fp.add_ctx_at is not None:
             self._push(fp.add_ctx_at, ADD_CTX, None)
+        if fp and fp.reconfigure_at:
+            for t_ms, kwargs in fp.reconfigure_at:
+                self._push(t_ms, RECONFIG, dict(kwargs))
+        if self.autoscale is not None:
+            self._push(self.autoscale.check_every_ms, AUTOSCALE, None)
 
         while True:
             if until_idle and self._idle():
@@ -158,6 +198,8 @@ class EngineCore:
             elif (self._timeline and t_evt <= self.horizon
                   and now >= t_evt - 1e-6):
                 t, kind, _, payload = heapq.heappop(self._timeline)
+                if kind != AUTOSCALE:
+                    self._work_events -= 1
                 if kind == RELEASE:
                     self._handle_release(payload[0], payload[1], t)
                 elif kind == FAULT:
@@ -165,6 +207,10 @@ class EngineCore:
                 elif kind == ADD_CTX:
                     self.sched.add_context(now)
                     self._log(f"scale-out ctx{len(self.sched.contexts) - 1}")
+                elif kind == RECONFIG:
+                    self._handle_reconfigure(now, payload)
+                elif kind == AUTOSCALE:
+                    self._handle_autoscale(now)
             elif now >= self.horizon - _EPS:
                 break
             elif not self._timeline and not self.backend.has_inflight():
@@ -231,6 +277,36 @@ class EngineCore:
         self.metrics.faults += 1
         self._log(f"fault ctx{ctx_idx}")
 
+    def _handle_reconfigure(self, now: float, kwargs: Dict) -> None:
+        info = self.sched.reconfigure(now, **kwargs)
+        self.metrics.reconfigures += 1
+        self._last_scale_ms = now
+        hook = getattr(self.backend, "on_reconfigure", None)
+        if hook is not None:
+            hook()
+        self._log(f"reconfigure retired={info['retired']} "
+                  f"created={info['created']} rehomed={info['rehomed']} "
+                  f"inflight={info['inflight']}")
+
+    def _handle_autoscale(self, now: float) -> None:
+        pol = self.autoscale
+        live = self.sched.live_contexts()
+        n_live = len(live)
+        if n_live and now - self._last_scale_ms >= pol.cooldown_ms:
+            used = [(self.sched.util_hp_total(c.index, now)
+                     + self.sched.util_lp_active(c.index, now))
+                    / max(c.n_streams, 1) for c in live]
+            mean_used = sum(used) / n_live
+            if mean_used > pol.high and n_live < pol.max_contexts:
+                self._log(f"autoscale grow (used={mean_used:.2f})")
+                self._handle_reconfigure(now, {"n_contexts": n_live + 1})
+            elif mean_used < pol.low and n_live > pol.min_contexts:
+                self._log(f"autoscale shrink (used={mean_used:.2f})")
+                self._handle_reconfigure(now, {"n_contexts": n_live - 1})
+        nxt = now + pol.check_every_ms
+        if nxt <= self.horizon:
+            self._push(nxt, AUTOSCALE, None)
+
     def _on_completion(self, c: Completion) -> None:
         now = self.backend.now_ms()
         job = c.inst.job
@@ -280,7 +356,11 @@ class EngineCore:
             self.backend.launch(lane, inst)
 
     def _idle(self) -> bool:
-        if self._timeline or self.backend.has_inflight():
+        # autoscaler check events keep the timeline populated forever;
+        # they are not work, so drain() must be able to idle past them
+        if self._work_events:
+            return False
+        if self.backend.has_inflight():
             return False
         if any(len(q) for q in self.sched.queues.values()):
             return False
@@ -307,5 +387,6 @@ class EngineCore:
             "coalesced": self.sched.coalesced,
             "rejected": dict(self.sched.rejected_counts),
             "migrations": self.sched.migrations,
+            "reconfigures": self.metrics.reconfigures,
             "skipped_releases": self.metrics.skipped_releases,
         }

@@ -10,9 +10,9 @@ facade:
     metrics = (ServerConfig.realtime().tasks(specs).contexts(2)
                .horizon_ms(4000).realtime_io(input_hw=32).build().run())
 
-``staged_cnn_taskspec`` (AFET-style calibration of staged CNNs into
-TaskSpecs with jitted payloads) still lives here; ``RealtimeEngine``
-remains importable for one release.
+``staged_cnn_taskspec`` / ``staged_lm_taskspec`` (AFET-style calibration
+of staged models into TaskSpecs with jitted payloads) still live here;
+``RealtimeEngine`` remains importable for one release.
 """
 from __future__ import annotations
 
@@ -31,7 +31,7 @@ from ..runtime.arrivals import PeriodicArrival
 from ..runtime.backend import RealtimeBackend
 from ..runtime.engine_core import EngineCore
 
-__all__ = ["RealtimeEngine", "staged_cnn_taskspec"]
+__all__ = ["RealtimeEngine", "staged_cnn_taskspec", "staged_lm_taskspec"]
 
 
 def staged_cnn_taskspec(model: StagedCNN, *, priority: int, jps: float,
@@ -63,6 +63,73 @@ def staged_cnn_taskspec(model: StagedCNN, *, priority: int, jps: float,
                            payload=payloads[j])
               for j, t in enumerate(times)]
     return TaskSpec(name=f"{model.name}{tag}", period_ms=1000.0 / jps,
+                    priority=priority, stages=stages, batch=batch)
+
+
+def staged_lm_taskspec(model, *, priority: int, jps: float,
+                       n_stages: int = 4, prompt_len: int = 16,
+                       batch: int = 2, tag: str = "",
+                       n_sat: float = 40.0, mem_frac: float = 0.5
+                       ) -> TaskSpec:
+    """Wrap a staged LM decode step into a TaskSpec with real payloads.
+
+    Each job is ONE decode step split across ``n_stages`` stage programs
+    (``serving.staging.make_lm_stage_fns``). The inter-stage state that
+    rides between payloads — and that ``RealtimeBackend`` reshards via
+    ``serving.staging.migrate`` when the job crosses partitions — is the
+    hidden activation plus the KV-cache slices touched so far: each stage
+    pulls its layer slice from a prefilled donor cache with
+    ``serving.staging.slice_cache`` and threads the updated slice
+    forward, so a migration physically moves hidden AND cache, exactly
+    the paper's zero-delay payload."""
+    import jax.numpy as jnp
+
+    from .staging import make_lm_stage_fns, slice_cache
+
+    cfg = model.cfg
+    params = model.init_params(0)
+    stage_fns = make_lm_stage_fns(model, n_stages=n_stages)
+    jitted = [jax.jit(fn) for fn in stage_fns]
+    # prefill a donor cache once with the model's own forward; every job
+    # then decodes one token against (its thread of) that cache
+    tokens = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (batch, prompt_len)))
+    _, donor = model.prefill(
+        params, {"tokens": tokens,
+                 "cache": model.init_cache(batch, prompt_len + 1)})
+    pos = jnp.asarray([prompt_len], dtype=jnp.int32)
+
+    def make_payload(i):
+        def payload(state):
+            if state is None or not isinstance(state, dict):
+                # fresh job: one new token per sequence
+                state = {"hidden": jnp.zeros((batch, 1), jnp.int32),
+                         "slices": {}}
+            sl = state["slices"].get(i)
+            if sl is None:
+                sl = slice_cache(cfg, donor, i, n_stages)
+            h, new_sl = jitted[i](params, state["hidden"], sl, pos)
+            return {"hidden": h, "slices": {**state["slices"], i: new_sl}}
+        return payload
+
+    times = []
+    state = None
+    payloads = []
+    for i in range(n_stages):
+        fn = make_payload(i)
+        out = fn(state)                           # compile
+        jax.block_until_ready(out["hidden"])
+        t0 = time.perf_counter()
+        out = fn(state)
+        jax.block_until_ready(out["hidden"])
+        times.append((time.perf_counter() - t0) * 1000.0)
+        state = out
+        payloads.append(fn)
+    stages = [StageProfile(name=f"{cfg.name}/lm-s{j}", t_alone_ms=t,
+                           n_sat=n_sat, mem_frac=mem_frac,
+                           overhead_ms=0.05, payload=payloads[j])
+              for j, t in enumerate(times)]
+    return TaskSpec(name=f"{cfg.name}{tag}", period_ms=1000.0 / jps,
                     priority=priority, stages=stages, batch=batch)
 
 

@@ -1,0 +1,427 @@
+"""Live elastic repartitioning: Eq. 9 geometry properties, the online
+reconfiguration controller, the autoscaler, and checkpoint-consistent
+scheduler state across fault + reconfigure events (seeded randomized —
+hypothesis is unavailable offline)."""
+import numpy as np
+import pytest
+
+from repro.core.partition import (ceil_even, make_contexts, overlap_matrix,
+                                  reconfigure)
+from repro.core.scheduler import DarisScheduler, SchedulerConfig
+from repro.core.task import HP, LP
+from repro.serving.profiles import device
+from repro.serving.requests import table2_taskset
+
+
+# ------------------------------------------------------ Eq. 9 geometry
+@pytest.mark.parametrize("seed", range(10))
+def test_partition_unit_count_matches_eq9(seed):
+    """Per-context unit count is min(ceil_even(OS * N / N_c), N) for both
+    make_contexts and reconfigure (same geometry, shifted indices)."""
+    rng = np.random.default_rng(seed)
+    nc = int(rng.integers(1, 9))
+    ns = int(rng.integers(1, 4))
+    n_units = int(rng.integers(nc, 96))
+    os_v = float(rng.uniform(1.0, nc))
+    want = min(ceil_even(os_v * n_units / nc), n_units)
+    for ctxs in (make_contexts(nc, ns, os_v, n_units),
+                 reconfigure(nc, ns, os_v, n_units, base_index=7)):
+        assert len(ctxs) == nc
+        for c in ctxs:
+            assert len(c.units) == want
+            assert all(0 <= u < n_units for u in c.units)
+            assert c.n_streams == ns
+    assert [c.index for c in reconfigure(nc, ns, os_v, n_units,
+                                         base_index=7)] \
+        == list(range(7, 7 + nc))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_overlap_matrix_symmetric(seed):
+    rng = np.random.default_rng(seed)
+    nc = int(rng.integers(2, 8))
+    ctxs = make_contexts(nc, 1, float(rng.uniform(1.0, nc)),
+                         int(rng.integers(nc * 2, 128)))
+    m = overlap_matrix(ctxs)
+    for a in range(nc):
+        for b in range(nc):
+            assert m[a][b] == m[b][a]
+        assert m[a][a] == len(ctxs[a].units)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_os1_disjoint_and_osn_identical(seed):
+    """OS=1 -> disjoint partitions (shapes where N/N_c is even, so
+    ceil_even adds no overlap); OS=N_c -> every context sees the full
+    device."""
+    rng = np.random.default_rng(seed)
+    nc = int(rng.integers(2, 7))
+    n_units = nc * 2 * int(rng.integers(1, 9))    # N/N_c even
+    iso = make_contexts(nc, 1, 1.0, n_units)
+    m = overlap_matrix(iso)
+    for a in range(nc):
+        for b in range(nc):
+            if a != b:
+                assert m[a][b] == 0
+    assert set().union(*(c.units for c in iso)) == set(range(n_units))
+    full = make_contexts(nc, 1, float(nc), n_units)
+    for c in full:
+        assert c.units == set(range(n_units))
+
+
+def _sched(nc=4, os_=4.0, ns=1, **kw) -> DarisScheduler:
+    return DarisScheduler(
+        table2_taskset("resnet18"),
+        SchedulerConfig(n_contexts=nc, n_streams=ns, oversubscription=os_,
+                        **kw), device())
+
+
+def test_add_context_deterministic_eq9_geometry():
+    """Scale-out appends the last Eq. 9 wrap-around slot of the
+    post-scale-out shape — identically on every run (the historic path
+    sliced an unordered set)."""
+    units = []
+    for _ in range(3):
+        sched = _sched(nc=6, os_=3.0)
+        ctx = sched.add_context(0.0)
+        units.append(sorted(ctx.units))
+        assert ctx.index == 6
+    assert units[0] == units[1] == units[2]
+    want = reconfigure(7, 1, 3.0, int(device().n_units))[-1]
+    assert set(units[0]) == want.units
+
+
+# ------------------------------------------------- online reconfigure
+def test_reconfigure_rederives_geometry_and_replaces_all_tasks():
+    sched = _sched(nc=4, os_=4.0)
+    info = sched.reconfigure(0.0, n_contexts=6, oversubscription=3.0)
+    assert info["retired"] == [0, 1, 2, 3]
+    assert info["created"] == [4, 5, 6, 7, 8, 9]
+    live = [c for c in sched.contexts if c.alive]
+    n_units = int(device().n_units)
+    want = min(ceil_even(3.0 * n_units / 6), n_units)
+    assert len(live) == 6 and all(len(c.units) == want for c in live)
+    for t in sched.tasks:            # Algorithm 1 re-ran over everyone
+        assert sched.contexts[t.ctx].alive
+    # HP spread: no live context holds two HP tasks while another has none
+    by_ctx = {}
+    for t in sched.tasks:
+        if t.priority == HP:
+            by_ctx[t.ctx] = by_ctx.get(t.ctx, 0) + 1
+    assert max(by_ctx.values()) - min(by_ctx.values()) <= 1
+
+
+def test_reconfigure_streams_change_creates_lanes():
+    sched = _sched(nc=4, ns=1)
+    sched.reconfigure(0.0, n_contexts=2, n_streams=3)
+    live = [c for c in sched.contexts if c.alive]
+    assert all(c.n_streams == 3 for c in live)
+    free = sched.free_lanes()
+    assert sorted(free) == [(4, 0), (4, 1), (4, 2), (5, 0), (5, 1), (5, 2)]
+
+
+def _elastic_server(horizon=3000.0, **hooks):
+    from repro.api import ServerConfig
+    cfg = (ServerConfig.sim().tasks(table2_taskset("resnet18"))
+           .contexts(6).oversubscribe(6.0).device(device())
+           .horizon_ms(horizon).seed(0))
+    for name, args in hooks.items():
+        getattr(cfg, name)(*args[0], **args[1])
+    return cfg.build()
+
+
+def test_midrun_reconfigure_conserves_work_and_protects_hp():
+    """The acceptance scenario: fault + scale-out + reshape in one run,
+    zero HP misses, nothing stranded on retired contexts."""
+    srv = _elastic_server(
+        fail_context_at=((0, 900.0), {}),
+        scale_out_at=((1500.0,), {}),
+        reconfigure_at=((2100.0,), dict(n_contexts=6, oversubscription=5.0)))
+    m = srv.run()
+    assert m.dmr(HP) == 0.0
+    assert m.reconfigures == 1 and m.faults == 1
+    sched = srv.scheduler
+    for c in sched.contexts:
+        if not c.alive:
+            assert len(sched.queues[c.index]) == 0
+            assert not sched.active_jobs[c.index]
+            assert all(i is None for ln, i in sched.lanes.items()
+                       if ln[0] == c.index)
+    assert m.completed[HP] + m.completed[LP] > 0
+
+
+def test_midrun_reconfigure_deterministic():
+    runs = []
+    for _ in range(2):
+        srv = _elastic_server(
+            reconfigure_at=((1200.0,), dict(n_contexts=4,
+                                            oversubscription=2.0)))
+        m = srv.run()
+        runs.append((m.completed[HP], m.completed[LP], m.missed[LP],
+                     m.migrations,
+                     tuple(np.round(m.response_ms[HP], 12))))
+    assert runs[0] == runs[1]
+
+
+def test_autoscaler_grows_under_load_and_shrinks_idle():
+    from repro.api import ServerConfig
+    grow = (ServerConfig.sim().tasks(table2_taskset("resnet18"))
+            .contexts(1).oversubscribe(1.0).device(device())
+            .horizon_ms(2500.0).seed(0)
+            .autoscale(0.3, 0.8, check_every_ms=200.0, max_contexts=6)
+            .build())
+    mg = grow.run()
+    assert sum(c.alive for c in grow.scheduler.contexts) > 1
+    assert mg.reconfigures > 0 and mg.dmr(HP) == 0.0
+    shrink = (ServerConfig.sim().tasks(table2_taskset("resnet18")[:2])
+              .contexts(6).oversubscribe(6.0).device(device())
+              .horizon_ms(2500.0).seed(0)
+              .autoscale(0.4, 0.9, check_every_ms=200.0, min_contexts=2)
+              .build())
+    ms = shrink.run()
+    assert sum(c.alive for c in shrink.scheduler.contexts) < 6
+    assert ms.reconfigures > 0 and ms.dmr(HP) == 0.0
+
+
+def test_reconfigure_at_validation():
+    from repro.api import ServerConfig
+    cfg = (ServerConfig.sim().tasks(table2_taskset("resnet18"))
+           .device(device()).horizon_ms(1000.0))
+    with pytest.raises(ValueError):
+        cfg.reconfigure_at(500.0)                     # no shape change
+    with pytest.raises(ValueError):
+        cfg.reconfigure_at(2000.0, n_contexts=2).build()   # past horizon
+    with pytest.raises(ValueError):
+        (ServerConfig.sim().tasks(table2_taskset("resnet18"))
+         .device(device()).horizon_ms(1000.0)
+         .reconfigure_at(500.0, n_streams=0).build())      # zero lanes
+    with pytest.raises(ValueError):
+        (ServerConfig.sim().tasks(table2_taskset("resnet18"))
+         .device(device()).horizon_ms(1000.0)
+         .autoscale(0.9, 0.3).build())                # low >= high
+    with pytest.raises(ValueError):
+        (ServerConfig.sim().tasks(table2_taskset("resnet18"))
+         .device(device()).horizon_ms(1000.0)
+         .autoscale(0.3, 0.9, check_every_ms=0.0).build())  # would hang
+    with pytest.raises(ValueError):
+        _sched().reconfigure(0.0, n_streams=0)
+
+
+# ------------------------------------------- checkpoint-consistent state
+def test_checkpoint_roundtrip_through_fault_and_reconfigure(tmp_path):
+    """save -> restore -> identical placement: geometry (incl. retired
+    contexts), task assignments, MRET history, and the migrations
+    counter all survive."""
+    from repro.checkpoint import load_scheduler_state, save_scheduler_state
+    srv = _elastic_server(
+        horizon=2500.0,
+        fail_context_at=((0, 700.0), {}),
+        reconfigure_at=((1600.0,), dict(n_contexts=4, oversubscription=3.0)))
+    srv.run()
+    a = srv.scheduler
+    assert a.migrations > 0
+    path = str(tmp_path / "sched.msgpack")
+    save_scheduler_state(a, path)
+    b = _sched(nc=6, os_=6.0)
+    load_scheduler_state(b, path)
+    assert b.migrations == a.migrations
+    assert len(b.contexts) == len(a.contexts)
+    for ca, cb in zip(a.contexts, b.contexts):
+        assert (ca.index, ca.alive, ca.n_streams) == \
+            (cb.index, cb.alive, cb.n_streams)
+        assert ca.units == cb.units
+    for ta, tb in zip(a.tasks, b.tasks):
+        assert (ta.ctx, ta.fixed_ctx) == (tb.ctx, tb.fixed_ctx)
+        assert ta.mret.task_mret() == tb.mret.task_mret()
+        for sa, sb in zip(ta.mret.stages, tb.mret.stages):
+            assert list(sa.window) == list(sb.window)
+    # same lane topology (occupancy is runtime state, not checkpointed):
+    # every lane key exists in both, and retired contexts stay retired
+    assert sorted(b.lanes) == sorted(a.lanes)
+    live_lanes = {ln[0] for ln in b.free_lanes()}
+    assert live_lanes == {c.index for c in b.contexts if c.alive}
+    assert (b.cfg.n_contexts, b.cfg.n_streams, b.cfg.oversubscription) == \
+        (a.cfg.n_contexts, a.cfg.n_streams, a.cfg.oversubscription)
+
+
+def test_server_save_load_state(tmp_path):
+    srv = _elastic_server(
+        horizon=1500.0,
+        reconfigure_at=((800.0,), dict(n_contexts=3)))
+    srv.run()
+    path = str(tmp_path / "srv.msgpack")
+    srv.save_state(path)
+    from repro.api import ServerConfig
+    srv2 = (ServerConfig.sim().tasks(table2_taskset("resnet18"))
+            .contexts(6).oversubscribe(6.0).device(device())
+            .horizon_ms(1500.0).seed(0).build())
+    srv2.load_state(path)
+    for ta, tb in zip(srv.scheduler.tasks, srv2.scheduler.tasks):
+        assert ta.ctx == tb.ctx
+    assert srv2.scheduler.migrations == srv.scheduler.migrations
+
+
+def test_load_scheduler_state_raises_on_stage_count_mismatch(tmp_path):
+    from repro.checkpoint import load_scheduler_state, save_scheduler_state
+    a = _sched()
+    path = str(tmp_path / "s.msgpack")
+    save_scheduler_state(a, path)
+    b = DarisScheduler(table2_taskset("resnet18"),
+                       SchedulerConfig(n_contexts=4, no_staging=True),
+                       device())   # stages merged -> count mismatch
+    with pytest.raises(ValueError, match="shape mismatch"):
+        load_scheduler_state(b, path)
+
+
+def test_load_scheduler_state_raises_on_stream_count_mismatch(tmp_path):
+    """A constructor-built context's lane table can't be resized at
+    restore; adopting the saved stream count silently would skew
+    Eq. 11 against the lanes that exist."""
+    from repro.checkpoint import load_scheduler_state, save_scheduler_state
+    a = _sched(nc=4, ns=2)
+    path = str(tmp_path / "s.msgpack")
+    save_scheduler_state(a, path)
+    b = _sched(nc=4, ns=1)
+    with pytest.raises(ValueError, match="shape mismatch for context"):
+        load_scheduler_state(b, path)
+
+
+# ------------------------------------------- realtime state resharding
+def test_realtime_backend_reshards_migrated_state():
+    """Inter-stage state produced on one context physically reshards via
+    serving.staging.migrate when its next stage runs on another context
+    that has a sharding configured."""
+    import jax
+    from repro.runtime.backend import RealtimeBackend
+
+    dev = jax.devices()[0]
+    sh = jax.sharding.SingleDeviceSharding(dev)
+    be = RealtimeBackend(ctx_shardings={1: sh})
+    x = jax.device_put(np.arange(4.0, dtype=np.float32))
+    be._job_state[7] = x
+    be._state_ctx[7] = 0
+    out = be._migrate_state(x, 7, 1)          # ctx 0 -> ctx 1: reshard
+    assert be.resharded == 1
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    assert be._migrate_state(x, 7, 0) is x    # same ctx: untouched
+    be2 = RealtimeBackend()                   # no shardings: no-op
+    be2._state_ctx[7] = 0
+    assert be2._migrate_state(x, 7, 1) is x
+    assert be2.resharded == 0
+
+
+# -------------------------------------------------- atomic pytree saves
+def _tiny_tree():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.zeros(3, np.float32)}
+
+
+def test_save_pytree_overwrite_leaves_no_debris(tmp_path):
+    from repro.checkpoint import load_pytree, save_pytree
+    tree = _tiny_tree()
+    p = str(tmp_path / "ck")
+    save_pytree(tree, p, step=1)
+    tree2 = {k: v + 1 for k, v in tree.items()}
+    save_pytree(tree2, p, step=2)           # exercises the .old sidestep
+    leftovers = [q.name for q in tmp_path.iterdir()
+                 if q.name != "ck.ckpt"]
+    assert leftovers == []
+    out = load_pytree({k: np.zeros_like(v) for k, v in tree.items()}, p)
+    np.testing.assert_array_equal(out["w"], tree2["w"])
+
+
+def test_load_pytree_falls_back_to_old_sidestep(tmp_path):
+    """Crash window between sidestep and swap: .ckpt is gone but .old
+    holds the previous complete checkpoint — loads must survive."""
+    import os
+    from repro.checkpoint import load_pytree, save_pytree
+    tree = _tiny_tree()
+    p = str(tmp_path / "ck")
+    final = save_pytree(tree, p, step=1)
+    os.rename(final, final + ".old")        # simulate the crash window
+    out = load_pytree({k: np.zeros_like(v) for k, v in tree.items()}, p)
+    np.testing.assert_array_equal(out["w"], tree["w"])
+
+
+def test_save_pytree_keeps_old_until_swap_when_final_missing(tmp_path):
+    """Double-crash window: if a prior crash left only .old, the next
+    save must not delete it before the new .ckpt is swapped in — and it
+    must reap staging dirs orphaned by SIGKILL'd saves."""
+    import os
+    from repro.checkpoint import load_pytree, save_pytree
+    tree = _tiny_tree()
+    p = str(tmp_path / "ck")
+    final = save_pytree(tree, p, step=1)
+    os.rename(final, final + ".old")          # crash #1: only .old left
+    (tmp_path / "ck.tmpDEAD").mkdir()         # crash #2 debris: staging
+    real_rename = os.rename
+    seen = []
+
+    def spy(a, b):
+        # at the moment staging swaps to final, .old must still exist
+        if str(b).endswith(".ckpt"):
+            seen.append((tmp_path / "ck.ckpt.old").exists())
+        real_rename(a, b)
+
+    os.rename = spy
+    try:
+        save_pytree({k: v + 5 for k, v in tree.items()}, p, step=2)
+    finally:
+        os.rename = real_rename
+    assert seen == [True]                     # invariant held at swap
+    assert not (tmp_path / "ck.tmpDEAD").exists()
+    assert [q.name for q in tmp_path.iterdir()] == ["ck.ckpt"]
+    out = load_pytree({k: np.zeros_like(v) for k, v in tree.items()}, p)
+    np.testing.assert_array_equal(out["w"], tree["w"] + 5)
+
+
+def test_autoscaler_does_not_block_drain():
+    """drain() must idle past pending autoscale check events."""
+    from repro.api import ServerConfig
+    from repro.serving.requests import make_task
+    srv = (ServerConfig.sim()
+           .tasks([make_task("resnet18", priority=HP, jps=20.0)])
+           .contexts(2).oversubscribe(2.0).device(device())
+           .horizon_ms(50_000.0).seed(0)
+           .autoscale(0.1, 0.95, check_every_ms=100.0)
+           .build())
+    srv.core.arrivals = {}        # no periodic releases: submit-only run
+    h = srv.submit(make_task("resnet18", priority=LP, jps=20.0,
+                             tag="-oneshot"), at_ms=10.0)
+    m = srv.drain()
+    assert h.status == "completed"
+    # idled shortly after the one job, not at the 50s horizon
+    assert srv.core.now_ms() < 5_000.0
+
+
+def test_fig12_cache_is_fidelity_keyed(tmp_path, monkeypatch):
+    import json
+
+    import benchmarks.fig12_elastic as fig12
+
+    def fake_load(name):
+        p = tmp_path / f"{name}.json"
+        return json.loads(p.read_text()) if p.exists() else None
+
+    monkeypatch.setattr(fig12, "load_json", fake_load)
+    assert fig12.load_cached(fast=True) is None
+    (tmp_path / "fig12.json").write_text(
+        '{"_meta": {"fast": false}, "chaos": []}')
+    assert fig12.load_cached(fast=True) is None      # wrong fidelity
+    assert fig12.load_cached(fast=False) is not None
+
+
+def test_save_pytree_recovers_from_stale_old_dir(tmp_path):
+    """A .old left by an earlier crash must not wedge the next save."""
+    from repro.checkpoint import load_pytree, save_pytree
+    tree = _tiny_tree()
+    p = str(tmp_path / "ck")
+    save_pytree(tree, p, step=1)
+    stale = tmp_path / "ck.ckpt.old"
+    stale.mkdir()
+    (stale / "junk").write_text("x")
+    tree2 = {k: v * 2 for k, v in tree.items()}
+    save_pytree(tree2, p, step=2)
+    assert not stale.exists()
+    out = load_pytree({k: np.zeros_like(v) for k, v in tree.items()}, p)
+    np.testing.assert_array_equal(out["b"], tree2["b"])

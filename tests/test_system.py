@@ -109,6 +109,29 @@ def test_data_pipeline_deterministic_resume():
 
 
 @pytest.mark.slow
+def test_realtime_engine_with_staged_lm_decode():
+    """Real staged LM decode under DARIS: one decode step per job, split
+    into stage programs; inter-stage state carries hidden + KV-cache
+    slices (serving.staging.slice_cache) so migrations move real state."""
+    from repro.api import ServerConfig
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.serving.engine import staged_lm_taskspec
+    model = build_model(get_reduced("smollm-135m").replace(n_layers=8))
+    spec = staged_lm_taskspec(model, priority=HP, jps=10.0, n_stages=4,
+                              prompt_len=8, batch=1, tag="-hp")
+    srv = (ServerConfig.realtime()
+           .tasks([spec])
+           .contexts(2).oversubscribe(2.0)
+           .device(DeviceModel(n_units=2.0))
+           .horizon_ms(1200.0)
+           .build())
+    m = srv.run()
+    assert m.completed[HP] > 0
+    assert m.resp_stats(HP)["mean"] > 0
+
+
+@pytest.mark.slow
 def test_realtime_engine_with_cnn_stages():
     """Real JAX execution: tiny staged CNNs under DARIS on wall clock."""
     from repro.core.scheduler import DarisScheduler, SchedulerConfig
