@@ -1,0 +1,136 @@
+"""Fig 13 (beyond-paper): multi-GPU DARIS — throughput scaling, device
+heterogeneity, and whole-GPU failure recovery.
+
+Three scenario families over the cluster layer (repro.cluster):
+
+  * scaling — 1 -> 8 homogeneous GPUs, workload scaled with the fleet
+              (each GPU carries one Table II ResNet18 set at half load).
+              The acceptance bar: >= 3.5x aggregate jobs/sec at 4 GPUs
+              vs 1 GPU with ZERO HP deadline misses at both points.
+  * hetero  — the same aggregate workload on a mixed fleet (A100 + V100
+              + the calibration 2080 Ti + an L4-class part): HP-first
+              placement by least-loaded device must keep HP misses at
+              zero while per-device completions track speed factors.
+  * failure — 4 GPUs, one dies mid-run: every task homed there re-places
+              HP-first onto survivors via cross-GPU migration
+              (migrations counted) with zero HP misses end to end.
+
+Every row carries HP DMR, migration and inter-GPU transfer counts, and
+per-device p99s where the scenario cares — the columns that show the
+cluster layer scales without costing HP its deadlines.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api import ServerConfig
+from repro.serving.profiles import device
+from repro.serving.requests import table2_taskset
+
+from .common import HORIZON_MS, cache_json, load_json
+
+DNN = "resnet18"
+LOAD_SCALE = 0.5          # per-GPU offered load (HP must never miss)
+GPU_POINTS = (1, 2, 4, 8)
+GPU_POINTS_FAST = (1, 2, 4)
+
+
+def load_cached(fast: bool = False):
+    cached = load_json("fig13")
+    if cached and cached.get("_meta", {}).get("fast") == fast:
+        return cached
+    return None
+
+
+def fleet_taskset(n_gpus: int):
+    """n_gpus replicas of the per-GPU task set, uniquely named so
+    per-name arrival overrides and handles stay unambiguous."""
+    out = []
+    for g in range(n_gpus):
+        for spec in table2_taskset(DNN, load_scale=LOAD_SCALE):
+            out.append(dataclasses.replace(spec, name=f"g{g}-{spec.name}"))
+    return out
+
+
+def _cluster(n_gpus: int, specs, horizon: float, **cluster_kw):
+    return (ServerConfig.cluster(n_gpus, **cluster_kw)
+            .tasks(specs)
+            .contexts(4).streams(1).oversubscribe(4.0)
+            .device(device())
+            .horizon_ms(horizon).seed(0))
+
+
+def _row(name: str, server) -> dict:
+    m = server.run()
+    s = m.summary()
+    sched = server.scheduler
+    return dict(name=name,
+                n_gpus=len(sched.live_devices()),
+                transfers=m.transfers,
+                **{k: v for k, v in s.items()
+                   if k not in ("per_device", "transfers")},
+                per_device=s.get("per_device", {}))
+
+
+def run_scaling(horizon: float, points) -> list:
+    rows = []
+    for n in points:
+        srv = _cluster(n, fleet_taskset(n), horizon).build()
+        rows.append(_row(f"homo_{n}gpu", srv))
+    return rows
+
+
+def run_hetero(horizon: float) -> list:
+    """Same 4-GPU aggregate load, mixed fleet: speed factors 2.1 / 1.3 /
+    1.0 / 0.8 — placement skews toward the fast parts, HP stays clean."""
+    specs = fleet_taskset(4)
+    srv = _cluster(4, specs, horizon,
+                   device_models=["a100", "v100", "rtx2080ti", "l4"]).build()
+    return [_row("hetero_4gpu", srv)]
+
+
+def run_failure(horizon: float) -> list:
+    """One GPU dies at 30% of the horizon; survivors inherit its tasks
+    via cross-GPU migration and HP never misses."""
+    specs = fleet_taskset(4)
+    srv = (_cluster(4, specs, horizon)
+           .fail_device_at(1, horizon * 0.3)
+           .build())
+    row = _row("fail_1of4", srv)
+    row["dead_devices"] = [d for d, s in
+                           srv.scheduler.device_summary().items()
+                           if not s["alive"]]
+    return [row]
+
+
+def run(fast: bool = False) -> dict:
+    cached = load_cached(fast)
+    if cached:
+        return cached
+    horizon = 1500.0 if fast else HORIZON_MS
+    points = GPU_POINTS_FAST if fast else GPU_POINTS
+    scaling = run_scaling(horizon, points)
+    jps = {r["n_gpus"]: r["jps"] for r in scaling}
+    out = {"_meta": {"fast": fast},
+           "scaling": scaling,
+           "scaling_4x": jps.get(4, 0.0) / max(jps.get(1, 0.0), 1e-9),
+           "hetero": run_hetero(horizon),
+           "failure": run_failure(horizon)}
+    cache_json("fig13", out)
+    return out
+
+
+def csv_lines(out) -> list:
+    lines = []
+    for r in out["scaling"]:
+        lines.append(f"fig13/{r['name']}_jps,0,{r['jps']:.0f}")
+        lines.append(f"fig13/{r['name']}_dmr_hp,0,{r['dmr_hp']:.4f}")
+        lines.append(f"fig13/{r['name']}_p99_hp,0,{r['resp_hp_p99']:.3f}")
+    lines.append(f"fig13/scaling_4x,0,{out['scaling_4x']:.2f}")
+    for key in ("hetero", "failure"):
+        for r in out[key]:
+            lines.append(f"fig13/{r['name']}_jps,0,{r['jps']:.0f}")
+            lines.append(f"fig13/{r['name']}_dmr_hp,0,{r['dmr_hp']:.4f}")
+            lines.append(f"fig13/{r['name']}_migrations,0,{r['migrations']}")
+            lines.append(f"fig13/{r['name']}_transfers,0,{r['transfers']}")
+    return lines

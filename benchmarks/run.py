@@ -32,6 +32,7 @@ FIGURES = [
     ("fig10", "benchmarks.fig10_batching"),
     ("fig11", "benchmarks.fig11_overload"),
     ("fig12", "benchmarks.fig12_elastic"),
+    ("fig13", "benchmarks.fig13_cluster"),
     ("baselines", "benchmarks.baselines"),
 ]
 

@@ -47,6 +47,11 @@ class RunMetrics:
         default_factory=lambda: {HP: 0, LP: 0})
     # batch size -> completed jobs of that size
     batch_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # cluster runs: device -> {"completed"/"missed": {HP/LP: n}} (empty on
+    # single-GPU servers), and the count of inter-GPU state transfers the
+    # zero-delay migration machinery actually paid for
+    per_device: Dict[int, Dict] = dataclasses.field(default_factory=dict)
+    transfers: int = 0
 
     @property
     def jps(self) -> float:
@@ -87,7 +92,9 @@ class RunMetrics:
                 "min": float(a.min()), "max": float(a.max())}
 
     def summary(self) -> Dict:
-        return {
+        resp_hp = self.resp_stats(HP)
+        resp_lp = self.resp_stats(LP)
+        out = {
             "jps": self.jps,
             "jps_hp": self.jps_by(HP), "jps_lp": self.jps_by(LP),
             "jps_inputs": self.jps_inputs,
@@ -97,13 +104,25 @@ class RunMetrics:
             "rejected_hp": self.rejected[HP], "rejected_lp": self.rejected[LP],
             "unfinished_hp": self.unfinished[HP],
             "unfinished_lp": self.unfinished[LP],
-            "resp_hp": self.resp_stats(HP), "resp_lp": self.resp_stats(LP),
+            "resp_hp": resp_hp, "resp_lp": resp_lp,
+            # flat per-priority percentiles: the tail-latency columns the
+            # figure harnesses (fig4-6, fig13) read without digging into
+            # the nested resp dicts
+            "resp_hp_p50": resp_hp["p50"], "resp_hp_p95": resp_hp["p95"],
+            "resp_hp_p99": resp_hp["p99"],
+            "resp_lp_p50": resp_lp["p50"], "resp_lp_p95": resp_lp["p95"],
+            "resp_lp_p99": resp_lp["p99"],
             "mean_batch": self.mean_batch(),
             "batch_hist": dict(sorted(self.batch_hist.items())),
             "migrations": self.migrations, "stragglers": self.stragglers,
             "faults": self.faults, "reconfigures": self.reconfigures,
             "skipped_releases": self.skipped_releases,
         }
+        if self.per_device:
+            out["per_device"] = {
+                str(d): s for d, s in sorted(self.per_device.items())}
+            out["transfers"] = self.transfers
+        return out
 
 
 def empty_metrics(horizon_ms: float) -> RunMetrics:

@@ -5,12 +5,19 @@ paper's GPU and chips on a TPU pod slice (DESIGN.md §2) — the geometry is
 identical. With OS > 1 the wrap-around allocation makes contexts overlap,
 so idle capacity in one context is usable by its neighbours (the core
 oversubscription benefit the paper measures).
+
+Device-relative indices: a context index is whatever key its scheduler
+assigned — a plain int on a single device, a ``(device, k)`` tuple under
+the cluster layer (repro/cluster). Nothing in the geometry depends on the
+key shape; ``ContextTable`` keeps both usages working through one type.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Set
+from typing import Hashable, List, Set
+
+CtxKey = Hashable   # int (single device) | (device, int) (cluster layer)
 
 
 def ceil_even(x: float) -> int:
@@ -20,7 +27,7 @@ def ceil_even(x: float) -> int:
 
 @dataclasses.dataclass
 class Context:
-    index: int
+    index: CtxKey
     units: Set[int]                 # unit ids (overlapping when OS > 1)
     n_streams: int
     alive: bool = True
@@ -28,6 +35,25 @@ class Context:
     @property
     def cap(self) -> float:
         return float(len(self.units))
+
+
+class ContextTable(dict):
+    """Context registry keyed by context index.
+
+    Historically ``DarisScheduler.contexts`` was a list whose positions
+    doubled as indices; the cluster layer namespaces indices as
+    ``(device, k)`` tuples, which no list can hold. This table keeps both
+    call styles alive: it *indexes* like a mapping (``table[key]``) and
+    *iterates* like the historic list (``for ctx in table`` yields
+    ``Context`` objects in insertion order, which is creation order).
+    ``in`` tests keys, as for any mapping."""
+
+    def __iter__(self):
+        return iter(self.values())
+
+    def append(self, ctx: Context) -> None:
+        """List-style registration: key the context by its own index."""
+        self[ctx.index] = ctx
 
 
 def make_contexts(n_contexts: int, n_streams: int, oversubscription: float,

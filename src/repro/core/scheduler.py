@@ -22,7 +22,8 @@ from typing import Dict, List, Optional
 from ..runtime.contention import ContentionModel, DeviceModel, batch_cost
 from .batching import BatchCoalescer, BatchPolicy
 from .mret import TaskMret
-from .partition import Context, make_contexts, reconfigure as derive_contexts
+from .partition import (Context, ContextTable, CtxKey, make_contexts,
+                        reconfigure as derive_contexts)
 from .stage_queue import QueueConfig, StageQueue
 from .task import HP, LP, Job, StageInstance, Task, TaskSpec
 
@@ -53,6 +54,18 @@ class Rejection:
     task: str
     t_ms: float
     priority: int
+
+
+def hp_first(tasks, now: float) -> List[Task]:
+    """Algorithm 1's placement ordering: HP before LP, each class by
+    descending utilization. THE ordering for every (re-)placement pass —
+    offline population, fault recovery, online reconfigure, and the
+    cluster layer's global passes all call this one function; a tie-break
+    change here changes them all together."""
+    return (sorted([t for t in tasks if t.priority == HP],
+                   key=lambda t: -t.utilization(now))
+            + sorted([t for t in tasks if t.priority == LP],
+                     key=lambda t: -t.utilization(now)))
 
 
 class LaneMap(dict):
@@ -100,24 +113,39 @@ class LaneMap(dict):
 
 
 class DarisScheduler:
+    """One device's DARIS scheduler.
+
+    ``ctx_ns`` makes the scheduler *device-relative*: when set (by the
+    cluster layer, repro/cluster), every context index it mints becomes a
+    ``(ctx_ns, k)`` tuple instead of a bare int, so N workers can share
+    one lane/queue/job namespace without collisions. Single-device
+    construction (``ctx_ns=None``) keeps the historic int indices and is
+    bit-identical to the pre-cluster scheduler."""
+
     def __init__(self, specs: List[TaskSpec], cfg: SchedulerConfig,
-                 device: Optional[DeviceModel] = None):
+                 device: Optional[DeviceModel] = None, *,
+                 ctx_ns: Optional[int] = None):
         self.cfg = cfg
         self.device = device or DeviceModel()
+        self.speed = self.device.speed
         self.contention = ContentionModel(self.device)
+        self.ctx_ns = ctx_ns
         if cfg.no_staging:
             specs = [self._merge_stages(s) for s in specs]
         self.tasks: List[Task] = [Task(spec=s, index=i)
                                   for i, s in enumerate(specs)]
-        self.contexts: List[Context] = make_contexts(
-            cfg.n_contexts, cfg.n_streams, cfg.oversubscription,
-            int(self.device.n_units))
+        self.contexts: ContextTable = ContextTable()
+        for c in make_contexts(cfg.n_contexts, cfg.n_streams,
+                               cfg.oversubscription,
+                               int(self.device.n_units)):
+            c.index = self._key(c.index)
+            self.contexts.append(c)
         # live-context cache: reconfigure-heavy runs accumulate retired
         # contexts (indices must stay addressable for draining work), so
         # hot paths that only want live ones must not rescan the full
         # history each release
         self._live_cache: Optional[List[Context]] = None
-        self.queues: Dict[int, StageQueue] = {
+        self.queues: Dict[CtxKey, StageQueue] = {
             c.index: StageQueue(cfg.queue_cfg) for c in self.contexts}
         # lane occupancy: (ctx, slot) -> StageInstance | None (indexed)
         self.lanes = LaneMap()
@@ -127,7 +155,7 @@ class DarisScheduler:
         # per-context insertion-ordered job sets (Job hashes by identity):
         # membership tests and removals are O(1) where list.remove used to
         # walk — and value-compare — every active job
-        self.active_jobs: Dict[int, Dict[Job, None]] = {
+        self.active_jobs: Dict[CtxKey, Dict[Job, None]] = {
             c.index: {} for c in self.contexts}
         self.rejections: List[Rejection] = []
         self.rejected_counts: Dict[int, int] = {HP: 0, LP: 0}
@@ -140,6 +168,11 @@ class DarisScheduler:
         # events, so batch heads must never be held back
         self.next_wake_ms: float = math.inf
         self._offline_phase()
+
+    def _key(self, i: int) -> CtxKey:
+        """Context index for the i-th context this scheduler ever mints:
+        a bare int on a single device, ``(device, i)`` under a cluster."""
+        return i if self.ctx_ns is None else (self.ctx_ns, i)
 
     # ------------------------------------------------------------- offline
     @staticmethod
@@ -157,9 +190,10 @@ class DarisScheduler:
         return dataclasses.replace(spec, stages=[merged])
 
     def _seed_mret(self, task: Task) -> None:
-        """AFET seeding (§IV-A1): pessimistic full-load execution times."""
+        """AFET seeding (§IV-A1): pessimistic full-load execution times
+        (reference-speed units; see ``DeviceModel.speed``)."""
         n_p = self.cfg.n_contexts * self.cfg.n_streams
-        cap0 = self.contexts[0].cap
+        cap0 = next(iter(self.contexts)).cap
         afets = [self.contention.full_load_time(
             p, cap0, self.cfg.n_streams, n_p) for p in task.spec.stages]
         task.mret = TaskMret(afets, ws=self.cfg.mret_window)
@@ -170,16 +204,10 @@ class DarisScheduler:
             self._seed_mret(t)
         # Algorithm 1: HP first, then LP, each to the min-utilization context
         util = {c.index: 0.0 for c in self.contexts}
-        for t in sorted([t for t in self.tasks if t.priority == HP],
-                        key=lambda t: -t.utilization(0.0)):
+        for t in hp_first(self.tasks, 0.0):
             k = min(util, key=util.get)
             t.ctx = k
-            t.fixed_ctx = True
-            util[k] += t.utilization(0.0)
-        for t in sorted([t for t in self.tasks if t.priority == LP],
-                        key=lambda t: -t.utilization(0.0)):
-            k = min(util, key=util.get)
-            t.ctx = k
+            t.fixed_ctx = t.priority == HP
             util[k] += t.utilization(0.0)
 
     def live_contexts(self) -> List[Context]:
@@ -192,14 +220,19 @@ class DarisScheduler:
     def _invalidate_live(self) -> None:
         self._live_cache = None
 
-    def add_task(self, spec: TaskSpec, now: float = 0.0) -> Task:
-        """Late task registration (the ``DarisServer.submit`` path): same
-        staging/AFET treatment as constructor-registered tasks, then
-        Algorithm-1-style placement on the least-utilized live context."""
+    def make_task(self, spec: TaskSpec, index: int) -> Task:
+        """Create (but do not place) a task: same staging/AFET treatment
+        as constructor-registered tasks. The cluster layer uses this to
+        seed a task against a *chosen* device before adopting it."""
         if self.cfg.no_staging:
             spec = self._merge_stages(spec)
-        task = Task(spec=spec, index=len(self.tasks))
+        task = Task(spec=spec, index=index)
         self._seed_mret(task)
+        return task
+
+    def place_task(self, task: Task, now: float) -> Task:
+        """Algorithm-1-style placement on the least-utilized live context
+        of THIS device + registration in the task list."""
         alive = [c.index for c in self.live_contexts()]
         util = {k: self.util_hp_total(k, now) + self.util_lp_active(k, now)
                 for k in alive}
@@ -207,6 +240,10 @@ class DarisScheduler:
         task.fixed_ctx = task.priority == HP
         self.tasks.append(task)
         return task
+
+    def add_task(self, spec: TaskSpec, now: float = 0.0) -> Task:
+        """Late task registration (the ``DarisServer.submit`` path)."""
+        return self.place_task(self.make_task(spec, len(self.tasks)), now)
 
     # ----------------------------------------------------- utilization (Eq. 4-7)
     @staticmethod
@@ -227,39 +264,88 @@ class DarisScheduler:
     def job_cost(cls, job: Job) -> float:
         return cls.spec_batch_cost(job.task.spec, job.n_inputs)
 
-    def util_hp_total(self, k: int, now: float) -> float:
-        return sum(t.utilization(now) for t in self.tasks
-                   if t.ctx == k and t.priority == HP)
+    def util_hp_total(self, k: CtxKey, now: float) -> float:
+        """Device-local HP utilization: reference-units sum, scaled by the
+        device's speed factor (a 2x device hosts 2x the reference load in
+        the same headroom). ``/1.0`` on the calibration device is exact,
+        so single-GPU admission keeps its historic bits."""
+        u = sum(t.utilization(now) for t in self.tasks
+                if t.ctx == k and t.priority == HP)
+        return u if self.speed == 1.0 else u / self.speed
 
-    def util_lp_active(self, k: int, now: float) -> float:
-        return sum(j.task.utilization(now) * self.job_cost(j)
-                   for j in self.active_jobs[k] if j.task.priority == LP)
+    def util_lp_active(self, k: CtxKey, now: float) -> float:
+        u = sum(j.task.utilization(now) * self.job_cost(j)
+                for j in self.active_jobs[k] if j.task.priority == LP)
+        return u if self.speed == 1.0 else u / self.speed
 
-    def remaining_util(self, k: int, now: float) -> float:
+    def remaining_util(self, k: CtxKey, now: float) -> float:
         """Eq. 11: U_r = N_s - U_h,t."""
         ctx = self.contexts[k]
         return ctx.n_streams - self.util_hp_total(k, now)
 
-    def admits(self, k: int, task: Task, now: float) -> bool:
-        """Eq. 12: U_l,a + u_j < U_r."""
+    def admits(self, k: CtxKey, task: Task, now: float) -> bool:
+        """Eq. 12: U_l,a + u_j < U_r (u_j in device-local units)."""
         if not self.contexts[k].alive:
             return False
-        return (self.util_lp_active(k, now) + task.utilization(now)
+        u_j = task.utilization(now)
+        if self.speed != 1.0:
+            u_j /= self.speed
+        return (self.util_lp_active(k, now) + u_j
                 < self.remaining_util(k, now))
 
-    def predicted_finish(self, k: int, now: float) -> float:
+    def predicted_finish(self, k: CtxKey, now: float) -> float:
         """Backlog-based earliest-finish estimate for migration targets.
         Batched stages cost b/g(b) x their normalized MRET, here and in
-        ``StageQueue.backlog_ms``."""
+        ``StageQueue.backlog_ms``; faster devices drain the same backlog
+        proportionally sooner."""
         ctx = self.contexts[k]
         rem = 0.0
         for _, inst in self.lanes.busy_in_ctx(k):
             # running instances always entered through StageQueue.push,
-            # so their cached estimator/cost fields are populated
+            # so their cached estimator/cost fields are populated. MRET is
+            # reference-speed but work_done accrues in device-local wall
+            # ms (SimBackend.launch divides work by speed), so the MRET
+            # must land in device units BEFORE the subtraction
             mret = inst.smret.value() * inst.cost_b
+            if self.speed != 1.0:
+                mret /= self.speed
             rem += max(mret - inst.work_done, 0.0)
-        rem += self.queues[k].backlog_ms()
+        backlog = self.queues[k].backlog_ms()
+        if self.speed != 1.0:
+            backlog /= self.speed
+        rem += backlog
         return now + rem / max(ctx.n_streams, 1)
+
+    def migration_eta(self, k: CtxKey, now: float, src: CtxKey,
+                      job: Optional[Job] = None) -> float:
+        """ETA the migration machinery compares when moving work from
+        ``src`` to ``k``. On one device it IS ``predicted_finish``; the
+        cluster layer adds the inter-GPU transfer charge for candidates
+        that would have to fetch ``job``'s inter-stage state."""
+        return self.predicted_finish(k, now)
+
+    # ------------------------------------------- device-relative interface
+    # (the backend talks to schedulers only through these, so one
+    # SimBackend clock can drive a single device and a cluster alike)
+    def contention_of(self, k: CtxKey) -> ContentionModel:
+        """Contention model of the device hosting context ``k``."""
+        return self.contention
+
+    def rate_groups(self, entries):
+        """Partition running-set entries ``(lane, entry)`` into per-device
+        rate-computation groups ``(contention, contexts, entries)``.
+        Lanes on different devices never contend with each other; a
+        single device is exactly one group."""
+        return ((self.contention, self.contexts, entries),)
+
+    def scale_units(self) -> int:
+        """How many units the autoscaler grows/shrinks by one: contexts
+        on a single device, whole GPUs under the cluster layer."""
+        return len(self.live_contexts())
+
+    def scale_kwargs(self, n: int) -> Dict:
+        """``reconfigure`` kwargs that set the autoscaler unit count."""
+        return {"n_contexts": n}
 
     # --------------------------------------------------------------- online
     def on_release(self, task: Task, now: float) -> Optional[Job]:
@@ -305,6 +391,13 @@ class DarisScheduler:
         if inst.lane is not None or job.stage_idx != 0:
             self._coalescer.close(task)          # stale head: already runs
             return None
+        if job.ctx not in self.contexts:
+            # cluster re-place moved the head's job to another device:
+            # this worker can neither admit nor refresh it (its context
+            # table has no such key) — seal the stale head. Never fires
+            # on a single device (job.ctx is always a local context).
+            self._coalescer.close(task)
+            return None
         if task.fixed_ctx and job.ctx != task.ctx:
             # an HP task's context is fixed (Algorithm 1): its inputs may
             # only ride batches executing on its own partition — Eq. 11
@@ -326,6 +419,8 @@ class DarisScheduler:
         # scope="model").
         prof = job.task.spec.stages[0]
         mret0 = job.task.mret.stage_mret(0)
+        if self.speed != 1.0:
+            mret0 /= self.speed   # wall-clock prediction on THIS device
         cost_now = batch_cost(prof, job.n_inputs)
         cost_join = batch_cost(prof, job.n_inputs + 1)
         fits = now + mret0 * cost_join <= inst.virtual_deadline_ms
@@ -339,6 +434,8 @@ class DarisScheduler:
             du = task.utilization(now) * (
                 self.spec_batch_cost(job.task.spec, job.n_inputs + 1)
                 - self.spec_batch_cost(job.task.spec, job.n_inputs))
+            if self.speed != 1.0:
+                du /= self.speed      # device-local units, as in admits()
             k = job.ctx
             if (not self.contexts[k].alive
                     or self.util_lp_active(k, now) + du
@@ -370,6 +467,22 @@ class DarisScheduler:
         them) whatever the batch size."""
         job = inst.job
         stage_cost = batch_cost(job.stage_profile(), job.n_inputs)
+        if inst.transfer_ms:
+            # the inter-GPU transfer charge is migration cost, not stage
+            # execution: feeding it to MRET would inflate the sliding-
+            # window max (and every deadline/utilization built on it)
+            # for ws releases after every cross-GPU move. The backend
+            # folds the charge into the stage's work, burned at the
+            # contention rate — so its wall-clock share is its fraction
+            # of the executed work, not the raw charge
+            xfer_wall = inst.transfer_ms
+            if inst.work_done > 0:
+                xfer_wall = et_ms * (inst.transfer_ms / inst.work_done)
+            et_ms = max(et_ms - xfer_wall, 0.0)
+        if self.speed != 1.0:
+            # MRET history is kept in reference-speed units so it stays
+            # meaningful when a task migrates between heterogeneous GPUs
+            et_ms = et_ms * self.speed
         job.task.mret.observe(job.stage_idx, et_ms / stage_cost)
         missed_vdl = now > inst.virtual_deadline_ms
         if job.is_last_stage():
@@ -414,6 +527,8 @@ class DarisScheduler:
             return False
         prof = job.task.spec.stages[0]
         mret0 = job.task.mret.stage_mret(0)
+        if self.speed != 1.0:
+            mret0 /= self.speed   # wall-clock prediction on THIS device
         latest_start = (inst.virtual_deadline_ms
                         - mret0 * batch_cost(prof, job.n_inputs))
         return self.next_wake_ms <= latest_start
@@ -422,6 +537,16 @@ class DarisScheduler:
         return self.lanes.free_lanes()
 
     # ------------------------------------------------------ fault / elastic
+    def fault_cancel_keys(self, k) -> List:
+        """Backend lanes a context fault must cancel BEFORE
+        ``fail_context`` runs. One device: just the faulted context. The
+        cluster overrides this — losing a device's last live context
+        escalates to a whole-device failure, which requeues in-flight
+        stages from EVERY context of the device, so their backend
+        entries must die too (else a ghost completion double-executes
+        the replayed stage)."""
+        return [k]
+
     def fail_context(self, k: int, now: float) -> List[StageInstance]:
         """Partition loss: survivors inherit tasks via Algorithm 1 re-run;
         in-flight stages replay (stage granularity bounds lost work)."""
@@ -441,11 +566,7 @@ class DarisScheduler:
         # an LP task must never claim the min-utilization survivor ahead
         # of an HP task (mirrors _offline_phase)
         orphaned = [t for t in self.tasks if t.ctx == k]
-        ordered = (sorted([t for t in orphaned if t.priority == HP],
-                          key=lambda t: -t.utilization(now))
-                   + sorted([t for t in orphaned if t.priority == LP],
-                            key=lambda t: -t.utilization(now)))
-        for t in ordered:
+        for t in hp_first(orphaned, now):
             tgt = min(util, key=util.get)
             t.ctx = tgt
             util[tgt] += t.utilization(now)
@@ -472,7 +593,7 @@ class DarisScheduler:
         geo = derive_contexts(n_live, self.cfg.n_streams,
                               self.cfg.oversubscription,
                               int(self.device.n_units))[-1]
-        ctx = Context(index=len(self.contexts), units=geo.units,
+        ctx = Context(index=self._key(len(self.contexts)), units=geo.units,
                       n_streams=self.cfg.n_streams)
         self._install_context(ctx)
         return ctx
@@ -523,6 +644,8 @@ class DarisScheduler:
         base = len(self.contexts)
         created = derive_contexts(n_contexts, n_streams, oversubscription,
                                   int(self.device.n_units), base_index=base)
+        for ctx in created:
+            ctx.index = self._key(ctx.index)
         # retire the old partition *before* installing the new one: queued
         # work drains out, running lanes stay busy until their stage ends
         orphans: List[StageInstance] = []
@@ -539,11 +662,7 @@ class DarisScheduler:
         # (descending utilization), then LP — identical ordering to
         # _offline_phase / fail_context
         util = {c.index: 0.0 for c in created}
-        ordered = (sorted([t for t in self.tasks if t.priority == HP],
-                          key=lambda t: -t.utilization(now))
-                   + sorted([t for t in self.tasks if t.priority == LP],
-                            key=lambda t: -t.utilization(now)))
-        for t in ordered:
+        for t in hp_first(self.tasks, now):
             tgt = min(util, key=util.get)
             t.ctx = tgt
             util[tgt] += t.utilization(now)
@@ -559,7 +678,11 @@ class DarisScheduler:
                 del self.active_jobs[k][job]
                 self.active_jobs[job.task.ctx][job] = None
                 job.ctx = job.task.ctx
-                if old_units[k] != self.contexts[job.ctx].units:
+                # a sticky cross-GPU migration can point the task at
+                # another device: that context isn't in THIS worker's
+                # table, and the move is a unit-set change by definition
+                tgt_ctx = self.contexts.get(job.ctx)
+                if tgt_ctx is None or old_units[k] != tgt_ctx.units:
                     migrated += 1
         for inst in orphans:
             inst.lane = None

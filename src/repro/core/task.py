@@ -142,6 +142,12 @@ class StageInstance:
     # backlog_ms the hottest loop on overload runs
     smret: Optional[object] = None    # core.mret.StageMret
     cost_b: float = 1.0
+    # inter-GPU migration charge (cluster layer): when this stage
+    # dispatches on a different device than the one holding the job's
+    # inter-stage state, the dispatcher stamps the configured transfer
+    # cost here and the backend adds it to the stage's work. Always 0.0
+    # on a single device.
+    transfer_ms: float = 0.0
 
     @property
     def profile(self) -> StageProfile:

@@ -60,7 +60,12 @@ _tie = itertools.count()
 #   [6] smret         the instance's StageMret estimator (live ref)
 #   [7] cost          batch cost b/g(b) of this stage (static per launch)
 #   [8] floor         straggler kill floor, 4 x batched work (static)
-_INST, _REM, _RATE, _VER, _EFF, _ETA, _SMRET, _COST, _FLOOR = range(9)
+#   [9] xfer          inter-GPU transfer charge folded into the work
+#                     (cluster; 0.0 on a single device) — excluded from
+#                     the straggler kill decision, which compares pure
+#                     execution progress against MRET
+(_INST, _REM, _RATE, _VER, _EFF, _ETA, _SMRET, _COST, _FLOOR,
+ _XFER) = range(10)
 
 
 class ExecutionBackend(Protocol):
@@ -174,18 +179,33 @@ class SimBackend:
         alone = batched_stage_ms(prof, b)
         work = (alone + prof.overhead_ms) * noise
         # batched kernels also widen — the effective profile competes for
-        # more units in the rate computation (identity object for b = 1)
-        eff = self.core.sched.contention.batched_profile(prof, b)
+        # more units in the rate computation (identity object for b = 1).
+        # The contention model is the LANE's device's (cluster lanes can
+        # sit on heterogeneous GPUs; on one device this is sched.contention)
+        con = self.core.sched.contention_of(lane[0])
+        eff = con.batched_profile(prof, b)
         # straggler-check constants, hoisted out of the per-event loop:
         # the stage's MRET estimator, its batch cost, and its kill floor
         # are fixed for the lifetime of this launch
         smret = inst.task.mret.stages[inst.job.stage_idx]
         cost = batch_cost(prof, b)
         floor = 4.0 * (alone + prof.overhead_ms)
+        spd = con.device.speed
+        if spd != 1.0:
+            # heterogeneous device: profiles/MRET are reference-speed, so
+            # the executed work — and every wall-clock-comparable straggler
+            # constant — shrinks by the device's speed factor
+            work /= spd
+            cost /= spd
+            floor /= spd
+        if inst.transfer_ms:
+            # inter-GPU state migration (cluster dispatcher stamped it):
+            # the transfer serializes ahead of the stage program
+            work += inst.transfer_ms
         # version must be globally unique: a reset-to-0 counter lets a
         # stale FINISH from the lane's previous occupant fire early
         self.running[lane] = [inst, work, 0.0, next(_tie), eff, None,
-                              smret, cost, floor]
+                              smret, cost, floor, inst.transfer_ms]
         self._rates_dirty = True
 
     def cancel_ctx(self, ctx_idx: int) -> None:
@@ -222,8 +242,17 @@ class SimBackend:
             projected = ((now - inst.start_ms)
                          + entry[_REM] / max(entry[_RATE], 1e-6))
             mret = entry[_SMRET].value() * entry[_COST]
+            # the transfer charge is legitimate serialized work, not a
+            # slow stage: keep it out of the kill comparison. The charge
+            # sits inside rem, so the projection burns it at the
+            # contention rate — the credit must scale the same way or a
+            # contended transfer-charged stage gets spuriously killed
+            # (and re-pays the transfer on every replay). +0.0 on a
+            # single device, bit-exact.
             floor = entry[_FLOOR]
-            if projected > max(kappa * mret, floor) and len(self.running) > 1:
+            thresh = (max(kappa * mret, floor)
+                      + entry[_XFER] / max(entry[_RATE], 1e-6))
+            if projected > thresh and len(self.running) > 1:
                 del self.running[lane]
                 self._rates_dirty = True
                 sched.lanes[lane] = None
@@ -238,9 +267,13 @@ class SimBackend:
                 if inst.task.fixed_ctx:
                     tgt = inst.task.ctx
                 else:
+                    # migration_eta == predicted_finish on one device; the
+                    # cluster layer surcharges cross-GPU candidates with
+                    # the inter-GPU transfer cost
                     cands = [c.index for c in sched.live_contexts()]
                     tgt = min(cands, key=lambda k:
-                              sched.predicted_finish(k, self.now))
+                              sched.migration_eta(k, self.now, old,
+                                                  inst.job))
                     if tgt != old:
                         sched.migrations += 1
                 if inst.job in sched.active_jobs.get(old, {}):
@@ -266,19 +299,23 @@ class SimBackend:
         entries = list(self.running.items())
         m = len(entries)
         if self._rates_dirty or self.full_repredict:
-            ctx_active: Dict[int, int] = {}
-            for lane, _ in entries:
-                ctx_active[lane[0]] = ctx_active.get(lane[0], 0) + 1
-            contexts = sched.contexts
-            u, ns, mf = [], [], []
-            for lane, e in entries:
-                eff = e[_EFF]
-                u.append(contexts[lane[0]].cap / max(ctx_active[lane[0]], 1))
-                ns.append(eff.n_sat)
-                mf.append(eff.mem_frac)
-            rates = sched.contention.rates_seq(u, ns, mf)
-            for (_, entry), rate in zip(entries, rates):
-                entry[_RATE] = rate if rate > 1e-6 else 1e-6
+            # lanes on different GPUs never contend: the scheduler splits
+            # the running set into per-device groups (exactly one group —
+            # this whole block's historic shape — on a single device)
+            for contention, contexts, group in sched.rate_groups(entries):
+                ctx_active: Dict[object, int] = {}
+                for lane, _ in group:
+                    ctx_active[lane[0]] = ctx_active.get(lane[0], 0) + 1
+                u, ns, mf = [], [], []
+                for lane, e in group:
+                    eff = e[_EFF]
+                    u.append(contexts[lane[0]].cap
+                             / max(ctx_active[lane[0]], 1))
+                    ns.append(eff.n_sat)
+                    mf.append(eff.mem_frac)
+                rates = contention.rates_seq(u, ns, mf)
+                for (_, entry), rate in zip(group, rates):
+                    entry[_RATE] = rate if rate > 1e-6 else 1e-6
             self._rates_dirty = False
         now, eps, full = self.now, self.predict_eps, self.full_repredict
         heap = self._heap

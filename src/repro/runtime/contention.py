@@ -91,6 +91,13 @@ class DeviceModel:
     bubble: float = 0.18         # single-stream issue-gap waste
     l2_pressure: float = 0.09    # cache/DRAM thrash growth per co-tenant
     name: str = "rtx2080ti-like"
+    # heterogeneous clusters: scalar speed factor vs the reference device
+    # the StageProfiles were calibrated on (an A100-class device at 2.0
+    # runs every stage in half its profiled time). MRET/utilization stay
+    # in reference units; the scheduler divides by ``speed`` wherever a
+    # quantity becomes device-local (admission headroom, ETAs, executed
+    # stage work). 1.0 = the calibration device itself.
+    speed: float = 1.0
 
 
 class ContentionModel:

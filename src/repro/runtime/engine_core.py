@@ -32,15 +32,18 @@ import numpy as np
 
 from ..core.metrics import RunMetrics, empty_metrics
 from ..core.scheduler import DarisScheduler
-from ..core.task import Job, StageInstance, Task, TaskSpec
+from ..core.task import HP, LP, Job, StageInstance, Task, TaskSpec
 from .arrivals import ArrivalProcess, PeriodicArrival
 
 _seq = itertools.count()
 
 # timeline event kinds; ordering at equal timestamps mirrors the historic
 # simulator heap (releases before faults before scale-outs before
-# repartitions before autoscaler checks)
-RELEASE, FAULT, ADD_CTX, RECONFIG, AUTOSCALE = 0, 2, 3, 4, 5
+# repartitions before autoscaler checks). Whole-device failures sort WITH
+# context faults — a fault and a reconfigure at the same instant must
+# fail first, or the re-place would move tasks onto the dying device
+# only to replay them one event later. Only relative order matters.
+RELEASE, FAULT, FAIL_DEV, ADD_CTX, RECONFIG, AUTOSCALE = 0, 2, 3, 4, 5, 6
 
 _EPS = 1e-9
 
@@ -52,10 +55,14 @@ class FaultPlan:
     ``reconfigure_at`` holds timed online repartitions: each entry is
     ``(t_ms, kwargs)`` where kwargs are forwarded to
     ``DarisScheduler.reconfigure`` (n_contexts / n_streams /
-    oversubscription; omitted fields keep their current value)."""
+    oversubscription — plus n_gpus under the cluster layer; omitted
+    fields keep their current value). ``fail_device_at`` kills a whole
+    GPU (cluster servers only): every in-flight stage on it is
+    cancelled and its tasks re-place onto surviving devices."""
     fail_ctx_at: Optional[Tuple[int, float]] = None   # (ctx, t_ms)
     add_ctx_at: Optional[float] = None
     reconfigure_at: Optional[List[Tuple[float, Dict]]] = None
+    fail_device_at: Optional[Tuple[int, float]] = None   # (device, t_ms)
 
 
 @dataclasses.dataclass
@@ -124,6 +131,10 @@ class EngineCore:
         # task.index -> arrival process (tasks without one never self-release)
         self.arrivals: Dict[int, ArrivalProcess] = dict(arrivals or {})
         self._handles: Dict[int, SubmitHandle] = {}
+        # per-device completion counters (cluster schedulers only; None
+        # on a single device so the completion hot path pays one check)
+        self._dev_stats: Optional[Dict[int, Dict]] = (
+            {} if hasattr(sched, "workers") else None)
         self._timeline: List[tuple] = []   # (t, kind, seq, payload)
         # pending non-AUTOSCALE timeline entries: autoscale checks re-arm
         # themselves forever, so idleness must not scan the heap for them
@@ -177,6 +188,8 @@ class EngineCore:
         fp = self.fault_plan
         if fp and fp.fail_ctx_at:
             self._push(fp.fail_ctx_at[1], FAULT, fp.fail_ctx_at[0])
+        if fp and fp.fail_device_at:
+            self._push(fp.fail_device_at[1], FAIL_DEV, fp.fail_device_at[0])
         if fp and fp.add_ctx_at is not None:
             self._push(fp.add_ctx_at, ADD_CTX, None)
         if fp and fp.reconfigure_at:
@@ -204,6 +217,8 @@ class EngineCore:
                     self._handle_release(payload[0], payload[1], t)
                 elif kind == FAULT:
                     self._handle_fault(payload)
+                elif kind == FAIL_DEV:
+                    self._handle_fail_device(payload)
                 elif kind == ADD_CTX:
                     self.sched.add_context(now)
                     self._log(f"scale-out ctx{len(self.sched.contexts) - 1}")
@@ -233,9 +248,29 @@ class EngineCore:
                 self.metrics.unfinished[p] += 1
                 if end_ms > job.abs_deadline_ms:
                     self.metrics.missed[p] += 1
+                    if self._dev_stats is not None:
+                        # per-device misses must agree with the global
+                        # sweep: attribute the late job to its home
+                        ds = self._dev_stats.setdefault(
+                            job.ctx[0], {"completed": {HP: 0, LP: 0},
+                                         "missed": {HP: 0, LP: 0}})
+                        ds["missed"][p] += 1
         self.metrics.migrations = self.sched.migrations
         for p, n in self.sched.rejected_counts.items():
             self.metrics.rejected[p] += n
+        if self._dev_stats is not None:
+            # every device appears — zeros included — so cluster
+            # summaries always carry per_device/transfers even when a
+            # short run completed nothing
+            for d in self.sched.workers:
+                self._dev_stats.setdefault(
+                    d, {"completed": {HP: 0, LP: 0},
+                        "missed": {HP: 0, LP: 0}})
+            self.metrics.per_device = {
+                d: {"completed": dict(s["completed"]),
+                    "missed": dict(s["missed"])}
+                for d, s in sorted(self._dev_stats.items())}
+            self.metrics.transfers = getattr(self.sched, "transfers", 0)
         self.backend.stop()
         return self.metrics
 
@@ -272,10 +307,57 @@ class EngineCore:
 
     def _handle_fault(self, ctx_idx: int) -> None:
         now = self.backend.now_ms()
-        self.backend.cancel_ctx(ctx_idx)
+        if hasattr(self.sched, "workers"):
+            if ctx_idx[0] not in self.sched.live_devices():
+                # cluster fail_context no-ops on a dead device; don't
+                # count a fault that never happened (mirrors
+                # _handle_fail_device)
+                self._log(f"fault ctx{ctx_idx} (device already dead)")
+                return
+            if ctx_idx not in self.sched.queues:
+                # a planned fault can name a context the elastic
+                # machinery never minted (scale_out picks the
+                # least-loaded device) — compose gracefully, like
+                # faults on absent devices
+                self._log(f"fault ctx{ctx_idx} skipped (no such context)")
+                return
+        esc = getattr(self.sched, "fault_escalates_to", None)
+        dev = esc(ctx_idx) if esc is not None else None
+        if dev is not None and self.sched.live_devices() == [dev]:
+            # last-context fault escalating on the fleet's sole survivor
+            # — skip rather than abort, like _handle_fail_device
+            self._log(f"fault ctx{ctx_idx} skipped (would fail last "
+                      f"live device)")
+            return
+        for key in self.sched.fault_cancel_keys(ctx_idx):
+            self.backend.cancel_ctx(key)
         self.sched.fail_context(ctx_idx, now)
         self.metrics.faults += 1
         self._log(f"fault ctx{ctx_idx}")
+
+    def _handle_fail_device(self, dev: int) -> None:
+        """Whole-GPU failure (cluster servers): cancel every in-flight
+        stage on the device, then let the cluster scheduler re-place its
+        tasks HP-first onto the survivors (cross-GPU migration). A
+        device the elastic machinery already retired/failed is a no-op —
+        fault plans legitimately compose with autoscalers that may have
+        shrunk that device away first."""
+        now = self.backend.now_ms()
+        live = self.sched.live_devices()
+        if dev not in live:
+            self._log(f"fault device{dev} (already dead)")
+            return
+        if live == [dev]:
+            # an autoscaler/reconfigure shrink can leave the planned
+            # victim as the sole survivor; losing it means no fleet at
+            # all — skip the fault rather than abort the run
+            self._log(f"fault device{dev} skipped (last live device)")
+            return
+        for key in self.sched.device_ctx_keys(dev):
+            self.backend.cancel_ctx(key)
+        self.sched.fail_device(dev, now)
+        self.metrics.faults += 1
+        self._log(f"fault device{dev}")
 
     def _handle_reconfigure(self, now: float, kwargs: Dict) -> None:
         info = self.sched.reconfigure(now, **kwargs)
@@ -297,12 +379,18 @@ class EngineCore:
                      + self.sched.util_lp_active(c.index, now))
                     / max(c.n_streams, 1) for c in live]
             mean_used = sum(used) / n_live
-            if mean_used > pol.high and n_live < pol.max_contexts:
+            # the scale unit is scheduler-defined: contexts on one
+            # device, whole GPUs under the cluster layer — min/max
+            # bounds are counted in that same unit
+            n_units = self.sched.scale_units()
+            if mean_used > pol.high and n_units < pol.max_contexts:
                 self._log(f"autoscale grow (used={mean_used:.2f})")
-                self._handle_reconfigure(now, {"n_contexts": n_live + 1})
-            elif mean_used < pol.low and n_live > pol.min_contexts:
+                self._handle_reconfigure(
+                    now, self.sched.scale_kwargs(n_units + 1))
+            elif mean_used < pol.low and n_units > pol.min_contexts:
                 self._log(f"autoscale shrink (used={mean_used:.2f})")
-                self._handle_reconfigure(now, {"n_contexts": n_live - 1})
+                self._handle_reconfigure(
+                    now, self.sched.scale_kwargs(n_units - 1))
         nxt = now + pol.check_every_ms
         if nxt <= self.horizon:
             self._push(nxt, AUTOSCALE, None)
@@ -320,6 +408,19 @@ class EngineCore:
         p = done.task.priority
         self.metrics.completed[p] += 1
         self.metrics.completed_inputs[p] += done.n_inputs
+        if self._dev_stats is not None:
+            # attribute to the job's HOME device (job.ctx), matching the
+            # horizon sweep — the only base available for unfinished
+            # jobs. After a zero-delay re-home the final stage may have
+            # executed on the old device's lane; the completion still
+            # credits the device now responsible for the job.
+            dev = done.ctx[0]
+            ds = self._dev_stats.setdefault(
+                dev, {"completed": {HP: 0, LP: 0},
+                      "missed": {HP: 0, LP: 0}})
+            ds["completed"][p] += 1
+            if now > done.abs_deadline_ms:
+                ds["missed"][p] += 1
         b = done.n_inputs
         self.metrics.batch_hist[b] = self.metrics.batch_hist.get(b, 0) + 1
         # each batched input gets its own response time, measured from its
@@ -370,8 +471,9 @@ class EngineCore:
     # ------------------------------------------------------------ snapshot
     def snapshot(self) -> dict:
         """Introspection for programmatic clients (live or post-run)."""
-        return {
-            "now_ms": self.backend.now_ms() if self._ran else 0.0,
+        now = self.backend.now_ms() if self._ran else 0.0
+        snap = {
+            "now_ms": now,
             "backend": type(self.backend).__name__,
             "contexts": [{"index": c.index, "alive": c.alive,
                           "cap": c.cap, "n_streams": c.n_streams}
@@ -389,4 +491,18 @@ class EngineCore:
             "migrations": self.sched.migrations,
             "reconfigures": self.metrics.reconfigures,
             "skipped_releases": self.metrics.skipped_releases,
+            # per-priority response-time percentiles over completions so
+            # far (live monitoring reads tail latency without waiting for
+            # the run summary)
+            "resp_hp": self.metrics.resp_stats(HP),
+            "resp_lp": self.metrics.resp_stats(LP),
         }
+        summary = getattr(self.sched, "device_summary", None)
+        if summary is not None:
+            snap["devices"] = summary(now)
+            snap["transfers"] = self.sched.transfers
+            if self._dev_stats is not None:
+                snap["device_completed"] = {
+                    d: dict(s["completed"])
+                    for d, s in sorted(self._dev_stats.items())}
+        return snap

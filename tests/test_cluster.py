@@ -1,0 +1,699 @@
+"""Cluster layer (repro/cluster): global admission, cross-GPU zero-delay
+migration, heterogeneous devices, whole-GPU elasticity.
+
+The anchor test is single-GPU equivalence: a 1-GPU cluster must
+reproduce the plain single-device server BIT-identically (same RNG draw
+order, same placement, same admission floats) — the cluster layer is a
+pure generalization, not a new scheduler.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.api import ServerConfig, TraceArrival
+from repro.cluster import DEVICE_PRESETS, ClusterScheduler, resolve_device
+from repro.core.batching import BatchPolicy
+from repro.core.scheduler import SchedulerConfig
+from repro.core.task import HP, LP, StageProfile, TaskSpec
+from repro.runtime.contention import DeviceModel
+from repro.serving.profiles import device
+from repro.serving.requests import table2_taskset
+
+
+def _spec(name, period=40.0, priority=LP, t_alone=2.0):
+    return TaskSpec(name=name, period_ms=period, priority=priority,
+                    stages=[StageProfile(name=f"{name}/s0",
+                                         t_alone_ms=t_alone,
+                                         n_sat=20.0, mem_frac=0.3),
+                            StageProfile(name=f"{name}/s1",
+                                         t_alone_ms=t_alone,
+                                         n_sat=20.0, mem_frac=0.3)])
+
+
+def _cluster_cfg(n_gpus, specs, horizon=800.0, nc=4, os_=4.0, **kw):
+    return (ServerConfig.cluster(n_gpus, **kw)
+            .tasks(specs)
+            .contexts(nc).streams(1).oversubscribe(os_)
+            .device(device())
+            .horizon_ms(horizon).seed(0))
+
+
+class TestSingleGpuEquivalence:
+    def test_one_gpu_cluster_is_bit_identical_to_single(self):
+        specs = table2_taskset("resnet18")
+        single = (ServerConfig.sim().tasks(specs)
+                  .contexts(6).streams(1).oversubscribe(6.0)
+                  .device(device()).horizon_ms(600.0).seed(0).build())
+        clustered = _cluster_cfg(1, specs, horizon=600.0,
+                                 nc=6, os_=6.0).build()
+        m1, mc = single.run(), clustered.run()
+        assert m1.completed == mc.completed
+        assert m1.missed == mc.missed
+        assert m1.rejected == mc.rejected
+        assert m1.migrations == mc.migrations
+        # bit-exact: every response time, in completion order
+        assert m1.response_ms == mc.response_ms
+
+    def test_one_gpu_cluster_placement_matches_single(self):
+        specs = table2_taskset("unet")
+        cfg = SchedulerConfig(n_contexts=4, n_streams=1,
+                              oversubscription=4.0)
+        from repro.core.scheduler import DarisScheduler
+        single = DarisScheduler(list(specs), cfg)
+        cluster = ClusterScheduler(list(specs),
+                                   SchedulerConfig(n_contexts=4, n_streams=1,
+                                                   oversubscription=4.0),
+                                   n_gpus=1)
+        for ts, tc in zip(single.tasks, cluster.tasks):
+            assert ts.name == tc.name
+            assert tc.ctx == (0, ts.ctx)          # namespaced, same slot
+            assert ts.fixed_ctx == tc.fixed_ctx
+
+
+class TestConstruction:
+    def test_workers_share_one_namespace(self):
+        sched = ClusterScheduler([_spec("a"), _spec("b")],
+                                 SchedulerConfig(n_contexts=2), n_gpus=3)
+        for w in sched.workers.values():
+            assert w.lanes is sched.lanes
+            assert w.queues is sched.queues
+            assert w.active_jobs is sched.active_jobs
+        # 3 devices x 2 contexts x 1 stream
+        assert len(sched.lanes) == 6
+        assert {k[0][0] for k in sched.lanes} == {0, 1, 2}
+
+    def test_hp_first_placement_spreads_devices(self):
+        specs = table2_taskset("resnet18")
+        sched = ClusterScheduler(list(specs),
+                                 SchedulerConfig(n_contexts=4,
+                                                 oversubscription=4.0),
+                                 n_gpus=4)
+        hp_per_dev = {d: sum(1 for t in w.tasks if t.priority == HP)
+                      for d, w in sched.workers.items()}
+        # 17 HP tasks over 4 devices: no device gets more than ceil+1
+        assert max(hp_per_dev.values()) - min(hp_per_dev.values()) <= 1
+        for t in sched.tasks:
+            if t.priority == HP:
+                assert t.fixed_ctx
+
+    def test_heterogeneous_placement_prefers_fast_devices(self):
+        specs = table2_taskset("resnet18")
+        sched = ClusterScheduler(
+            list(specs), SchedulerConfig(n_contexts=4, oversubscription=4.0),
+            n_gpus=4, device_models=["a100", "v100", "rtx2080ti", "l4"])
+        n = {d: len(w.tasks) for d, w in sched.workers.items()}
+        # task counts must be ordered by speed factor (2.1 > 1.3 > 1.0 > 0.8)
+        assert n[0] > n[1] > n[2] >= n[3]
+
+    def test_device_presets_resolve(self):
+        assert resolve_device("a100").speed == pytest.approx(2.1)
+        # the speed=1.0 preset IS the calibration device: same issue-gap
+        # waste as every other figure's reference
+        assert resolve_device("rtx2080ti").bubble == device().bubble
+        dm = DeviceModel(n_units=10.0, name="custom", speed=3.0)
+        assert resolve_device(dm) is dm
+        with pytest.raises(ValueError, match="unknown device preset"):
+            resolve_device("h100000")
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="n_gpus"):
+            ServerConfig.cluster(0).task(_spec("a")).build()
+        with pytest.raises(ValueError, match="transfer_ms"):
+            ServerConfig.cluster(2, transfer_ms=-1.0).task(_spec("a")).build()
+        with pytest.raises(ValueError, match="fail_device_at"):
+            (ServerConfig.sim().task(_spec("a"))
+             .fail_device_at(0, 10.0).build())
+        with pytest.raises(ValueError, match="n_gpus"):
+            (ServerConfig.sim().task(_spec("a"))
+             .reconfigure_at(10.0, n_gpus=2).build())
+        # cluster context keys are (device, k) tuples: a bare int key
+        # must be rejected at build time, not explode mid-run
+        with pytest.raises(ValueError, match=r"\(device, context\) tuple"):
+            (ServerConfig.cluster(2).task(_spec("a"))
+             .fail_context_at(0, 10.0).build())
+        with pytest.raises(ValueError, match="out of range"):
+            (ServerConfig.cluster(2).task(_spec("a"))
+             .fail_context_at((5, 0), 10.0).build())
+        # context index past the build-time shape with no reshape planned
+        with pytest.raises(ValueError, match="context 9 out of range"):
+            (ServerConfig.cluster(2).task(_spec("a"))
+             .fail_context_at((0, 9), 10.0).build())
+        # losing a 1-GPU cluster's only device is certain death — reject
+        # at build unless the fleet can grow first
+        with pytest.raises(ValueError, match="1-GPU cluster"):
+            (ServerConfig.cluster(1).task(_spec("a"))
+             .fail_device_at(0, 10.0).build())
+        (ServerConfig.cluster(1).task(_spec("a"))
+         .reconfigure_at(5.0, n_gpus=2).fail_device_at(0, 10.0).build())
+        # same certain death via last-context escalation
+        with pytest.raises(ValueError, match="1-context cluster"):
+            (ServerConfig.cluster(1).task(_spec("a")).contexts(1)
+             .fail_context_at((0, 0), 10.0).build())
+        (ServerConfig.cluster(1).task(_spec("a")).contexts(1)
+         .reconfigure_at(5.0, n_gpus=2).fail_context_at((0, 0), 10.0)
+         .build())
+        # grow-then-kill-a-grown-GPU is a legitimate chaos plan: ids
+        # past the build-time size are valid once the fleet can grow
+        (ServerConfig.cluster(4).task(_spec("a"))
+         .reconfigure_at(100.0, n_gpus=6).fail_device_at(5, 200.0)
+         .build())
+        # ...but a lone SHRINK can't mint new ids: keep the range check
+        with pytest.raises(ValueError, match="out of range"):
+            (ServerConfig.cluster(4).task(_spec("a"))
+             .reconfigure_at(100.0, n_gpus=2).fail_device_at(9, 200.0)
+             .build())
+        # shrink-then-regrow mints fresh ids again
+        (ServerConfig.cluster(4).task(_spec("a"))
+         .reconfigure_at(100.0, n_gpus=2).reconfigure_at(200.0, n_gpus=4)
+         .fail_device_at(5, 300.0).build())
+        # a monotone shrink plan never mints ids: range check stays on
+        with pytest.raises(ValueError, match="out of range"):
+            (ServerConfig.cluster(4).task(_spec("a"))
+             .reconfigure_at(300.0, n_gpus=3).reconfigure_at(600.0, n_gpus=2)
+             .fail_device_at(9, 800.0).build())
+        # scale_out_at (ADD_CTX) also mints context indices past the
+        # build-time shape
+        (ServerConfig.cluster(2).task(_spec("a")).contexts(2)
+         .scale_out_at(100.0).fail_context_at((0, 2), 500.0).build())
+
+    def test_fail_context_tuple_key_works_on_cluster(self):
+        specs = table2_taskset("resnet18", load_scale=0.4)
+        srv = (_cluster_cfg(2, specs, horizon=600.0, nc=2, os_=2.0)
+               .fail_context_at((0, 0), 200.0).build())
+        m = srv.run()
+        assert m.faults == 1
+        assert m.missed[HP] == 0
+        assert not srv.scheduler.contexts[(0, 0)].alive
+
+
+class TestFailureAndMigration:
+    def test_fail_device_replaces_all_tasks_hp_first(self):
+        specs = table2_taskset("resnet18", load_scale=0.5)
+        srv = (_cluster_cfg(4, specs, horizon=1200.0)
+               .fail_device_at(1, 400.0).build())
+        moved = len(srv.scheduler.workers[1].tasks)  # before run: placed
+        assert moved > 0
+        m = srv.run()
+        assert m.faults == 1
+        assert m.missed[HP] == 0
+        # every task homed on device 1 migrated to a survivor
+        assert len(srv.scheduler.workers[1].tasks) == 0
+        assert m.migrations > 0
+        assert 1 not in srv.scheduler.live_devices()
+        for t in srv.scheduler.tasks:
+            assert t.ctx[0] != 1
+
+    def test_fail_device_completions_continue_on_survivors(self):
+        specs = table2_taskset("resnet18", load_scale=0.5)
+        srv = (_cluster_cfg(4, specs, horizon=1200.0)
+               .fail_device_at(0, 300.0).build())
+        m = srv.run()
+        dead = m.per_device[0]["completed"]
+        live = {d: s["completed"] for d, s in m.per_device.items() if d != 0}
+        # the dead device stopped early; survivors absorbed its share
+        assert all(sum(c.values()) > sum(dead.values())
+                   for c in live.values())
+
+    def test_all_devices_failed_raises(self):
+        sched = ClusterScheduler([_spec("a")], SchedulerConfig(n_contexts=1),
+                                 n_gpus=1)
+        # rejected BEFORE any mutation: the fleet is left untouched
+        with pytest.raises(RuntimeError, match="last live device"):
+            sched.fail_device(0, 0.0)
+        assert sched.live_devices() == [0]
+
+    def test_fail_context_escalates_on_last_context(self):
+        sched = ClusterScheduler([_spec("a")], SchedulerConfig(n_contexts=1),
+                                 n_gpus=2)
+        sched.fail_context((0, 0), now=0.0)   # device 0's only context
+        assert 0 not in sched.live_devices()
+        assert all(t.ctx[0] == 1 for t in sched.tasks)
+
+    def test_cross_device_admission_fallback(self):
+        # one tiny device drowning in LP load + one idle device: releases
+        # the home device cannot admit must migrate across, not reject
+        specs = [_spec(f"lp{i}", period=6.0, t_alone=2.5) for i in range(8)]
+        srv = _cluster_cfg(2, specs, horizon=400.0, nc=1,
+                           os_=1.0).build()
+        m = srv.run()
+        sched = srv.scheduler
+        assert m.migrations > 0
+        devs = {t.ctx[0] for t in sched.tasks}
+        assert devs == {0, 1}
+
+    def test_transfer_cost_charged_on_cross_device_dispatch(self):
+        sched = ClusterScheduler([_spec("a")], SchedulerConfig(n_contexts=1),
+                                 n_gpus=2, transfer_ms=3.0)
+        task = sched.tasks[0]
+        job = sched.on_release(task, 0.0)
+        assert job is not None
+        home = task.ctx
+        inst = sched.next_for_lane(home, 0.0)
+        assert inst is not None and inst.transfer_ms == 0.0   # stage 0: local
+        # state location commits at COMPLETION, not dispatch
+        assert job.job_id not in sched._state_dev
+        inst.lane = (home, 0)
+        done = sched.on_stage_finish(inst, 1.0, 1.0)   # 2-stage spec
+        assert done is None
+        assert sched._state_dev[job.job_id] == home[0]
+        # re-home the queued stage-1 instance to the other device
+        other = next(c.index for c in sched.live_contexts()
+                     if c.index[0] != home[0])
+        inst2 = sched.queues[home].pop()
+        job.ctx = other
+        sched.queues[other].push(inst2)
+        inst3 = sched.next_for_lane(other, 2.0)
+        assert inst3 is inst2
+        assert inst3.transfer_ms == 3.0
+        assert sched.transfers == 1
+        # a killed/cancelled transfer stage never moved the state: its
+        # replay pays the charge again
+        sched.queues[other].push(inst3)
+        inst4 = sched.next_for_lane(other, 3.0)
+        assert inst4 is inst3 and inst4.transfer_ms == 3.0
+        assert sched.transfers == 2
+        assert sched._state_dev[job.job_id] == home[0]   # still not moved
+
+    def test_migration_eta_charges_transfer_only_with_remote_state(self):
+        # the surcharge must mirror next_for_lane's rule exactly: pay
+        # when the job holds inter-stage state on another device, never
+        # for a fresh release (stage 0 materializes where it first runs)
+        sched = ClusterScheduler([_spec("a")], SchedulerConfig(n_contexts=2),
+                                 n_gpus=2, transfer_ms=5.0)
+        src = (0, 0)
+        base = sched.workers[1].predicted_finish((1, 0), 0.0)
+        assert sched.migration_eta((1, 0), 0.0, src) == pytest.approx(base)
+        task = sched.tasks[0]
+        job = sched.on_release(task, 0.0)
+        assert sched.migration_eta((1, 0), 0.0, src,
+                                   job) == pytest.approx(base)
+        sched._state_dev[job.job_id] = 0       # a stage completed on dev 0
+        assert sched.migration_eta((1, 0), 0.0, src,
+                                   job) == pytest.approx(base + 5.0)
+        # the device already holding the state charges nothing
+        home = sched.workers[0].predicted_finish((0, 1), 0.0)
+        assert sched.migration_eta((0, 1), 0.0, src,
+                                   job) == pytest.approx(home)
+
+    def test_predicted_finish_uses_device_units_for_busy_lanes(self):
+        # work_done accrues in device-local wall ms (SimBackend.launch
+        # divides work by speed), so the remaining-work estimate must
+        # put MRET in device units BEFORE subtracting — dividing the
+        # difference afterwards makes fast devices look backed up
+        fast = DeviceModel(speed=2.0, name="fast")
+        sched = ClusterScheduler([_spec("a", period=40.0)],
+                                 SchedulerConfig(n_contexts=1),
+                                 n_gpus=1, device_models=[fast])
+        task = sched.tasks[0]
+        assert sched.on_release(task, 0.0) is not None
+        k = task.ctx
+        inst = sched.next_for_lane(k, 0.0)
+        lane = (k, 0)
+        inst.lane = lane
+        sched.lanes[lane] = inst
+        w = sched.workers[0]
+        mret_dev = inst.smret.value() * inst.cost_b / fast.speed
+        inst.work_done = 0.8 * mret_dev          # 80% done, device units
+        ns = max(w.contexts[k].n_streams, 1)
+        assert w.predicted_finish(k, 0.0) == pytest.approx(
+            0.2 * mret_dev / ns)
+
+    def test_retired_key_fault_does_not_escalate(self):
+        # a fault aimed at an already-retired (draining) context must
+        # not take the device's healthy survivor down with it
+        sched = ClusterScheduler([_spec("a")], SchedulerConfig(n_contexts=2),
+                                 n_gpus=2)
+        sched.reconfigure(0.0, n_contexts=1)   # retires (d,0),(d,1) -> (d,2)
+        assert sched.fault_cancel_keys((0, 0)) == [(0, 0)]
+        sched.fail_context((0, 0), now=1.0)    # retired key
+        assert 0 in sched.live_devices()
+        assert sched.workers[0].contexts[(0, 2)].alive
+        # the actual last LIVE context still escalates
+        assert set(sched.fault_cancel_keys((0, 2))) == {(0, 0), (0, 1),
+                                                        (0, 2)}
+        sched.fail_context((0, 2), now=2.0)
+        assert 0 not in sched.live_devices()
+
+    def test_planned_fault_on_unminted_context_is_skipped(self):
+        # scale_out picks the least-loaded device, so a planned context
+        # fault can name a key that never materialized — skip, don't
+        # abort (direct scheduler calls still get the ValueError)
+        specs = table2_taskset("resnet18", load_scale=0.4)
+        srv = (_cluster_cfg(2, specs, horizon=500.0, nc=2, os_=2.0)
+               .scale_out_at(100.0).fail_context_at((0, 5), 300.0)
+               .build())
+        m = srv.run()
+        assert m.faults == 0
+        assert sum(m.completed.values()) > 0
+
+    def test_ctx_fault_on_dead_device_not_counted(self):
+        # a planned context fault landing after its device was shrunk
+        # away is a no-op and must not count into metrics.faults
+        specs = table2_taskset("resnet18", load_scale=0.4)
+        srv = (_cluster_cfg(2, specs, horizon=500.0, nc=2, os_=2.0)
+               .reconfigure_at(150.0, n_gpus=1)    # retires device 1
+               .fail_context_at((1, 0), 300.0)
+               .build())
+        m = srv.run()
+        assert m.faults == 0
+        assert sum(m.completed.values()) > 0
+
+    def test_escalating_ctx_fault_on_last_survivor_is_skipped(self):
+        # a context fault whose escalation would kill the fleet's sole
+        # survivor must skip like FAIL_DEV does, not abort the run
+        specs = table2_taskset("resnet18", load_scale=0.4)
+        srv = (_cluster_cfg(1, specs, horizon=500.0, nc=1, os_=1.0)
+               .fail_context_at((0, 0), 200.0)
+               .reconfigure_at(400.0, n_contexts=2)   # makes build legal
+               .build())
+        m = srv.run()
+        assert m.faults == 0
+        assert srv.scheduler.live_devices() == [0]
+        assert sum(m.completed.values()) > 0
+
+    def test_planned_fault_on_last_survivor_is_skipped(self):
+        # a whole-GPU shrink can leave the planned victim as the sole
+        # survivor; the fault must skip, not abort the run
+        specs = table2_taskset("resnet18", load_scale=0.4)
+        srv = (_cluster_cfg(2, specs, horizon=500.0, nc=2, os_=2.0)
+               .reconfigure_at(150.0, n_gpus=1)    # retires device 1
+               .fail_device_at(0, 300.0)
+               .build())
+        m = srv.run()
+        assert m.faults == 0                       # skipped, not fired
+        assert srv.scheduler.live_devices() == [0]
+        assert sum(m.completed.values()) > 0
+
+    def test_fail_unknown_context_key_raises_cleanly(self):
+        # reconfigure mints fresh context indices, so bad keys can only
+        # be caught mid-run — but with a diagnosable error
+        sched = ClusterScheduler([_spec("a")], SchedulerConfig(n_contexts=2),
+                                 n_gpus=2)
+        with pytest.raises(ValueError, match="unknown context key"):
+            sched.fail_context((0, 99), now=0.0)
+
+    def test_fault_cancel_keys_escalation_covers_whole_device(self):
+        sched = ClusterScheduler([_spec("a")], SchedulerConfig(n_contexts=2),
+                                 n_gpus=2)
+        assert sched.fault_cancel_keys((0, 0)) == [(0, 0)]
+        sched.fail_context((0, 0), now=0.0)
+        # last live context: the escalated whole-device failure requeues
+        # in-flight stages from EVERY context of the device, so the
+        # engine must cancel all of their backend lanes
+        assert set(sched.fault_cancel_keys((0, 1))) == {(0, 0), (0, 1)}
+        sched.fail_context((0, 1), now=0.0)
+        assert sched.fault_cancel_keys((0, 1)) == [(0, 1)]   # dead: no-op
+
+    def test_escalated_fault_after_shape_shrink_no_ghost_completions(self):
+        # shape reconfigure leaves stages draining on retired contexts;
+        # a later fault on the device's last live context escalates to
+        # fail_device, which requeues those draining stages — their
+        # backend entries must die too, or a ghost completion
+        # double-executes the replayed stage
+        specs = [_spec(f"lp{i}", period=120.0, t_alone=25.0)
+                 for i in range(4)]
+        srv = (_cluster_cfg(2, specs, horizon=600.0, nc=2, os_=2.0)
+               .reconfigure_at(150.0, n_contexts=1)
+               .fail_context_at((0, 2), 152.0)   # retired lanes still busy
+               .build())
+        m = srv.run()
+        assert 0 not in srv.scheduler.live_devices()
+        assert sum(m.completed.values()) > 0
+        # each completed job contributed exactly one response sample
+        assert sum(m.completed.values()) == sum(
+            len(v) for v in m.response_ms.values())
+
+
+class TestElasticity:
+    def test_reconfigure_grows_by_whole_gpus(self):
+        specs = table2_taskset("resnet18", load_scale=0.5)
+        srv = (_cluster_cfg(2, specs, horizon=1000.0)
+               .reconfigure_at(300.0, n_gpus=4).build())
+        m = srv.run()
+        assert m.reconfigures == 1
+        assert len(srv.scheduler.live_devices()) == 4
+        assert m.missed[HP] == 0
+        # the new devices actually absorbed load
+        late = {d for d, s in m.per_device.items() if d >= 2}
+        assert late and all(
+            sum(m.per_device[d]["completed"].values()) > 0 for d in late)
+
+    def test_reconfigure_shrinks_gracefully(self):
+        specs = table2_taskset("resnet18", load_scale=0.4)
+        srv = (_cluster_cfg(4, specs, horizon=1000.0)
+               .reconfigure_at(300.0, n_gpus=2).build())
+        m = srv.run()
+        assert len(srv.scheduler.live_devices()) == 2
+        assert m.missed[HP] == 0
+        for t in srv.scheduler.tasks:
+            assert t.ctx[0] in (0, 1)
+
+    def test_autoscale_scales_whole_gpus(self):
+        specs = table2_taskset("resnet18")     # full overload on one GPU
+        srv = (_cluster_cfg(1, specs, horizon=1500.0)
+               .autoscale(0.2, 0.6, check_every_ms=200.0, min_contexts=1,
+                          max_contexts=4, cooldown_ms=300.0).build())
+        m = srv.run()
+        assert m.reconfigures > 0
+        # the fleet grew by whole GPUs at some point (workers registry
+        # keeps every device ever created; the autoscaler may well have
+        # shrunk back down by the end of the run)
+        assert len(srv.scheduler.workers) > 1
+
+    def test_shape_reconfigure_survives_cross_device_active_job(self):
+        # a sticky cross-GPU migration can leave a job registered on its
+        # OLD device while the task points at the new one; a per-device
+        # reshape must re-home it without a foreign-key KeyError
+        sched = ClusterScheduler([_spec("a"), _spec("b")],
+                                 SchedulerConfig(n_contexts=2), n_gpus=2)
+        task = sched.tasks[0]
+        job = sched.on_release(task, 0.0)
+        other = next(c.index for c in sched.live_contexts()
+                     if c.index[0] != task.ctx[0])
+        sched._move_task(task, other)       # job stays at the old home
+        info = sched.reconfigure(100.0, n_contexts=3)   # must not raise
+        assert job.ctx == task.ctx
+        assert job in sched.active_jobs[job.ctx]
+        assert info["rehomed"] >= 0
+
+    def test_per_device_shape_reconfigure_applies_to_each_worker(self):
+        specs = table2_taskset("resnet18", load_scale=0.4)
+        srv = (_cluster_cfg(2, specs, horizon=800.0)
+               .reconfigure_at(300.0, n_contexts=6,
+                               oversubscription=6.0).build())
+        m = srv.run()
+        assert m.missed[HP] == 0
+        for d in srv.scheduler.live_devices():
+            w = srv.scheduler.workers[d]
+            assert len(w.live_contexts()) == 6
+
+
+class TestIntrospection:
+    def test_snapshot_has_devices_and_percentiles(self):
+        specs = table2_taskset("resnet18", load_scale=0.5)
+        srv = _cluster_cfg(2, specs, horizon=500.0).build()
+        # the cluster block is complete even before the first completion
+        pre = srv.snapshot()
+        assert "devices" in pre and "transfers" in pre
+        assert pre["device_completed"] == {}
+        srv.run()
+        snap = srv.snapshot()
+        assert set(snap["devices"]) == {0, 1}
+        for d, s in snap["devices"].items():
+            assert s["alive"] and s["live_contexts"] == 4
+        for key in ("resp_hp", "resp_lp"):
+            assert {"p50", "p95", "p99"} <= set(snap[key])
+        assert snap["resp_hp"]["p99"] >= snap["resp_hp"]["p50"] > 0.0
+        assert "device_completed" in snap
+
+    def test_summary_has_per_device_and_flat_percentiles(self):
+        specs = table2_taskset("resnet18", load_scale=0.5)
+        m = _cluster_cfg(2, specs, horizon=500.0).build().run()
+        s = m.summary()
+        assert set(s["per_device"]) == {"0", "1"}
+        assert s["resp_hp_p99"] == s["resp_hp"]["p99"]
+        assert s["resp_lp_p95"] == s["resp_lp"]["p95"]
+
+    def test_submit_lands_on_least_loaded_device(self):
+        srv = _cluster_cfg(2, [_spec("seed", period=100.0)],
+                           horizon=300.0).build()
+        handles = [srv.submit(_spec(f"one{i}", period=100.0), at_ms=10.0)
+                   for i in range(4)]
+        srv.drain()
+        assert all(h.status == h.COMPLETED for h in handles)
+        devs = {h.task.ctx[0] for h in handles}
+        assert devs == {0, 1}      # submissions alternated across devices
+
+    def test_summary_carries_per_device_when_nothing_completes(self):
+        # zero completions must not drop the cluster summary keys:
+        # consumers read summary()["transfers"] unconditionally
+        srv = (ServerConfig.cluster(2)
+               .task(_spec("idle"), arrival=TraceArrival([]))
+               .contexts(2).streams(1).oversubscribe(2.0)
+               .device(device()).horizon_ms(50.0).seed(0).build())
+        s = srv.run().summary()
+        assert set(s["per_device"]) == {"0", "1"}
+        assert s["transfers"] == 0
+
+    def test_cluster_checkpoint_unsupported(self):
+        srv = _cluster_cfg(2, [_spec("a")], horizon=100.0).build()
+        with pytest.raises(NotImplementedError, match="cluster"):
+            srv.save_state("/tmp/should-not-exist.ckpt")
+        with pytest.raises(NotImplementedError, match="cluster"):
+            srv.load_state("/tmp/does-not-matter.ckpt")
+
+
+class TestClusterBatching:
+    def test_release_joins_home_batch_before_cross_gpu_fallback(self):
+        # a release that joins an open batch head charges only the
+        # incremental Eq. 12 utilization, so it can coalesce at home
+        # even when full-task admission fails there AND another device
+        # would admit — the head must win over a cross-GPU migration
+        pol = BatchPolicy(max_batch=8, scope="task")
+        cfg = SchedulerConfig(n_contexts=1, n_streams=1,
+                              oversubscription=1.0, batch_policy=pol)
+        spec = TaskSpec(
+            name="lp", period_ms=9.6, priority=LP,
+            stages=[StageProfile(name="lp/s0", t_alone_ms=2.4, n_sat=20.0,
+                                 mem_frac=0.3, batch_gain=3.0),
+                    StageProfile(name="lp/s1", t_alone_ms=2.4, n_sat=20.0,
+                                 mem_frac=0.3, batch_gain=3.0)])
+        sched = ClusterScheduler([spec], cfg, n_gpus=2)
+        task = sched.tasks[0]
+        home = task.ctx
+        j1 = sched.on_release(task, 0.0)
+        assert j1 is not None
+        # sanity: the second full job fails home admission but the idle
+        # device would take it — exactly the migrate-vs-coalesce race
+        assert not sched.workers[home[0]].admits(home, task, 0.5)
+        other = next(d for d in sched.live_devices() if d != home[0])
+        assert any(sched.workers[other].admits(c.index, task, 0.5)
+                   for c in sched.workers[other].live_contexts())
+        j2 = sched.on_release(task, 0.5)
+        assert j2 is j1 and j1.n_inputs == 2
+        assert task.ctx == home
+        assert sched.migrations == 0
+
+
+class TestStragglerTransferCredit:
+    def test_transfer_charge_credited_at_contention_rate(self):
+        # the transfer charge sits inside the entry's remaining work, so
+        # the straggler projection burns it at the contention rate; the
+        # kill threshold must credit it the same way or a contended
+        # transfer-charged stage dies purely from transfer serialization
+        from repro.runtime.backend import (SimBackend, _COST, _FLOOR,
+                                           _RATE, _REM, _SMRET)
+        from repro.runtime.engine_core import EngineCore
+        xfer = 50.0
+        specs = [_spec("mover", period=400.0, t_alone=10.0),
+                 _spec("bystander", period=4000.0, t_alone=100.0)]
+        cfg = SchedulerConfig(n_contexts=2, n_streams=1,
+                              oversubscription=1.0, straggler_kappa=3.0)
+        narrow = DeviceModel(n_units=4.0, bubble=0.0, l2_pressure=0.0)
+        sched = ClusterScheduler(specs, cfg, narrow, n_gpus=1)
+        backend = SimBackend(noise_sigma=0.0)
+        core = EngineCore(sched, backend, horizon_ms=10_000.0)
+        backend.bind(core)
+        backend.start()
+        lanes = {}
+        for task in sched.tasks:
+            job = sched.on_release(task, 0.0)
+            inst = sched.next_for_lane(job.ctx, 0.0)
+            if task.spec.name == "mover":
+                inst.transfer_ms = xfer     # as the dispatcher would stamp
+            lane = (job.ctx, 0)
+            inst.start_ms = 0.0
+            inst.lane = lane
+            sched.lanes[lane] = inst
+            backend.launch(lane, inst)
+            lanes[task.spec.name] = lane
+        backend.running_set_changed()       # set rates + predictions
+        entry = backend.running[lanes["mover"]]
+        rate, rem = entry[_RATE], entry[_REM]
+        assert rate < 1.0                   # two lanes contend
+        base = max(3.0 * entry[_SMRET].value() * entry[_COST],
+                   entry[_FLOOR])
+        # projected completion between the raw-xfer and rate-scaled
+        # thresholds: legitimate transfer serialization, must survive
+        backend.now = base + (xfer + xfer / rate) / 2 - rem / rate
+        backend._check_stragglers()
+        assert core.metrics.stragglers == 0
+        assert lanes["mover"] in backend.running
+        # truly late — past the rate-scaled threshold — still dies (the
+        # kill re-enqueues and _dispatch may relaunch it immediately, so
+        # the counter is the signal, not lane membership)
+        backend.now = base + xfer / rate - rem / rate + 1.0
+        backend._check_stragglers()
+        assert core.metrics.stragglers == 1
+
+
+class TestCrossDeviceMretHygiene:
+    def test_stale_head_from_other_device_is_sealed(self):
+        # a cluster re-place can move a batch head's job to another
+        # device; the old home's coalescer must seal it on the next
+        # probe (its context table has no such key), not KeyError
+        pol = BatchPolicy(max_batch=8, scope="task")
+        cfg = SchedulerConfig(n_contexts=2, batch_policy=pol)
+        sched = ClusterScheduler([_spec("lp", period=40.0)], cfg, n_gpus=2)
+        task = sched.tasks[0]
+        j1 = sched.on_release(task, 0.0)
+        assert j1 is not None
+        foreign = next(c.index for c in sched.workers[1].live_contexts()
+                       if c.index[0] != task.ctx[0])
+        j1.ctx = foreign                 # as _global_replace would set
+        w = sched.workers[task.ctx[0]]
+        assert w._try_coalesce(task, 0.5) is None
+        assert w._coalescer.head(task) is None     # sealed
+
+    def test_transfer_wall_share_removed_from_mret(self):
+        # the backend burns the folded-in transfer charge at the
+        # contention rate, so its wall share is its fraction of the
+        # executed work — subtracting the raw charge leaks the residual
+        # into the MRET window after every cross-GPU move
+        sched = ClusterScheduler([_spec("a", period=400.0, t_alone=10.0)],
+                                 SchedulerConfig(n_contexts=1),
+                                 n_gpus=1, transfer_ms=5.0)
+        task = sched.tasks[0]
+        job = sched.on_release(task, 0.0)
+        inst = sched.next_for_lane(job.ctx, 0.0)
+        inst.transfer_ms = 5.0
+        inst.work_done = 20.0        # total device-local work incl. charge
+        inst.lane = (job.ctx, 0)
+        sched.on_stage_finish(inst, 40.0, 40.0)   # wall = 2x work: rate 0.5
+        # charge's wall share = 40 * 5/20 = 10 -> observe 30, not 35
+        assert task.mret.stage_mret(0) == pytest.approx(30.0)
+
+    def test_coalesce_slack_uses_device_wall_clock(self):
+        # the slack bound predicts stage-0 completion in wall clock, so
+        # reference-speed MRET must be divided by the device speed: a
+        # 2x device can still take a join that reference units reject
+        from repro.runtime.contention import batch_cost
+        pol = BatchPolicy(max_batch=8, scope="task")
+        cfg = SchedulerConfig(n_contexts=1, batch_policy=pol)
+        fast = DeviceModel(speed=2.0, name="fast2x")
+        sched = ClusterScheduler([_spec("lp", period=9.6, t_alone=2.4)],
+                                 cfg, n_gpus=1, device_models=[fast])
+        task = sched.tasks[0]
+        j1 = sched.on_release(task, 0.0)
+        w = sched.workers[0]
+        inst = w._coalescer.head(task)
+        mret0 = task.mret.stage_mret(0)
+        cj = batch_cost(task.spec.stages[0], 2)   # batch_gain 1 -> 2.0
+        vdl = inst.virtual_deadline_ms
+        now = vdl - 0.75 * mret0 * cj
+        # reference units reject the join (and are not late_anyway);
+        # this device finishes in half the time, so it fits
+        assert now + mret0 * cj > vdl
+        assert now + mret0 * batch_cost(task.spec.stages[0], 1) <= vdl
+        assert now + (mret0 / fast.speed) * cj <= vdl
+        j2 = sched.on_release(task, now)
+        assert j2 is j1 and j1.n_inputs == 2
+
+    def test_shape_and_ngpus_reconfigure_must_be_separate(self):
+        sched = ClusterScheduler([_spec("a")], SchedulerConfig(n_contexts=2),
+                                 n_gpus=2)
+        with pytest.raises(ValueError, match="separate reconfigure"):
+            sched.reconfigure(0.0, n_gpus=3, n_contexts=4)
+        with pytest.raises(ValueError, match="separate events"):
+            (ServerConfig.cluster(2).task(_spec("a"))
+             .reconfigure_at(10.0, n_gpus=3, n_contexts=4).build())
