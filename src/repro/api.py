@@ -41,8 +41,8 @@ from .core.batching import BatchPolicy
 from .core.metrics import RunMetrics
 from .core.scheduler import DarisScheduler, SchedulerConfig
 from .core.task import HP, LP, StageProfile, TaskSpec
-from .runtime.arrivals import (ArrivalProcess, PeriodicArrival,
-                               PoissonArrival, TraceArrival)
+from .runtime.arrivals import (ArrivalProcess, ManualArrival,
+                               PeriodicArrival, PoissonArrival, TraceArrival)
 from .runtime.backend import (ExecutionBackend, RealtimeBackend, SimBackend)
 from .runtime.contention import DeviceModel
 from .runtime.engine_core import (AutoscalePolicy, Completion, EngineCore,
@@ -51,7 +51,8 @@ from .runtime.engine_core import (AutoscalePolicy, Completion, EngineCore,
 __all__ = [
     "ServerConfig", "DarisServer", "FaultPlan", "AutoscalePolicy",
     "SubmitHandle",
-    "ArrivalProcess", "PeriodicArrival", "PoissonArrival", "TraceArrival",
+    "ArrivalProcess", "ManualArrival", "PeriodicArrival", "PoissonArrival",
+    "TraceArrival",
     "ExecutionBackend", "SimBackend", "RealtimeBackend",
     "SchedulerConfig", "DeviceModel", "TaskSpec", "StageProfile",
     "BatchPolicy", "HP", "LP", "RunMetrics", "EngineCore", "Completion",
@@ -527,11 +528,55 @@ class DarisServer:
         is reached) — the natural mode for ``submit()``/trace workloads."""
         return self.core.run(until_idle=True)
 
-    def submit(self, spec: TaskSpec, at_ms: float = 0.0) -> SubmitHandle:
+    def submit(self, spec: TaskSpec, at_ms: float = 0.0,
+               tenant: Optional[str] = None) -> SubmitHandle:
         """Register a one-shot job release at ``at_ms``; it goes through
         the same admission test (Eq. 12) as periodic releases. Inspect the
         returned handle after ``run()``/``drain()``."""
-        return self.core.submit(spec, at_ms)
+        return self.core.submit(spec, at_ms, tenant=tenant)
+
+    def task_named(self, name: str):
+        """The registered runtime task with spec name ``name``."""
+        for t in self.scheduler.tasks:
+            if t.name == name:
+                return t
+        known = sorted({t.name for t in self.scheduler.tasks})
+        raise KeyError(f"no task named {name!r}; registered: {known}")
+
+    def request(self, task_name: str, at_ms: float,
+                tenant: Optional[str] = None) -> SubmitHandle:
+        """One release of an already-registered task (the serving path:
+        tasks carry MRET history and batch heads across requests). Give
+        the task a ``ManualArrival`` if clients are its only source of
+        releases. Legal before ``run()`` and while serving."""
+        return self.core.submit_release(self.task_named(task_name), at_ms,
+                                        tenant=tenant)
+
+    def cancel(self, handle: SubmitHandle,
+               at_ms: Optional[float] = None) -> None:
+        """Schedule a first-class cancellation of ``handle``'s submission
+        (engine CANCEL event): a queued job retires immediately — lanes
+        stay free, the Eq. 12 admission charge unwinds, batch members
+        detach — and an in-flight job retires at its next stage boundary
+        (zero-delay semantics). ``at_ms`` defaults to the handle's
+        release time (cancel as soon as the submission exists)."""
+        if at_ms is None:
+            at_ms = handle.release_ms if handle.release_ms is not None \
+                else handle.at_ms
+        self.core.submit_cancel(handle, at_ms)
+
+    # serving mode: incremental driving for the ops daemon (repro.serve)
+    def begin_serving(self) -> None:
+        self.core.begin_serving()
+
+    def pump(self, frontier_ms: Optional[float] = None) -> None:
+        self.core.pump(frontier_ms)
+
+    def serving_idle(self) -> bool:
+        return self.core.serving_idle()
+
+    def end_serving(self, until_idle: bool = True) -> RunMetrics:
+        return self.core.end_serving(until_idle=until_idle)
 
     def snapshot(self) -> dict:
         """Queue depths, lane occupancy, context liveness, live counters."""

@@ -358,6 +358,24 @@ class ClusterScheduler:
             self._state_dev[inst.job.job_id] = dev
         return done
 
+    def find_job(self, task_index: int, release_ms: float):
+        # the active-job table is shared, so the single-GPU scan applies
+        return DarisScheduler.find_job(self, task_index, release_ms)
+
+    def cancel_job(self, task_index: int, release_ms: float, now: float):
+        """Cancellation across the fleet: resolve against the shared job
+        table, then let the worker that HOMES the job run the single-GPU
+        retirement (its coalescer holds any open batch head). A queued
+        whole-job cancel never reaches ``on_stage_finish``, so the
+        inter-stage state pointer is released here."""
+        job, member = DarisScheduler.find_job(self, task_index, release_ms)
+        if job is None:
+            return "absent", None
+        outcome, job = self.workers[job.ctx[0]]._cancel_found(job, member, now)
+        if outcome == "cancelled":
+            self._state_dev.pop(job.job_id, None)
+        return outcome, job
+
     def next_for_lane(self, ctx_key: CtxKey, now: float
                       ) -> Optional[StageInstance]:
         """Dispatch for one lane's context, stamping the inter-GPU

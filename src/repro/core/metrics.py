@@ -52,6 +52,15 @@ class RunMetrics:
     # zero-delay migration machinery actually paid for
     per_device: Dict[int, Dict] = dataclasses.field(default_factory=dict)
     transfers: int = 0
+    # client-cancelled submissions per priority (scheduler.cancel_job):
+    # whole jobs retired plus batch members detached/dropped. A cancelled
+    # job is neither completed nor missed nor rejected.
+    cancelled: Dict[int, int] = dataclasses.field(
+        default_factory=lambda: {HP: 0, LP: 0})
+    # tenant -> accounting dict (see tenant_stats); filled by the engine
+    # when any submission carried a tenant id (the serving front-end),
+    # empty for plain benchmark runs
+    per_tenant: Dict[str, Dict] = dataclasses.field(default_factory=dict)
 
     @property
     def jps(self) -> float:
@@ -117,12 +126,58 @@ class RunMetrics:
             "migrations": self.migrations, "stragglers": self.stragglers,
             "faults": self.faults, "reconfigures": self.reconfigures,
             "skipped_releases": self.skipped_releases,
+            "cancelled_hp": self.cancelled[HP],
+            "cancelled_lp": self.cancelled[LP],
         }
         if self.per_device:
             out["per_device"] = {
                 str(d): s for d, s in sorted(self.per_device.items())}
             out["transfers"] = self.transfers
+        if self.per_tenant:
+            out["per_tenant"] = dict(sorted(self.per_tenant.items()))
         return out
+
+
+def tenant_stats(handles) -> Dict[str, Dict]:
+    """Per-tenant accounting over submit handles (duck-typed: needs
+    ``.tenant``/``.status``/``.response_ms``). Handles without a tenant
+    id (plain programmatic submits) are excluded. ``completed`` counts
+    every finished job including late ones (soft real-time: a missed job
+    still completes); ``missed`` is the late subset. ``pending`` covers
+    queued/running/unreleased submissions at observation time."""
+    out: Dict[str, Dict] = {}
+    resp: Dict[str, List[float]] = {}
+    for h in handles:
+        if h.tenant is None:
+            continue
+        d = out.setdefault(h.tenant, {
+            "submitted": 0, "completed": 0, "missed": 0,
+            "cancelled": 0, "rejected": 0, "pending": 0})
+        d["submitted"] += 1
+        st = h.status
+        if st in ("completed", "missed"):
+            d["completed"] += 1
+            if st == "missed":
+                d["missed"] += 1
+            if h.response_ms is not None:
+                resp.setdefault(h.tenant, []).append(h.response_ms)
+        elif st == "cancelled":
+            d["cancelled"] += 1
+        elif st == "rejected":
+            d["rejected"] += 1
+        else:
+            d["pending"] += 1
+    for tenant, d in out.items():
+        r = resp.get(tenant)
+        if r:
+            a = np.asarray(r)
+            d["resp"] = {"mean": float(a.mean()),
+                         "p50": float(np.percentile(a, 50)),
+                         "p95": float(np.percentile(a, 95)),
+                         "p99": float(np.percentile(a, 99))}
+        else:
+            d["resp"] = {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
+    return out
 
 
 def empty_metrics(horizon_ms: float) -> RunMetrics:

@@ -484,6 +484,13 @@ class DarisScheduler:
             # meaningful when a task migrates between heterogeneous GPUs
             et_ms = et_ms * self.speed
         job.task.mret.observe(job.stage_idx, et_ms / stage_cost)
+        if job.cancelled:
+            # in-flight cancel lands at the stage boundary (zero-delay
+            # semantics): the finished stage's observation stands, later
+            # stages never run, the admission charge unwinds here
+            job.finish_ms = now
+            del self.active_jobs[job.ctx][job]
+            return job
         missed_vdl = now > inst.virtual_deadline_ms
         if job.is_last_stage():
             job.finish_ms = now
@@ -493,6 +500,112 @@ class DarisScheduler:
         job.vdl_missed_prev = missed_vdl     # §IV-B2 priority boost
         self._enqueue_stage(job, now)
         return None
+
+    # -------------------------------------------------------- cancellation
+    def find_job(self, task_index: int, release_ms: float):
+        """Locate the live job carrying the submission released by task
+        ``task_index`` at ``release_ms``. Returns ``(job, member)``:
+        ``member`` is None when the submission is the job's primary
+        release, else its position in ``extra_release_ms`` (a coalesced
+        batch member). ``(None, None)`` = no live job carries it (it
+        completed, was rejected, or was already cancelled away).
+        Iteration order is dict insertion order — deterministic, so a
+        journal replay resolves cancels identically to the live run."""
+        for jobs in self.active_jobs.values():
+            for job in jobs:
+                if (job.task.index == task_index
+                        and job.release_ms == release_ms):
+                    return job, None
+                for i, (idx, rel) in enumerate(zip(job.extra_member_idx,
+                                                   job.extra_release_ms)):
+                    if idx == task_index and rel == release_ms:
+                        return job, i
+        return None, None
+
+    def cancel_job(self, task_index: int, release_ms: float, now: float):
+        """First-class job cancellation (the engine CANCEL event).
+
+        Outcomes (``(outcome, job)``):
+          * ``"cancelled"``  — the job was queued: its stage instance left
+            the ready queue, the job left ``active_jobs`` (unwinding its
+            Eq. 12 admission charge, which is computed by scanning active
+            jobs), and any open batch-head registration was sealed.
+          * ``"cancelling"`` — the job's current stage is executing: like
+            zero-delay migration, the cancel takes effect at the stage
+            boundary — the running stage finishes (its MRET observation
+            stands), later stages never enqueue.
+          * ``"detached"``   — a member of a still-growable stage-0 batch
+            left it for real: batch size, cached backlog cost, and the
+            incremental admission charge all shrink. Cancelling the
+            *primary* of such a head promotes the earliest surviving
+            member to primary, re-anchoring release/deadline/vdl.
+          * ``"dropped"``    — a member of a sealed (dispatched or
+            mid-pipeline) batch: the launched work is fixed, so the input
+            rides along, but its result is discarded from accounting.
+          * ``"noop"``       — the submission was already cancelled.
+          * ``"absent"``     — no live job carries it (e.g. completed).
+        """
+        job, member = self.find_job(task_index, release_ms)
+        if job is None:
+            return "absent", None
+        return self._cancel_found(job, member, now)
+
+    def _cancel_found(self, job: Job, member: Optional[int], now: float):
+        k = job.ctx
+        q = self.queues.get(k)
+        inst = q.find_inst(job) if q is not None else None
+        if member is not None:
+            rel = job.extra_release_ms[member]
+            if rel in job.dropped_releases:
+                return "noop", job
+            if inst is not None and job.stage_idx == 0:
+                job.extra_release_ms.pop(member)
+                job.extra_member_idx.pop(member)
+                inst.cost_b = batch_cost(inst.profile, job.n_inputs)
+                return "detached", job
+            job.dropped_releases.append(rel)
+            return "dropped", job
+        # primary release
+        if job.cancelled or job.release_ms in job.dropped_releases:
+            return "noop", job
+        if inst is not None and job.stage_idx == 0 and job.extra_release_ms:
+            # queued batch head losing its primary: promote the earliest
+            # surviving member — batching anchors deadline and stage-0
+            # vdl on the earliest member (Job docstring), so the
+            # re-anchored instance must re-enter the queue under its new
+            # virtual deadline
+            promo = next((i for i, r in enumerate(job.extra_release_ms)
+                          if r not in job.dropped_releases), None)
+            if promo is not None:
+                job.release_ms = job.extra_release_ms.pop(promo)
+                job.extra_member_idx.pop(promo)
+                q.remove(inst)
+                vdls = job.task.mret.virtual_deadlines(
+                    job.task.spec.deadline_ms)
+                inst.virtual_deadline_ms = job.release_ms + vdls[0]
+                inst.cost_b = batch_cost(inst.profile, job.n_inputs)
+                q.push(inst)
+                return "detached", job
+        # surviving batch members own the job's remaining work: the
+        # primary's cancel can only discard its own result (mid-pipeline
+        # batches cannot shed members — the launched work is fixed)
+        survivors = [r for r in job.extra_release_ms
+                     if r not in job.dropped_releases]
+        if survivors:
+            job.dropped_releases.append(job.release_ms)
+            return "dropped", job
+        if inst is not None:
+            # current stage still queued: the whole job retires now
+            q.remove(inst)
+            if self._coalescer is not None:
+                self._coalescer.on_pop(inst)   # seal a stale open head
+            del self.active_jobs[k][job]
+            job.cancelled = True
+            job.finish_ms = now
+            return "cancelled", job
+        # current stage is on a lane: zero-delay boundary retirement
+        job.cancelled = True
+        return "cancelling", job
 
     def next_for_lane(self, ctx_idx: int, now: float) -> Optional[StageInstance]:
         if self._coalescer is None:

@@ -60,6 +60,28 @@ class StageQueue:
     def peek(self) -> Optional[StageInstance]:
         return self._heap[0][1] if self._heap else None
 
+    def find_inst(self, job) -> Optional[StageInstance]:
+        """The queued instance of ``job``'s current stage, if any (a job
+        has at most one: stages are sequential). None means the stage is
+        executing on a lane (or completing this instant)."""
+        for _, inst in self._heap:
+            if inst.job is job:
+                return inst
+        return None
+
+    def remove(self, inst: StageInstance) -> bool:
+        """Remove one queued instance (cancellation path). Pop order of
+        the survivors is unchanged: ordering is fully determined by the
+        (level, vdl, seq) keys, which heapify preserves."""
+        for i, (_, it) in enumerate(self._heap):
+            if it is inst:
+                last = self._heap.pop()
+                if i < len(self._heap):
+                    self._heap[i] = last
+                    heapq.heapify(self._heap)
+                return True
+        return False
+
     def __len__(self) -> int:
         return len(self._heap)
 

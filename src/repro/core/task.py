@@ -102,6 +102,15 @@ class Job:
     # (scope="model" batches span tasks; completion must reach each
     # member's own handle)
     extra_member_idx: List[int] = dataclasses.field(default_factory=list)
+    # first-class cancellation (scheduler.cancel_job): a cancelled job
+    # retires instead of completing — immediately while queued, at the
+    # next stage boundary while in flight (zero-delay semantics)
+    cancelled: bool = False
+    # release timestamps of batch members cancelled after the batch
+    # sealed: the input physically rides along (the launched work is
+    # fixed), but its result is discarded — response/throughput
+    # accounting skips these releases
+    dropped_releases: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def n_inputs(self) -> int:

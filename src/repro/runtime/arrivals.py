@@ -104,6 +104,21 @@ class PoissonArrival(ArrivalProcess):
         return prev_t + self._gap(), 0
 
 
+class ManualArrival(ArrivalProcess):
+    """No scheduled releases at all: every job arrives through an explicit
+    ``submit`` (the serving daemon's path — clients drive the arrivals,
+    the engine's arrival machinery stays silent). Draws nothing from the
+    RNG, so adding a manual task to a server perturbs no seeded stream."""
+
+    def start(self, spec: TaskSpec, rng: np.random.Generator
+              ) -> Optional[float]:
+        return None
+
+    def next_after(self, prev_t: float, now: float
+                   ) -> Tuple[Optional[float], int]:
+        return None, 0
+
+
 class TraceArrival(ArrivalProcess):
     """Releases at recorded absolute times (ms). Used for replaying
     captured traffic and for the one-shot ``DarisServer.submit`` path."""

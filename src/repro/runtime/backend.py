@@ -71,11 +71,17 @@ _tie = itertools.count()
 class ExecutionBackend(Protocol):
     """Structural type for execution substrates (see module docstring)."""
 
+    # True when the backend owns a virtual clock that only moves inside
+    # advance() (the serving pump must then never advance past the next
+    # actionable instant); False for wall-clock substrates
+    virtual_time: bool
+
     def bind(self, core: EngineCore) -> None: ...
     def start(self) -> None: ...
     def stop(self) -> None: ...
     def now_ms(self) -> float: ...
     def advance(self, cap_ms: float) -> List[Completion]: ...
+    def peek_eta(self) -> float: ...
     def launch(self, lane: tuple, inst: StageInstance) -> None: ...
     def running_set_changed(self) -> None: ...
     def cancel_ctx(self, ctx_idx: int) -> None: ...
@@ -111,6 +117,7 @@ class SimBackend:
 
     EPS = 1e-6   # ms; snap-to-zero tolerance
     _COMPACT_MIN = 64   # never bother compacting heaps smaller than this
+    virtual_time = True
 
     def __init__(self, noise_sigma: float = 0.06,
                  rng: Optional[np.random.Generator] = None, *,
@@ -168,6 +175,21 @@ class SimBackend:
             return [Completion(lane, inst, t - inst.start_ms)]
         self._advance_to(cap_ms)
         return []
+
+    def peek_eta(self) -> float:
+        """Earliest live finish prediction (inf when nothing is in
+        flight). The serving pump gates ``advance`` on this so virtual
+        time never runs past the next actionable instant. Stale heap
+        entries encountered on the way are discarded — ``advance`` would
+        skip the same ones, so pop order is untouched."""
+        heap = self._heap
+        while heap:
+            t, _, lane, ver = heap[0]
+            entry = self.running.get(lane)
+            if entry is not None and entry[_VER] == ver:
+                return t
+            heapq.heappop(heap)
+        return math.inf
 
     # ----------------------------------------------------------- execution
     def launch(self, lane: tuple, inst: StageInstance) -> None:
@@ -430,6 +452,8 @@ class RealtimeBackend:
     mode). ``resharded`` counts the migrations actually performed.
     """
 
+    virtual_time = False
+
     def __init__(self, input_hw: int = 64, batch: int = 1,
                  input_factory: Optional[Callable[[Job], object]] = None,
                  ctx_shardings: Optional[Dict[int, object]] = None):
@@ -505,6 +529,12 @@ class RealtimeBackend:
             self._job_state[inst.job.job_id] = out
             self._state_ctx[inst.job.job_id] = lane[0]
             return [Completion(lane, inst, et)]
+
+    def peek_eta(self) -> float:
+        """Wall clock: in-flight work can complete at any instant, so the
+        earliest actionable time is "now"; inf when idle (the serving
+        pump then has nothing to harvest and must not spin)."""
+        return self.now_ms() if self._inflight else math.inf
 
     # ----------------------------------------------------------- execution
     def _sharding_for(self, ctx: int):

@@ -30,7 +30,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.metrics import RunMetrics, empty_metrics
+from ..core.metrics import RunMetrics, empty_metrics, tenant_stats
 from ..core.scheduler import DarisScheduler
 from ..core.task import HP, LP, Job, StageInstance, Task, TaskSpec
 from .arrivals import ArrivalProcess, PeriodicArrival
@@ -43,7 +43,11 @@ _seq = itertools.count()
 # context faults — a fault and a reconfigure at the same instant must
 # fail first, or the re-place would move tasks onto the dying device
 # only to replay them one event later. Only relative order matters.
-RELEASE, FAULT, FAIL_DEV, ADD_CTX, RECONFIG, AUTOSCALE = 0, 2, 3, 4, 5, 6
+# CANCEL sits between RELEASE and FAULT: a release and its own cancel at
+# the same instant must release first (the cancel then finds a live job),
+# and a cancel racing a fault must unwind cleanly before the fault
+# re-homes whatever survives.
+RELEASE, CANCEL, FAULT, FAIL_DEV, ADD_CTX, RECONFIG, AUTOSCALE = range(7)
 
 _EPS = 1e-9
 
@@ -94,16 +98,57 @@ class Completion:
 
 
 class SubmitHandle:
-    """Outcome tracker for one programmatic ``DarisServer.submit`` call."""
+    """Outcome tracker for one submitted request — the job-state
+    vocabulary shared by in-process callers and the serving daemon.
 
-    PENDING, REJECTED, ADMITTED, COMPLETED = ("pending", "rejected",
-                                              "admitted", "completed")
+    Lifecycle::
 
-    def __init__(self, task: Task):
+        pending -> rejected                       (Eq. 11-12 said no)
+                -> queued -> running -> completed (on time)
+                                     -> missed    (finished late)
+                -> cancelled                      (client cancel, any
+                                                   pre-terminal state)
+
+    ``queued`` means admitted and waiting in the stage queue; ``running``
+    means the job's first stage has dispatched. ``missed`` jobs still
+    completed (soft real-time) — their ``response_ms`` is valid.
+    ``ADMITTED`` is the historic alias for ``queued``."""
+
+    PENDING = "pending"
+    REJECTED = "rejected"
+    QUEUED = "queued"
+    ADMITTED = QUEUED              # pre-serving name, kept for callers
+    RUNNING = "running"
+    COMPLETED = "completed"
+    MISSED = "missed"
+    CANCELLED = "cancelled"
+    TERMINAL = frozenset((REJECTED, COMPLETED, MISSED, CANCELLED))
+
+    def __init__(self, task: Task, tenant: Optional[str] = None,
+                 at_ms: float = 0.0):
         self.task = task
+        self.tenant = tenant
+        self.at_ms = at_ms              # requested release time
         self.status = self.PENDING
         self.job: Optional[Job] = None
+        # actual admission timestamp — the identity the cancel machinery
+        # resolves against (job.release_ms for primaries, the member's
+        # extra_release_ms entry for coalesced joins)
+        self.release_ms: Optional[float] = None
         self.response_ms: Optional[float] = None
+        self._cancelled = False
+
+    @property
+    def done(self) -> bool:
+        return self.status in self.TERMINAL
+
+    def result(self) -> Dict:
+        """Poll-friendly view (what the daemon's ``status``/``result``
+        verbs serialize)."""
+        return {"task": self.task.name, "tenant": self.tenant,
+                "status": self.status, "at_ms": self.at_ms,
+                "release_ms": self.release_ms,
+                "response_ms": self.response_ms}
 
     def __repr__(self) -> str:
         return f"SubmitHandle({self.task.name}: {self.status})"
@@ -130,7 +175,12 @@ class EngineCore:
         self.decisions: Optional[List[str]] = [] if record_decisions else None
         # task.index -> arrival process (tasks without one never self-release)
         self.arrivals: Dict[int, ArrivalProcess] = dict(arrivals or {})
-        self._handles: Dict[int, SubmitHandle] = {}
+        # job_id -> handles riding that job (primary first, then coalesced
+        # members in join order); every handle ever issued, for per-tenant
+        # accounting at finalize
+        self._job_handles: Dict[int, List[SubmitHandle]] = {}
+        self._all_handles: List[SubmitHandle] = []
+        self._serving = False
         # per-device completion counters (cluster schedulers only; None
         # on a single device so the completion hot path pays one check)
         self._dev_stats: Optional[Dict[int, Dict]] = (
@@ -155,7 +205,8 @@ class EngineCore:
         return self.backend.now_ms()
 
     # ---------------------------------------------------------- public API
-    def submit(self, spec: TaskSpec, at_ms: float = 0.0) -> SubmitHandle:
+    def submit(self, spec: TaskSpec, at_ms: float = 0.0,
+               tenant: Optional[str] = None) -> SubmitHandle:
         """Register a one-shot job release at ``at_ms`` (before run())."""
         if self._ran:
             raise RuntimeError("EngineCore.run() already executed")
@@ -165,18 +216,83 @@ class EngineCore:
                 f"({self.horizon} ms): the release would never fire and "
                 f"the handle would stay PENDING forever")
         task = self.sched.add_task(spec)
-        handle = SubmitHandle(task)
-        self._handles[task.index] = handle
-        self._push(at_ms, RELEASE, (task, None))
+        handle = SubmitHandle(task, tenant=tenant, at_ms=at_ms)
+        self._all_handles.append(handle)
+        self._push(at_ms, RELEASE, (task, None, handle))
         return handle
 
+    def submit_release(self, task: Task, at_ms: float,
+                       tenant: Optional[str] = None) -> SubmitHandle:
+        """Schedule one release of an EXISTING task (the serving path:
+        tasks are registered once, requests arrive as releases — MRET
+        history and batch coalescing accumulate across requests). Legal
+        before run() and, unlike ``submit``, while serving."""
+        if self._ran and not self._serving:
+            raise RuntimeError("EngineCore.run() already executed")
+        if at_ms > self.horizon:
+            raise ValueError(
+                f"submit_release at_ms={at_ms} is beyond the horizon "
+                f"({self.horizon} ms)")
+        handle = SubmitHandle(task, tenant=tenant, at_ms=at_ms)
+        self._all_handles.append(handle)
+        self._push(at_ms, RELEASE, (task, None, handle))
+        return handle
+
+    def submit_cancel(self, handle: SubmitHandle, at_ms: float) -> None:
+        """Schedule a cancellation of ``handle``'s submission at
+        ``at_ms`` (same clock as releases; a release and its cancel at
+        the same instant release first)."""
+        if self._ran and not self._serving:
+            raise RuntimeError("EngineCore.run() already executed")
+        self._push(at_ms, CANCEL, handle)
+
     def run(self, until_idle: bool = False) -> RunMetrics:
+        self._begin()
+        while self._step(until_idle, None):
+            pass
+        return self._finalize()
+
+    # ------------------------------------------------------- serving mode
+    def begin_serving(self) -> None:
+        """Arm the engine for incremental driving: seed the timeline and
+        start the backend, but advance nothing. Drive with ``pump``;
+        close with ``end_serving``. Used by the ops daemon, where
+        requests arrive while the engine runs."""
+        self._serving = True
+        self._begin()
+
+    def pump(self, frontier_ms: Optional[float] = None) -> None:
+        """Process everything actionable at or before ``frontier_ms``,
+        then return. "Actionable" = a timeline event is due or a launched
+        stage can finish; on a virtual-time backend the clock only ever
+        moves to such instants, so an idle server's clock PAUSES at the
+        frontier instead of slamming to the horizon. ``None`` uses the
+        backend's current wall clock (realtime serving)."""
+        if frontier_ms is None:
+            frontier_ms = self.backend.now_ms()
+        while self._step(False, frontier_ms):
+            pass
+
+    def serving_idle(self) -> bool:
+        """No queued work, nothing in flight, no pending submissions."""
+        return self._idle()
+
+    def end_serving(self, until_idle: bool = True) -> RunMetrics:
+        """Stop serving and finalize metrics. ``until_idle`` drains: the
+        engine keeps driving (no frontier) until all accepted work
+        finishes — the daemon's graceful-drain path."""
+        if until_idle:
+            while self._step(True, None):
+                pass
+        return self._finalize()
+
+    # ---------------------------------------------------------- drive loop
+    def _begin(self) -> None:
         if self._ran:
             raise RuntimeError("EngineCore.run() already executed")
         self._ran = True
         self.backend.bind(self)
         self.backend.start()
-
         # seed the timeline: first release per task, then injected events
         for task in self.sched.tasks:
             proc = self.arrivals.get(task.index)
@@ -184,7 +300,7 @@ class EngineCore:
                 continue
             t0 = proc.start(task.spec, self.rng)
             if t0 is not None and t0 <= self.horizon:
-                self._push(t0, RELEASE, (task, proc))
+                self._push(t0, RELEASE, (task, proc, None))
         fp = self.fault_plan
         if fp and fp.fail_ctx_at:
             self._push(fp.fail_ctx_at[1], FAULT, fp.fail_ctx_at[0])
@@ -198,45 +314,59 @@ class EngineCore:
         if self.autoscale is not None:
             self._push(self.autoscale.check_every_ms, AUTOSCALE, None)
 
-        while True:
-            if until_idle and self._idle():
-                break          # before advancing time to the horizon
-            t_evt = self._timeline[0][0] if self._timeline else math.inf
-            cap = min(t_evt, self.horizon)
-            completions = self.backend.advance(cap)
-            now = self.backend.now_ms()
-            if completions:
-                for c in completions:
-                    self._on_completion(c)
-            elif (self._timeline and t_evt <= self.horizon
-                  and now >= t_evt - 1e-6):
-                t, kind, _, payload = heapq.heappop(self._timeline)
-                if kind != AUTOSCALE:
-                    self._work_events -= 1
-                if kind == RELEASE:
-                    self._handle_release(payload[0], payload[1], t)
-                elif kind == FAULT:
-                    self._handle_fault(payload)
-                elif kind == FAIL_DEV:
-                    self._handle_fail_device(payload)
-                elif kind == ADD_CTX:
-                    self.sched.add_context(now)
-                    self._log(f"scale-out ctx{len(self.sched.contexts) - 1}")
-                elif kind == RECONFIG:
-                    self._handle_reconfigure(now, payload)
-                elif kind == AUTOSCALE:
-                    self._handle_autoscale(now)
-            elif now >= self.horizon - _EPS:
-                break
-            elif not self._timeline and not self.backend.has_inflight():
-                break    # nothing can ever happen again
-            # tell the scheduler when this loop is guaranteed to run again
-            # (lazy batch-head holds must release before then)
-            self.sched.next_wake_ms = (self._timeline[0][0]
-                                       if self._timeline else math.inf)
-            self._dispatch()
-            self.backend.running_set_changed()
+    def _step(self, until_idle: bool, frontier: Optional[float]) -> bool:
+        """One drive iteration. Returns False when the loop should stop:
+        idle (when asked), horizon reached, nothing can ever happen again
+        — or, in serving mode, nothing is actionable at or before the
+        frontier (the pump pauses; more submissions may arm it again)."""
+        if until_idle and self._idle():
+            return False          # before advancing time to the horizon
+        t_evt = self._timeline[0][0] if self._timeline else math.inf
+        if frontier is not None:
+            nxt = min(t_evt, self.backend.peek_eta())
+            if nxt == math.inf or nxt > frontier:
+                return False      # pause — never advance past the frontier
+        cap = min(t_evt, self.horizon)
+        if frontier is not None and not self.backend.virtual_time:
+            cap = min(cap, frontier)   # wall clock: don't block past it
+        completions = self.backend.advance(cap)
+        now = self.backend.now_ms()
+        if completions:
+            for c in completions:
+                self._on_completion(c)
+        elif (self._timeline and t_evt <= self.horizon
+              and now >= t_evt - 1e-6):
+            t, kind, _, payload = heapq.heappop(self._timeline)
+            if kind != AUTOSCALE:
+                self._work_events -= 1
+            if kind == RELEASE:
+                self._handle_release(payload[0], payload[1], t, payload[2])
+            elif kind == CANCEL:
+                self._handle_cancel(payload)
+            elif kind == FAULT:
+                self._handle_fault(payload)
+            elif kind == FAIL_DEV:
+                self._handle_fail_device(payload)
+            elif kind == ADD_CTX:
+                self.sched.add_context(now)
+                self._log(f"scale-out ctx{len(self.sched.contexts) - 1}")
+            elif kind == RECONFIG:
+                self._handle_reconfigure(now, payload)
+            elif kind == AUTOSCALE:
+                self._handle_autoscale(now)
+        elif now >= self.horizon - _EPS:
+            return False
+        elif not self._timeline and not self.backend.has_inflight():
+            return False    # nothing can ever happen again
+        # tell the scheduler when this loop is guaranteed to run again
+        # (lazy batch-head holds must release before then)
+        self.sched.next_wake_ms = (self._timeline[0][0]
+                                   if self._timeline else math.inf)
+        self._dispatch()
+        self.backend.running_set_changed()
+        return True
 
+    def _finalize(self) -> RunMetrics:
         # horizon sweep: jobs still queued/in-flight are real work the run
         # accepted — count them, and count the ones already past their
         # deadline as missed (otherwise overload DMR is understated by
@@ -271,39 +401,91 @@ class EngineCore:
                     "missed": dict(s["missed"])}
                 for d, s in sorted(self._dev_stats.items())}
             self.metrics.transfers = getattr(self.sched, "transfers", 0)
+        if any(h.tenant is not None for h in self._all_handles):
+            self.metrics.per_tenant = tenant_stats(self._all_handles)
+        if self._serving:
+            # a serving engine's configured horizon is a far-future guard,
+            # not the observation window: rate metrics (jps) divide by the
+            # time actually served
+            self.metrics.horizon_ms = max(end_ms, _EPS)
         self.backend.stop()
         return self.metrics
 
     # -------------------------------------------------------- event handlers
     def _handle_release(self, task: Task, proc: Optional[ArrivalProcess],
-                        sched_t: float) -> None:
+                        sched_t: float,
+                        handle: Optional[SubmitHandle] = None) -> None:
         """``sched_t`` is when this release was *scheduled*; wall-clock
         backends may observe ``now > sched_t``, and the periodic successor
         must be anchored to the schedule, not the observation."""
         now = self.backend.now_ms()
+        if handle is not None and handle._cancelled:
+            # cancelled before it ever released: the submission never
+            # reaches the scheduler (accounting happened at cancel time)
+            self._log(f"release {task.name} skipped (cancelled)")
+            return
         pre_coalesced = self.sched.coalesced
         job = self.sched.on_release(task, now)
         if job is None:
             self._log(f"reject {task.name}")
-            h = self._handles.get(task.index)
-            if h:
-                h.status = SubmitHandle.REJECTED
+            if handle is not None:
+                handle.status = SubmitHandle.REJECTED
         else:
             if self.sched.coalesced > pre_coalesced:
                 self._log(f"batch {task.name} -> ctx{job.ctx} "
                           f"b={job.n_inputs}")
             else:
                 self._log(f"admit {task.name} -> ctx{job.ctx}")
-            h = self._handles.get(task.index)
-            if h:
-                h.status = SubmitHandle.ADMITTED
-                h.job = job
+            if handle is not None:
+                handle.status = SubmitHandle.QUEUED
+                handle.job = job
+                # a coalesced join's member release stamp is ``now`` (the
+                # value on_release appended to extra_release_ms), same as
+                # a primary's job.release_ms — either way the handle's
+                # identity for cancellation is (task.index, now)
+                handle.release_ms = now
+                if job.start_ms is not None:
+                    handle.status = SubmitHandle.RUNNING
+                self._job_handles.setdefault(job.job_id, []).append(handle)
         if proc is not None:
             nxt, skipped = proc.next_after(sched_t, now)
             if skipped:
                 self.metrics.skipped_releases += skipped
             if nxt is not None and nxt <= self.horizon:
-                self._push(nxt, RELEASE, (task, proc))
+                self._push(nxt, RELEASE, (task, proc, None))
+
+    def _handle_cancel(self, handle: SubmitHandle) -> str:
+        """CANCEL event: retire one submission. Returns the scheduler
+        outcome (see ``DarisScheduler.cancel_job``) for daemon replies;
+        terminal handles no-op ("absent" = already finished)."""
+        now = self.backend.now_ms()
+        if handle.status == SubmitHandle.CANCELLED:
+            return "noop"
+        if handle.done:
+            return "absent"
+        p = handle.task.priority
+        if handle.job is None:
+            # not yet released: mark it so the pending RELEASE skips
+            handle._cancelled = True
+            handle.status = SubmitHandle.CANCELLED
+            self.metrics.cancelled[p] += 1
+            self._log(f"cancel {handle.task.name} (unreleased)")
+            return "cancelled"
+        outcome, job = self.sched.cancel_job(
+            handle.task.index, handle.release_ms, now)
+        if outcome in ("cancelled", "cancelling", "detached", "dropped"):
+            handle._cancelled = True
+            handle.status = SubmitHandle.CANCELLED
+            self.metrics.cancelled[p] += 1
+            if outcome == "cancelled":
+                # whole job retired while queued: no completion will ever
+                # arrive for it — clean backend job state now
+                self.backend.on_job_done(job)
+                self._job_handles.pop(job.job_id, None)
+            self._log(f"cancel {handle.task.name} ({outcome})")
+        else:
+            self._log(f"cancel {handle.task.name} ({outcome})")
+        return outcome
 
     def _handle_fault(self, ctx_idx: int) -> None:
         now = self.backend.now_ms()
@@ -405,9 +587,25 @@ class EngineCore:
         if done is None:
             return
         self.backend.on_job_done(done)
+        handles = self._job_handles.pop(done.job_id, None)
+        if done.cancelled:
+            # in-flight cancel retired at this stage boundary: the cancel
+            # event already did the accounting; nothing completed
+            self._log(f"retire {done.task.name} (cancelled)")
+            return
         p = done.task.priority
+        if done.dropped_releases:
+            # some members were cancelled after the batch sealed: their
+            # inputs rode along physically but their results are
+            # discarded — throughput/response accounting covers only the
+            # survivors (the job itself still completed once)
+            live = [r for r in done.release_times
+                    if r not in done.dropped_releases]
+        else:
+            live = None     # hot path: historic accounting, bit-identical
         self.metrics.completed[p] += 1
-        self.metrics.completed_inputs[p] += done.n_inputs
+        self.metrics.completed_inputs[p] += (done.n_inputs if live is None
+                                             else len(live))
         if self._dev_stats is not None:
             # attribute to the job's HOME device (job.ctx), matching the
             # horizon sweep — the only base available for unfinished
@@ -421,26 +619,27 @@ class EngineCore:
             ds["completed"][p] += 1
             if now > done.abs_deadline_ms:
                 ds["missed"][p] += 1
-        b = done.n_inputs
+        b = done.n_inputs if live is None else len(live)
         self.metrics.batch_hist[b] = self.metrics.batch_hist.get(b, 0) + 1
         # each batched input gets its own response time, measured from its
         # own release (the head's deadline governed the whole batch)
-        resp = now - done.release_ms
-        for r_ms in done.release_times:
+        for r_ms in (done.release_times if live is None else live):
             self.metrics.response_ms[p].append(now - r_ms)
         if now > done.abs_deadline_ms:
             self.metrics.missed[p] += 1
-        h = self._handles.get(done.task.index)
-        if h:
-            h.status = SubmitHandle.COMPLETED
-            h.response_ms = resp
-        # coalesced members may belong to other tasks (scope="model"):
-        # complete their handles too, each at its own response time
-        for idx, r_ms in zip(done.extra_member_idx, done.extra_release_ms):
-            h = self._handles.get(idx)
-            if h:
-                h.status = SubmitHandle.COMPLETED
-                h.response_ms = now - r_ms
+        if handles:
+            # every handle riding this job — the primary and coalesced
+            # members (which may belong to other tasks under
+            # scope="model") — finishes at its own response time; a late
+            # finish against the handle's OWN release+deadline is MISSED
+            # (still a completion: soft real-time)
+            for h in handles:
+                if h._cancelled:
+                    continue    # detached/dropped member: stays cancelled
+                h.response_ms = now - h.release_ms
+                late = now > h.release_ms + h.task.spec.deadline_ms
+                h.status = (SubmitHandle.MISSED if late
+                            else SubmitHandle.COMPLETED)
 
     def _dispatch(self) -> None:
         now = self.backend.now_ms()
@@ -452,6 +651,13 @@ class EngineCore:
             inst.work_done = 0.0
             inst.lane = lane
             self.sched.lanes[lane] = inst
+            if inst.job.start_ms is None:
+                # first dispatch of the job: queued -> running for every
+                # handle riding it
+                inst.job.start_ms = now
+                for h in self._job_handles.get(inst.job.job_id, ()):
+                    if h.status == SubmitHandle.QUEUED:
+                        h.status = SubmitHandle.RUNNING
             self._log(f"dispatch {inst.task.name} s{inst.job.stage_idx} "
                       f"lane({lane[0]},{lane[1]})")
             self.backend.launch(lane, inst)
@@ -496,7 +702,10 @@ class EngineCore:
             # the run summary)
             "resp_hp": self.metrics.resp_stats(HP),
             "resp_lp": self.metrics.resp_stats(LP),
+            "cancelled": dict(self.metrics.cancelled),
         }
+        if any(h.tenant is not None for h in self._all_handles):
+            snap["tenants"] = tenant_stats(self._all_handles)
         summary = getattr(self.sched, "device_summary", None)
         if summary is not None:
             snap["devices"] = summary(now)

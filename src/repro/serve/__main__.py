@@ -1,0 +1,130 @@
+"""CLI for the serving front-end: ``python -m repro.serve <verb> ...``.
+
+    # run the ops daemon (blocks; SIGTERM checkpoints and exits)
+    python -m repro.serve daemon --config serve.json \\
+        --socket /tmp/daris.sock --journal /tmp/daris.jsonl \\
+        --checkpoint /tmp/daris.ckpt
+
+    # client verbs against a running daemon
+    python -m repro.serve submit --socket /tmp/daris.sock \\
+        --task resnet18-hp0 --tenant teamA
+    python -m repro.serve status --socket /tmp/daris.sock --seq 3
+    python -m repro.serve cancel --socket /tmp/daris.sock --seq 3
+    python -m repro.serve stats  --socket /tmp/daris.sock
+    python -m repro.serve drain  --socket /tmp/daris.sock
+
+    # offline: deterministic journal replay / durability audit
+    python -m repro.serve replay --config serve.json \\
+        --journal /tmp/daris.jsonl
+    python -m repro.serve audit  --journal /tmp/daris.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .client import DarisClient
+from .config import build_server, load_config
+from .daemon import ServeDaemon
+from .journal import audit_zero_lost, read_journal, to_trace_arrivals
+
+
+def _cmd_daemon(a) -> int:
+    d = ServeDaemon(load_config(a.config), socket_path=a.socket,
+                    journal_path=a.journal, checkpoint_path=a.checkpoint,
+                    time_scale=a.time_scale, fsync=a.fsync)
+    print(f"daris daemon: socket={a.socket} journal={a.journal}",
+          flush=True)
+    d.run()
+    return 0
+
+
+def _client_verb(a) -> int:
+    c = DarisClient(a.socket)
+    if a.verb == "submit":
+        out = c.submit(a.task, tenant=a.tenant)
+    elif a.verb == "status":
+        out = c.status(a.seq)
+    elif a.verb == "result":
+        out = c.result(a.seq, timeout_s=a.timeout_s)
+    elif a.verb == "cancel":
+        out = c.cancel(a.seq)
+    elif a.verb == "stats":
+        out = c.stats()
+    elif a.verb == "drain":
+        out = c.drain()
+    else:
+        out = c.shutdown()
+    print(json.dumps(out, indent=2, sort_keys=True))
+    return 0
+
+
+def _cmd_replay(a) -> int:
+    """Deterministic replay: journaled traffic becomes TraceArrival input
+    to a freshly built engine (same config, same seed). Recorded outages
+    replay as plain load — chaos scenarios become regression scenarios."""
+    records = read_journal(a.journal)
+    arrivals = to_trace_arrivals(records, until_ms=a.until_ms)
+    server = build_server(load_config(a.config), arrivals=arrivals)
+    m = server.drain()
+    print(json.dumps(m.summary(), indent=2, sort_keys=True))
+    return 0
+
+
+def _cmd_audit(a) -> int:
+    lost = audit_zero_lost(read_journal(a.journal))
+    if lost:
+        print(f"LOST: {len(lost)} acknowledged submission(s) never "
+              f"reached a terminal state: {lost}")
+        return 1
+    print("ok: every acknowledged submission reached a terminal state")
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="repro.serve", description=__doc__)
+    sub = p.add_subparsers(dest="verb", required=True)
+
+    d = sub.add_parser("daemon", help="run the ops daemon (blocks)")
+    d.add_argument("--config", required=True)
+    d.add_argument("--socket", required=True)
+    d.add_argument("--journal", required=True)
+    d.add_argument("--checkpoint", default=None)
+    d.add_argument("--time-scale", type=float, default=1.0,
+                   help="virtual ms per wall ms (sim pacing)")
+    d.add_argument("--fsync", action="store_true",
+                   help="fsync the journal on every record")
+
+    for verb in ("submit", "status", "result", "cancel", "stats",
+                 "drain", "shutdown"):
+        c = sub.add_parser(verb)
+        c.add_argument("--socket", required=True)
+        if verb == "submit":
+            c.add_argument("--task", required=True)
+            c.add_argument("--tenant", default=None)
+        if verb in ("status", "result", "cancel"):
+            c.add_argument("--seq", type=int, required=True)
+        if verb == "result":
+            c.add_argument("--timeout-s", type=float, default=30.0)
+
+    r = sub.add_parser("replay", help="deterministic journal replay")
+    r.add_argument("--config", required=True)
+    r.add_argument("--journal", required=True)
+    r.add_argument("--until-ms", type=float, default=None)
+
+    au = sub.add_parser("audit", help="zero-lost durability audit")
+    au.add_argument("--journal", required=True)
+
+    a = p.parse_args(argv)
+    if a.verb == "daemon":
+        return _cmd_daemon(a)
+    if a.verb == "replay":
+        return _cmd_replay(a)
+    if a.verb == "audit":
+        return _cmd_audit(a)
+    return _client_verb(a)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,128 @@
+"""Durable request journal: append-only JSONL, one record per line.
+
+The daemon writes a ``submit`` record — tenant id, priority, virtual
+release time — BEFORE acknowledging a submission, so an acknowledged
+request is always recoverable. Terminal outcomes append ``done`` records;
+cancels append ``cancel`` records; a restart appends ``resubmitted``
+records for journaled-but-unfinished requests it re-injects. The file is
+therefore both the durability log and a complete traffic capture:
+``to_trace_arrivals`` turns it into per-task ``TraceArrival`` processes,
+so a recorded outage replays as a deterministic chaos scenario.
+
+Record kinds (``rec`` field):
+
+    meta         {"version", "created_unix", "config_sha"?}   (file open)
+    submit       {"seq", "task", "tenant", "prio", "at_ms"}
+    cancel       {"seq", "at_ms"}
+    done         {"seq", "status", "response_ms"}             (terminal)
+    resubmitted  {"seq", "at_ms"}          (restart re-injection, same seq)
+    checkpoint   {"path", "at_ms"}         (SIGTERM / shutdown)
+    final        {"summary"}               (graceful drain only)
+
+``audit_zero_lost`` is the durability contract: every journaled ``seq``
+must reach a terminal ``done``/``cancel`` record, possibly across
+restarts (``resubmitted`` chains keep the same seq).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+JOURNAL_VERSION = 1
+
+# submissions in these states are finished business; anything else found
+# in a journal at restart must be re-injected
+TERMINAL_STATUSES = ("completed", "missed", "rejected", "cancelled")
+
+
+class Journal:
+    """Append-only JSONL writer. ``append`` flushes every record (the
+    ack-after-journal contract); ``fsync=True`` additionally fsyncs,
+    trading throughput for power-loss durability."""
+
+    def __init__(self, path: str, fsync: bool = False):
+        self.path = str(path)
+        self.fsync = fsync
+        fresh = not os.path.exists(self.path) \
+            or os.path.getsize(self.path) == 0
+        self._f = open(self.path, "a", encoding="utf-8")
+        if fresh:
+            self.append({"rec": "meta", "version": JOURNAL_VERSION})
+
+    def append(self, record: Dict) -> None:
+        self._f.write(json.dumps(record, sort_keys=True) + "\n")
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        self._f.close()
+
+
+def read_journal(path: str) -> List[Dict]:
+    """All records, in append order. A torn final line (crash mid-write)
+    is dropped — it was never acknowledged, so losing it is correct."""
+    out: List[Dict] = []
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                break     # torn tail: everything after it is unreadable
+    return out
+
+
+def submit_records(records: List[Dict]) -> List[Dict]:
+    return [r for r in records if r.get("rec") == "submit"]
+
+
+def unfinished_submits(records: List[Dict]) -> List[Dict]:
+    """Journaled submissions with no terminal record — the restart
+    re-injection set. A ``resubmitted`` record does NOT finish a seq; it
+    only marks that a later run took responsibility for it again."""
+    terminal = {r["seq"] for r in records if r.get("rec") == "done"}
+    return [r for r in submit_records(records) if r["seq"] not in terminal]
+
+
+def audit_zero_lost(records: List[Dict]) -> List[int]:
+    """Seqs that were acknowledged but never reached a terminal state —
+    the list a healthy drain leaves empty."""
+    return sorted(r["seq"] for r in unfinished_submits(records))
+
+
+def to_trace_arrivals(records: List[Dict],
+                      until_ms: Optional[float] = None):
+    """Per-task ``TraceArrival`` processes reproducing the journaled
+    traffic: ``{task_name: TraceArrival([...])}``. Submission stamps are
+    strictly monotonic per daemon run, so replay order equals the order
+    the live engine processed the releases in.
+
+    Bit-exactness caveat: the lazy-dispatch batching hold
+    (``DarisScheduler._should_hold``) keys off the engine's next known
+    wake-up. A trace replay knows every future arrival; the live daemon
+    cannot (clients have not sent them yet), so a replay of a
+    batching-enabled config may coalesce MORE than the live run did.
+    Replay is bit-identical whenever no hold triggers — batching off, or
+    traffic sparse enough that heads never grow."""
+    from ..runtime.arrivals import TraceArrival
+    times: Dict[str, List[float]] = {}
+    for r in submit_records(records):
+        if until_ms is not None and r["at_ms"] > until_ms:
+            continue
+        times.setdefault(r["task"], []).append(float(r["at_ms"]))
+    return {name: TraceArrival(ts) for name, ts in times.items()}
+
+
+def replay_plan(records: List[Dict]):
+    """(submits, cancels) for a handle-accurate replay: submits in stamp
+    order, cancels as ``(seq, at_ms)`` referencing them. Used when the
+    replay must also reproduce cancellations (TraceArrival replays the
+    load shape only)."""
+    subs = submit_records(records)
+    cancels = [(r["seq"], float(r["at_ms"]))
+               for r in records if r.get("rec") == "cancel"]
+    return subs, cancels

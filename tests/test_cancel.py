@@ -1,0 +1,320 @@
+"""Job cancellation: queued retire + Eq. 12 charge release, in-flight
+stage-boundary retirement, completed no-op, batch member detach/promote,
+sealed-batch accounting drops, cluster-device cancel, and the StageQueue
+surgery primitives that make queued removal possible."""
+import math
+
+import pytest
+
+from repro.api import (HP, LP, DeviceModel, ManualArrival, ServerConfig,
+                       StageProfile, SubmitHandle, TaskSpec)
+from repro.core.scheduler import DarisScheduler, SchedulerConfig
+from repro.core.stage_queue import StageQueue
+from repro.core.task import Job, Task
+
+
+def make_spec(name, prio, stage_times, period_ms, n_sat=1.0):
+    return TaskSpec(
+        name=name, period_ms=period_ms, priority=prio,
+        stages=[StageProfile(f"{name}/s{j}", t, n_sat=n_sat, mem_frac=0.0,
+                             overhead_ms=0.0)
+                for j, t in enumerate(stage_times)])
+
+
+def ideal_device():
+    return DeviceModel(n_units=4.0, bubble=0.0, l2_pressure=0.0)
+
+
+def serving_server(specs, *, contexts=1, batching=None, horizon=1e6):
+    cfg = ServerConfig.sim()
+    for s in specs:
+        cfg.task(s, arrival=ManualArrival())
+    cfg = (cfg.contexts(contexts).streams(1).oversubscribe(float(contexts))
+           .device(ideal_device()).horizon_ms(horizon)
+           .phase_offsets(False).noise(0.0).seed(0))
+    if batching:
+        cfg.batching(**batching)
+    srv = cfg.build()
+    srv.begin_serving()
+    return srv
+
+
+def lanes_all_free(sched):
+    return all(inst is None for inst in sched.lanes.values())
+
+
+# ------------------------------------------------- queued-job cancellation
+def test_cancel_queued_job_releases_lane_and_admission_charge():
+    """A queued LP job cancelled before dispatch must vanish from the
+    active set and stop charging Eq. 12 (util_lp_active back to zero)."""
+    srv = serving_server([make_spec("hog", HP, [50.0], 1000.0),
+                          make_spec("lp", LP, [10.0, 10.0], 1000.0)])
+    sched = srv.scheduler
+    srv.request("hog", at_ms=0.0)
+    srv.pump(0.0)
+    h = srv.request("lp", at_ms=5.0)
+    srv.pump(5.0)
+    assert h.status == SubmitHandle.QUEUED
+    assert sched.util_lp_active(0, 6.0) > 0.0
+
+    srv.cancel(h, at_ms=6.0)
+    srv.pump(6.0)
+    assert h.status == SubmitHandle.CANCELLED
+    assert h.done and h._cancelled
+    # charge unwound, job gone, only the HP hog remains active
+    assert sched.util_lp_active(0, 7.0) == 0.0
+    assert [j.task.spec.name for j in sched.active_jobs[0]] == ["hog"]
+    assert srv.metrics.cancelled[LP] == 1
+
+    m = srv.end_serving()
+    assert m.completed[HP] == 1 and m.completed[LP] == 0
+    assert lanes_all_free(sched)
+
+
+def test_cancel_pending_release_never_admits():
+    """Cancel stamped before the release event: the release is skipped
+    entirely — no admission, no scheduler job, still counted."""
+    srv = serving_server([make_spec("lp", LP, [10.0], 1000.0)])
+    h = srv.request("lp", at_ms=100.0)
+    srv.cancel(h, at_ms=50.0)
+    m = srv.end_serving()
+    assert h.status == SubmitHandle.CANCELLED
+    assert h.job is None
+    assert m.completed[LP] == 0 and m.cancelled[LP] == 1
+    assert all(not jobs for jobs in srv.scheduler.active_jobs.values())
+
+
+# ----------------------------------------------- in-flight cancellation
+def test_cancel_inflight_retires_at_stage_boundary():
+    """Cancelling a running job marks it immediately but the engine only
+    reclaims it at the next stage boundary (mid-kernel preemption is not
+    a thing); the second stage must never dispatch."""
+    srv = serving_server([make_spec("lp", LP, [20.0, 20.0], 1000.0)])
+    sched = srv.scheduler
+    h = srv.request("lp", at_ms=5.0)
+    srv.pump(5.0)
+    assert h.status == SubmitHandle.RUNNING
+    job = h.job
+    assert job is not None and job.stage_idx == 0
+
+    srv.cancel(h, at_ms=10.0)
+    srv.pump(10.0)
+    # still physically on the lane until stage 0 finishes at t=25
+    assert h.status == SubmitHandle.CANCELLED
+    assert job.cancelled and job in sched.active_jobs[0]
+    assert not lanes_all_free(sched)
+
+    srv.pump(30.0)
+    assert job not in sched.active_jobs[0]
+    assert lanes_all_free(sched)
+    assert job.finish_ms == pytest.approx(25.0)
+
+    m = srv.end_serving()
+    assert m.completed[LP] == 0 and m.cancelled[LP] == 1
+    assert sched.util_lp_active(0, 100.0) == 0.0
+
+
+def test_cancel_completed_job_is_noop():
+    srv = serving_server([make_spec("lp", LP, [10.0], 1000.0)])
+    h = srv.request("lp", at_ms=0.0)
+    srv.pump(20.0)
+    assert h.status == SubmitHandle.COMPLETED
+    srv.cancel(h, at_ms=21.0)
+    srv.pump(21.0)
+    m = srv.end_serving()
+    assert h.status == SubmitHandle.COMPLETED
+    assert m.cancelled == {HP: 0, LP: 0}
+    assert m.completed[LP] == 1
+
+
+def test_double_cancel_counts_once():
+    srv = serving_server([make_spec("hog", HP, [50.0], 1000.0),
+                          make_spec("lp", LP, [10.0], 1000.0)])
+    srv.request("hog", at_ms=0.0)
+    h = srv.request("lp", at_ms=5.0)
+    srv.pump(5.0)
+    srv.cancel(h, at_ms=6.0)
+    srv.cancel(h, at_ms=7.0)
+    m = srv.end_serving()
+    assert m.cancelled[LP] == 1
+
+
+# ------------------------------------------------- batched head members
+BATCH_LP = dict(batching=dict(max_batch=8, scope="task"))
+
+
+def _batched_setup(hog_ms):
+    """One lane, an HP hog pinning it, three same-task LP releases that
+    coalesce into a single queued stage-0 head of batch size 3."""
+    srv = serving_server(
+        [make_spec("hog", HP, [hog_ms], 1000.0),
+         make_spec("lp", LP, [10.0], 500.0)], **BATCH_LP)
+    srv.request("hog", at_ms=0.0)
+    handles = [srv.request("lp", at_ms=t) for t in (5.0, 6.0, 7.0)]
+    srv.pump(7.0)
+    jobs = [j for j in srv.scheduler.active_jobs[0]
+            if j.task.spec.name == "lp"]
+    assert len(jobs) == 1 and jobs[0].n_inputs == 3
+    return srv, handles, jobs[0]
+
+
+def test_cancel_batched_member_detaches_from_queued_head():
+    srv, (h0, h1, h2), job = _batched_setup(50.0)
+    sched = srv.scheduler
+    charge3 = sched.util_lp_active(0, 8.0)
+
+    srv.cancel(h1, at_ms=8.0)            # middle member
+    srv.pump(8.0)
+    assert h1.status == SubmitHandle.CANCELLED
+    assert job.n_inputs == 2
+    assert job.extra_release_ms == [7.0]
+    # the queued instance's batch cost shrank with the membership
+    inst = sched.queues[0].find_inst(job)
+    assert inst is not None
+    assert sched.util_lp_active(0, 8.5) < charge3
+
+    m = srv.end_serving()
+    assert h0.status == SubmitHandle.COMPLETED
+    assert h2.status == SubmitHandle.COMPLETED
+    assert m.completed[LP] == 1 and m.completed_inputs[LP] == 2
+    assert m.cancelled[LP] == 1
+    assert m.batch_hist.get(2) == 1
+
+
+def test_cancel_batched_primary_promotes_surviving_member():
+    """Cancelling the head's primary promotes the earliest surviving
+    member: new release time, re-anchored virtual deadline, smaller
+    batch — the batch itself survives."""
+    srv, (h0, h1, h2), job = _batched_setup(50.0)
+    sched = srv.scheduler
+
+    srv.cancel(h0, at_ms=8.0)            # the primary
+    srv.pump(8.0)
+    assert h0.status == SubmitHandle.CANCELLED
+    assert job.release_ms == 6.0         # earliest member took over
+    assert job.extra_release_ms == [7.0]
+    assert job.n_inputs == 2
+    inst = sched.queues[0].find_inst(job)
+    vdl0 = job.task.mret.virtual_deadlines(job.task.spec.deadline_ms)[0]
+    assert inst.virtual_deadline_ms == pytest.approx(6.0 + vdl0)
+
+    m = srv.end_serving()
+    assert h1.status == SubmitHandle.COMPLETED
+    assert h2.status == SubmitHandle.COMPLETED
+    assert m.completed[LP] == 1 and m.completed_inputs[LP] == 2
+    assert m.cancelled[LP] == 1
+
+
+def test_cancel_member_of_sealed_batch_drops_accounting_only():
+    """Once the batch is dispatched the member's work rides physically;
+    cancellation only removes it from the books: its handle terminates
+    cancelled, completion counts survivors only."""
+    srv, (h0, h1, h2), job = _batched_setup(20.0)
+    srv.pump(30.0)       # hog done at 20, batch hold expires, in flight
+    assert h0.status == SubmitHandle.RUNNING
+
+    srv.cancel(h1, at_ms=30.0)
+    srv.pump(30.0)
+    assert h1.status == SubmitHandle.CANCELLED
+    assert 6.0 in job.dropped_releases
+    assert job.n_inputs == 3             # physical membership unchanged
+
+    m = srv.end_serving()
+    assert h0.status == SubmitHandle.COMPLETED
+    assert h2.status == SubmitHandle.COMPLETED
+    assert m.completed[LP] == 1 and m.completed_inputs[LP] == 2
+    assert m.cancelled[LP] == 1
+    assert m.batch_hist.get(2) == 1      # survivors, not physical size
+
+
+def test_cancel_all_members_then_primary_retires_whole_job():
+    srv, (h0, h1, h2), job = _batched_setup(50.0)
+    for h, t in ((h1, 8.0), (h2, 9.0), (h0, 10.0)):
+        srv.cancel(h, at_ms=t)
+    srv.pump(10.0)
+    assert all(h.status == SubmitHandle.CANCELLED for h in (h0, h1, h2))
+    assert all(j.task.spec.name != "lp"
+               for j in srv.scheduler.active_jobs[0])
+    assert srv.scheduler.util_lp_active(0, 11.0) == 0.0
+    m = srv.end_serving()
+    assert m.completed[LP] == 0 and m.cancelled[LP] == 3
+
+
+# ---------------------------------------------------------- cluster path
+def test_cancel_on_cluster_device():
+    spec = make_spec("lp", LP, [20.0, 20.0], 1000.0)
+    srv = (ServerConfig.cluster(2)
+           .task(spec, arrival=ManualArrival())
+           .contexts(2).streams(1).oversubscribe(2.0)
+           .device(ideal_device()).horizon_ms(1e6)
+           .phase_offsets(False).noise(0.0).seed(0).build())
+    srv.begin_serving()
+    sched = srv.scheduler
+    h = srv.request("lp", at_ms=5.0)
+    srv.pump(5.0)
+    assert h.status == SubmitHandle.RUNNING
+    job = h.job
+
+    srv.cancel(h, at_ms=10.0)
+    srv.pump(60.0)
+    assert h.status == SubmitHandle.CANCELLED
+    assert all(not w.active_jobs[k] for w in sched.workers.values()
+               for k in w.active_jobs)
+    assert job.job_id not in sched._state_dev
+
+    m = srv.end_serving()
+    assert m.completed[LP] == 0 and m.cancelled[LP] == 1
+
+
+def test_cluster_cancel_absent_job():
+    spec = make_spec("lp", LP, [5.0], 1000.0)
+    srv = (ServerConfig.cluster(2)
+           .task(spec, arrival=ManualArrival())
+           .contexts(2).streams(1).oversubscribe(2.0)
+           .device(ideal_device()).horizon_ms(1e6)
+           .phase_offsets(False).noise(0.0).seed(0).build())
+    outcome, job = srv.scheduler.cancel_job(0, 123.0, now=0.0)
+    assert outcome == "absent" and job is None
+
+
+# ------------------------------------------- scheduler/queue primitives
+def _bare_sched(spec):
+    cfg = SchedulerConfig(n_contexts=1, n_streams=1, oversubscription=1.0)
+    return DarisScheduler([spec], cfg, device=ideal_device())
+
+
+def test_cancel_job_absent_and_find_job():
+    spec = make_spec("lp", LP, [10.0], 1000.0)
+    sched = _bare_sched(spec)
+    assert sched.cancel_job(0, 0.0, now=0.0) == ("absent", None)
+    job = sched.on_release(sched.tasks[0], 0.0)
+    assert job is not None
+    found, member = sched.find_job(sched.tasks[0].index, job.release_ms)
+    assert found is job and member is None
+    assert sched.find_job(sched.tasks[0].index, 999.0) == (None, None)
+
+
+def test_stage_queue_remove_preserves_pop_order():
+    """Surgical removal of an arbitrary queued instance must keep the
+    heap's pop order for everything else."""
+    spec = make_spec("lp", LP, [10.0], 1000.0)
+    sched = _bare_sched(spec)
+    q = sched.queues[0]
+    jobs = []
+    for i in range(6):
+        t = sched.tasks[0]
+        job = Job(task=t, release_ms=float(i), ctx=0)
+        vdls = t.mret.virtual_deadlines(t.spec.deadline_ms)
+        sched._enqueue_stage(job, float(i))
+        jobs.append(job)
+    victim = q.find_inst(jobs[3])
+    assert victim is not None and victim.job is jobs[3]
+    q.remove(victim)
+    assert q.find_inst(jobs[3]) is None
+    popped = []
+    while len(q) > 0:
+        inst = q.pop()
+        if inst is None:
+            break
+        popped.append(inst.job.release_ms)
+    assert popped == [0.0, 1.0, 2.0, 4.0, 5.0]
