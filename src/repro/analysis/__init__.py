@@ -1,0 +1,22 @@
+"""DSAN — the DARIS correctness-tooling subsystem.
+
+Three parts, each usable on its own:
+
+* ``sanitizer``  — opt-in runtime invariant auditor wired through the
+  EngineCore drive loop (``DARIS_SANITIZE=1`` or
+  ``ServerConfig.sanitize(level=...)``). Recomputes the scheduler's
+  hand-maintained incremental state from scratch at a configurable
+  cadence and raises a structured ``SanitizerViolation`` on divergence.
+* ``races``      — lock-ownership instrumentation for the serving daemon
+  asserting the single-owner pump-thread discipline, with a tsan-style
+  report (``RaceViolation``) when another thread touches engine state.
+* ``lint``       — AST-based repo-specific lint pass
+  (``python -m repro.analysis.lint src/``) plus ruff/mypy chaining.
+
+The sanitizer is zero-cost when disabled: the engine stores ``None`` and
+every hook site is a single ``is not None`` test — no dispatch, no
+allocation, no import of this package.
+"""
+from .sanitizer import Sanitizer, SanitizerViolation
+
+__all__ = ["Sanitizer", "SanitizerViolation"]

@@ -86,6 +86,7 @@ class ServerConfig:
         self._autoscale: Optional[AutoscalePolicy] = None
         self._batch_policy: Optional[BatchPolicy] = None
         self._record_decisions = False
+        self._sanitize = None
         self._input_hw = 64
         self._batch = 1
         self._input_factory = None
@@ -221,6 +222,17 @@ class ServerConfig:
         """Keep an ordered log of admit/reject/dispatch/finish decisions
         (the sim-vs-real parity contract)."""
         self._record_decisions = enabled
+        return self
+
+    def sanitize(self, level: int = 1, *,
+                 cadence: Optional[int] = None) -> "ServerConfig":
+        """Enable the DSAN invariant auditor (repro/analysis): level 1
+        audits every ``cadence`` engine steps (default 256), level >= 2
+        audits every step. Equivalent to running under
+        ``DARIS_SANITIZE=<level>``; violations raise
+        ``SanitizerViolation``."""
+        from .analysis.sanitizer import Sanitizer
+        self._sanitize = Sanitizer(level=level, cadence=cadence)
         return self
 
     # ------------------------------------------------------ faults/elastic
@@ -516,7 +528,8 @@ class DarisServer:
             self.scheduler, backend, horizon_ms=cfg._horizon_ms,
             seed=cfg._seed, arrivals=arrivals, fault_plan=cfg._fault_plan,
             autoscale=cfg._autoscale,
-            record_decisions=cfg._record_decisions)
+            record_decisions=cfg._record_decisions,
+            sanitize=cfg._sanitize)
 
     # ------------------------------------------------------------- serving
     def run(self) -> RunMetrics:

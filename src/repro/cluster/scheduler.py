@@ -296,7 +296,9 @@ class ClusterScheduler:
     def _move_task(self, task: Task, to_ctx: CtxKey) -> None:
         """Sticky cross-GPU migration: re-home the task (and its worker
         registration) onto ``to_ctx``'s device."""
-        self.workers[task.ctx[0]].tasks.remove(task)   # identity compare
+        # Task is eq=False: remove() degrades to an identity scan, which
+        # is exactly the intent here  # dsan: ignore[DSAN005]
+        self.workers[task.ctx[0]].tasks.remove(task)
         task.ctx = to_ctx
         self.workers[to_ctx[0]].tasks.append(task)
         self._migrations += 1

@@ -10,7 +10,7 @@ by the matching model builder.  Every config module in this package exposes
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

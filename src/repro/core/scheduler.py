@@ -514,10 +514,13 @@ class DarisScheduler:
         for jobs in self.active_jobs.values():
             for job in jobs:
                 if (job.task.index == task_index
+                        # stamp identity: the cancel echoes the exact
+                        # release float  # dsan: ignore[DSAN003]
                         and job.release_ms == release_ms):
                     return job, None
                 for i, (idx, rel) in enumerate(zip(job.extra_member_idx,
                                                    job.extra_release_ms)):
+                    # same stamp identity  # dsan: ignore[DSAN003]
                     if idx == task_index and rel == release_ms:
                         return job, i
         return None, None

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Optional
+from typing import List, Optional, Tuple
 
 from ..runtime.contention import batch_cost
 from .task import HP, StageInstance
@@ -39,7 +39,7 @@ class StageQueue:
 
     def __init__(self, qcfg: Optional[QueueConfig] = None):
         self.qcfg = qcfg or QueueConfig()
-        self._heap = []
+        self._heap: List[Tuple[tuple, StageInstance]] = []
 
     def push(self, inst: StageInstance) -> None:
         if inst.smret is None:

@@ -11,7 +11,10 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Optional
+from typing import List, Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:
+    from .mret import StageMret, TaskMret
 
 HP = 0   # high priority
 LP = 1   # low priority
@@ -63,7 +66,7 @@ class Task:
     ctx: int = -1                     # current context (ctx_i(t))
     fixed_ctx: bool = False           # HP tasks get fixed contexts
     # paper Eq. 1-2 estimators are attached by the scheduler (core.mret)
-    mret: Optional[object] = None
+    mret: Optional[TaskMret] = None
 
     @property
     def name(self) -> str:
@@ -149,7 +152,7 @@ class StageInstance:
     # b/g(b) are fixed for the instance's lifetime, and resolving them
     # through job -> task -> spec property chains per queued stage made
     # backlog_ms the hottest loop on overload runs
-    smret: Optional[object] = None    # core.mret.StageMret
+    smret: Optional[StageMret] = None
     cost_b: float = 1.0
     # inter-GPU migration charge (cluster layer): when this stage
     # dispatches on a different device than the one holding the job's

@@ -19,13 +19,10 @@ MODEL_FLOPS, so the roofline ratio exposes the padding waste honestly.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import encdec, transformer
 from ..configs.base import ArchConfig, ShapeCell

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from .attention import attention_block, init_attention, make_kv_cache
-from .layers import (InitCtx, dense_init, embed_init, init_mlp, layer_norm,
+from .layers import (InitCtx, embed_init, init_mlp, layer_norm,
                      mlp, ones_init, sinusoidal_positions, zeros_init)
 
 

@@ -26,6 +26,7 @@ import dataclasses
 import heapq
 import itertools
 import math
+import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -33,7 +34,7 @@ import numpy as np
 from ..core.metrics import RunMetrics, empty_metrics, tenant_stats
 from ..core.scheduler import DarisScheduler
 from ..core.task import HP, LP, Job, StageInstance, Task, TaskSpec
-from .arrivals import ArrivalProcess, PeriodicArrival
+from .arrivals import ArrivalProcess
 
 _seq = itertools.count()
 
@@ -50,6 +51,30 @@ _seq = itertools.count()
 RELEASE, CANCEL, FAULT, FAIL_DEV, ADD_CTX, RECONFIG, AUTOSCALE = range(7)
 
 _EPS = 1e-9
+
+
+def _resolve_sanitizer(sanitize):
+    """Normalize the ``sanitize`` knob to a Sanitizer instance or None.
+
+    Accepts None (defer to the ``DARIS_SANITIZE`` environment), bools,
+    an int level, or a pre-built ``analysis.Sanitizer``. The analysis
+    package is imported lazily and only when enabling — a disabled
+    engine never even loads it, and every hook site below is a single
+    ``is not None`` test (the zero-overhead contract)."""
+    if sanitize is None:
+        if os.environ.get("DARIS_SANITIZE", "") in ("", "0"):
+            return None
+        from ..analysis.sanitizer import Sanitizer
+        return Sanitizer.from_env()
+    if sanitize is False or sanitize == 0:
+        return None
+    if sanitize is True:
+        from ..analysis.sanitizer import Sanitizer
+        return Sanitizer()
+    if isinstance(sanitize, int):
+        from ..analysis.sanitizer import Sanitizer
+        return Sanitizer(level=sanitize)
+    return sanitize
 
 
 @dataclasses.dataclass
@@ -163,7 +188,8 @@ class EngineCore:
                  seed: int = 0,
                  fault_plan: Optional[FaultPlan] = None,
                  autoscale: Optional[AutoscalePolicy] = None,
-                 record_decisions: bool = False):
+                 record_decisions: bool = False,
+                 sanitize=None):
         self.sched = sched
         self.backend = backend
         self.horizon = horizon_ms
@@ -190,12 +216,18 @@ class EngineCore:
         # themselves forever, so idleness must not scan the heap for them
         self._work_events = 0
         self._ran = False
+        # DSAN invariant auditor (analysis/sanitizer.py); None when off —
+        # the hook sites below are then a bare attribute test
+        self._sanitizer = _resolve_sanitizer(sanitize)
 
     # ------------------------------------------------------------ plumbing
     def _push(self, t: float, kind: int, payload) -> None:
         if kind != AUTOSCALE:
             self._work_events += 1
-        heapq.heappush(self._timeline, (t, kind, next(_seq), payload))
+        entry = (t, kind, next(_seq), payload)
+        heapq.heappush(self._timeline, entry)
+        if self._sanitizer is not None:
+            self._sanitizer.note_push(t, kind, entry[2])
 
     def _log(self, msg: str) -> None:
         if self.decisions is not None:
@@ -336,9 +368,11 @@ class EngineCore:
                 self._on_completion(c)
         elif (self._timeline and t_evt <= self.horizon
               and now >= t_evt - 1e-6):
-            t, kind, _, payload = heapq.heappop(self._timeline)
+            t, kind, seq, payload = heapq.heappop(self._timeline)
             if kind != AUTOSCALE:
                 self._work_events -= 1
+            if self._sanitizer is not None:
+                self._sanitizer.note_pop(t, kind, seq, now)
             if kind == RELEASE:
                 self._handle_release(payload[0], payload[1], t, payload[2])
             elif kind == CANCEL:
@@ -364,6 +398,8 @@ class EngineCore:
                                    if self._timeline else math.inf)
         self._dispatch()
         self.backend.running_set_changed()
+        if self._sanitizer is not None:
+            self._sanitizer.after_step(self)
         return True
 
     def _finalize(self) -> RunMetrics:
@@ -408,6 +444,8 @@ class EngineCore:
             # not the observation window: rate metrics (jps) divide by the
             # time actually served
             self.metrics.horizon_ms = max(end_ms, _EPS)
+        if self._sanitizer is not None:
+            self._sanitizer.on_finalize(self)
         self.backend.stop()
         return self.metrics
 
@@ -447,6 +485,11 @@ class EngineCore:
                 if job.start_ms is not None:
                     handle.status = SubmitHandle.RUNNING
                 self._job_handles.setdefault(job.job_id, []).append(handle)
+        if self._sanitizer is not None:
+            outcome = ("rejected" if job is None else
+                       "coalesced" if self.sched.coalesced > pre_coalesced
+                       else "admitted")
+            self._sanitizer.note_release(task.priority, outcome)
         if proc is not None:
             nxt, skipped = proc.next_after(sched_t, now)
             if skipped:
@@ -470,6 +513,8 @@ class EngineCore:
             handle.status = SubmitHandle.CANCELLED
             self.metrics.cancelled[p] += 1
             self._log(f"cancel {handle.task.name} (unreleased)")
+            if self._sanitizer is not None:
+                self._sanitizer.note_cancel("cancelled", p, False)
             return "cancelled"
         outcome, job = self.sched.cancel_job(
             handle.task.index, handle.release_ms, now)
@@ -483,6 +528,9 @@ class EngineCore:
                 self.backend.on_job_done(job)
                 self._job_handles.pop(job.job_id, None)
             self._log(f"cancel {handle.task.name} ({outcome})")
+            if self._sanitizer is not None:
+                self._sanitizer.note_cancel(outcome, p,
+                                            outcome == "cancelled")
         else:
             self._log(f"cancel {handle.task.name} ({outcome})")
         return outcome
@@ -587,6 +635,8 @@ class EngineCore:
         if done is None:
             return
         self.backend.on_job_done(done)
+        if self._sanitizer is not None:
+            self._sanitizer.note_job_done(done)
         handles = self._job_handles.pop(done.job_id, None)
         if done.cancelled:
             # in-flight cancel retired at this stage boundary: the cancel

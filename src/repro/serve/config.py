@@ -25,7 +25,7 @@ as self-releasing periodic load behind the served traffic.
 from __future__ import annotations
 
 import json
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from ..api import DarisServer, ManualArrival, ServerConfig
 from ..core.task import HP, LP, TaskSpec
@@ -61,7 +61,7 @@ def _task_specs(cfg: Dict) -> List[Dict]:
     return out
 
 
-def build_server(cfg: Dict, *, arrivals: Dict[str, object] = None
+def build_server(cfg: Dict, *, arrivals: Optional[Dict[str, object]] = None
                  ) -> DarisServer:
     """Build the serving engine a config describes. ``arrivals`` swaps in
     replacement arrival processes by task name (the journal replayer's
@@ -96,4 +96,13 @@ def build_server(cfg: Dict, *, arrivals: Dict[str, object] = None
                     scope=b.get("scope", "model"))
     if "sched" in cfg:
         sc.scheduler_options(**cfg["sched"])
+    s = cfg.get("sanitize")
+    if s:
+        # {"sanitize": 2} or {"sanitize": {"level": 1, "cadence": 64}};
+        # the DARIS_SANITIZE env var still applies when the key is absent
+        if isinstance(s, dict):
+            sc.sanitize(level=int(s.get("level", 1)),
+                        cadence=s.get("cadence"))
+        else:
+            sc.sanitize(level=int(s))
     return sc.build()

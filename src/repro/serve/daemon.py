@@ -84,6 +84,11 @@ class ServeDaemon:
         self._term = False             # signal flag (checkpoint + exit)
         self._sock: Optional[socket.socket] = None
         self.final_metrics = None
+        # DSAN race guard (analysis/races.py): installed by run() on the
+        # pump thread when sanitizing — construction-time work above
+        # (build_server/load_state) legally ran on the constructing
+        # thread, which may differ
+        self.race_guard = None
 
     # -------------------------------------------------------------- clock
     def _wall_virtual(self) -> float:
@@ -104,6 +109,13 @@ class ServeDaemon:
     def run(self) -> None:
         """Serve until ``drain``/``shutdown``/SIGTERM. Blocks; call from
         the process main thread (signal handlers are installed there)."""
+        if self.cfg.get("sanitize") or \
+                os.environ.get("DARIS_SANITIZE", "") not in ("", "0"):
+            # the caller of run() IS the pump thread: bind ownership here
+            # so every scheduler-mutating server call off this thread
+            # raises a tsan-style RaceViolation
+            from ..analysis.races import ThreadAffinityGuard
+            self.race_guard = ThreadAffinityGuard(self.server).install()
         self.server.begin_serving()
         self._resubmit_pending()
         try:

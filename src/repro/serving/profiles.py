@@ -21,8 +21,7 @@ blocks' relative FLOPs (approximate, stated per stage below).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List
+from typing import List
 
 from ..core.task import StageProfile, TaskSpec
 from ..runtime.contention import DeviceModel, speedup_curve

@@ -10,7 +10,7 @@ from __future__ import annotations
 from typing import List
 
 from ..core.task import HP, LP, TaskSpec
-from .profiles import TABLE1, make_task
+from .profiles import make_task
 
 TABLE2 = {
     "resnet18": (17, 34, 30.0),

@@ -9,7 +9,7 @@ target partition's sharding (DESIGN.md §2).
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 import jax
 import jax.numpy as jnp

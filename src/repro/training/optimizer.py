@@ -11,7 +11,7 @@ round-trip cast each step).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ one-microbatch sized.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

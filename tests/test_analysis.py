@@ -1,0 +1,321 @@
+"""DSAN correctness tooling: custom lint rules against known-bad
+snippets, sanitizer engagement/zero-overhead/corruption-detection, the
+event-order legality model, violation report artifacts, and the daemon
+race detector (injected cross-thread mutation + clean normal lane)."""
+from __future__ import annotations
+
+import json
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import Sanitizer, SanitizerViolation
+from repro.analysis.lint import check_source
+from repro.analysis.races import RaceViolation, ThreadAffinityGuard
+from repro.api import HP, LP, ServerConfig
+
+from tests.test_serve import (daemon_cfg, ideal_device, make_spec,
+                              serving_server, start_daemon)
+
+
+def _rules(src):
+    return [f.rule for f in check_source(textwrap.dedent(src))]
+
+
+# ------------------------------------------------------- custom lint rules
+def test_lint_memo_mutation_without_invalidate_flagged():
+    bad = """
+    def restore(self, values):
+        self.window.clear()
+        self.window.extend(values)
+    """
+    assert _rules(bad) == ["DSAN001", "DSAN001"]
+
+
+def test_lint_memo_mutation_with_invalidate_clean():
+    good = """
+    def restore(self, values):
+        self.window.clear()
+        self.window.extend(values)
+        self.invalidate()
+    """
+    ok2 = """
+    def observe(self, et_ms):
+        self.window.append(et_ms)
+        self._value = None
+    """
+    assert _rules(good) == [] and _rules(ok2) == []
+
+
+def test_lint_identity_dataclass_as_value_key_flagged():
+    assert _rules("table[Job(task, 0.0)] = 1\n") == ["DSAN002"]
+    assert _rules("x = Task(spec, 0) in sched.tasks\n") == ["DSAN002"]
+    # looking up by an existing identity is fine
+    assert _rules("table[job] = 1\nx = job in sched.tasks\n") == []
+
+
+def test_lint_float_eq_on_time_quantity_flagged():
+    assert _rules("if a.release_ms == b.release_ms:\n    pass\n") \
+        == ["DSAN003"]
+    assert _rules("if util == 0.5:\n    pass\n") == ["DSAN003"]
+    # None/str state checks are not float comparisons
+    assert _rules("if job.finish_ms == None:\n    pass\n") == []
+    assert _rules("ok = status == 'missed'\n") == []
+
+
+def test_lint_wall_clock_in_deterministic_path_flagged():
+    src = "import time\nnow = time.time()\n"
+    bad = check_source(src, path="src/repro/core/scheduler.py")
+    assert [f.rule for f in bad] == ["DSAN004"]
+    # the serve daemon is wall-clock by design: out of scope
+    assert check_source(src, path="src/repro/serve/daemon.py") == []
+
+
+def test_lint_bare_remove_on_identity_collection_flagged():
+    assert _rules("self.tasks.remove(task)\n") == ["DSAN005"]
+    assert _rules("w.jobs.remove(job)\n") == ["DSAN005"]
+    assert _rules("free.remove(lane)\n") == []
+
+
+def test_lint_suppression_same_line_and_line_above():
+    assert _rules(
+        "self.tasks.remove(task)  # dsan: ignore[DSAN005]\n") == []
+    assert _rules(
+        "# identity scan on purpose  # dsan: ignore[DSAN005]\n"
+        "self.tasks.remove(task)\n") == []
+    assert _rules("self.tasks.remove(task)  # dsan: ignore\n") == []
+    # suppressing a DIFFERENT rule does not silence this one
+    assert _rules(
+        "self.tasks.remove(task)  # dsan: ignore[DSAN003]\n") \
+        == ["DSAN005"]
+
+
+def test_lint_src_tree_is_clean():
+    """The shipping tree must satisfy its own lint gate (CI runs the
+    same command with ruff/mypy chained)."""
+    from repro.analysis.lint import main
+    assert main(["src", "--no-tools"]) == 0
+
+
+# --------------------------------------------------- sanitizer activation
+def _tiny_server(sanitize_level=None, horizon=400.0):
+    sc = ServerConfig.sim().horizon_ms(horizon)
+    sc.task(make_spec("hp", HP, [5.0], 50.0))
+    sc.task(make_spec("lp", LP, [8.0, 8.0], 100.0))
+    sc.device(ideal_device()).contexts(2).streams(1).oversubscribe(2.0)
+    sc.phase_offsets(False).noise(0.0).seed(0)
+    if sanitize_level is not None:
+        sc.sanitize(level=sanitize_level)
+    return sc.build()
+
+
+def test_sanitizer_disabled_is_zero_overhead(monkeypatch):
+    """The zero-cost contract: a non-sanitizing engine stores None and
+    never dispatches a hook."""
+    monkeypatch.delenv("DARIS_SANITIZE", raising=False)
+    srv = _tiny_server()
+    assert srv.core._sanitizer is None
+    srv.run()
+    assert srv.core._sanitizer is None
+
+
+def test_sanitizer_env_activation(monkeypatch):
+    monkeypatch.setenv("DARIS_SANITIZE", "2")
+    srv = _tiny_server()
+    s = srv.core._sanitizer
+    assert isinstance(s, Sanitizer)
+    assert s.level == 2 and s.cadence == 1
+    srv.run()
+    assert s.audits > 0 and s.violations == 0
+    monkeypatch.setenv("DARIS_SANITIZE", "0")
+    assert _tiny_server().core._sanitizer is None
+
+
+def test_sanitizer_config_activation_and_clean_run():
+    srv = _tiny_server(sanitize_level=2)
+    m = srv.run()
+    s = srv.core._sanitizer
+    assert s.audits == s.steps + 1          # every step + finalize
+    assert s.violations == 0
+    assert sum(m.completed.values()) > 0
+
+
+def test_sanitized_run_is_bit_identical():
+    """Auditing must not perturb the run: identical metrics with the
+    sanitizer on and off (the goldens assert the same at suite level)."""
+    m0 = _tiny_server().run()
+    m1 = _tiny_server(sanitize_level=2).run()
+    assert m0.completed == m1.completed
+    assert m0.missed == m1.missed
+    assert m0.response_ms == m1.response_ms   # exact float lists
+
+
+def test_sanitizer_catches_stale_mret_memo():
+    """A stale memo between audits is caught at the next audit. The
+    poison is injected inside after_step (right before the audit) —
+    injecting it mid-step would let a same-step ``observe`` legally
+    invalidate-and-heal it first."""
+    srv = _tiny_server(sanitize_level=2)
+    san = srv.core._sanitizer
+    t = srv.scheduler.tasks[0]
+    orig = san.after_step
+
+    def poisoned(engine):
+        if san.steps == 9 and t.mret is not None:
+            t.mret.stages[0]._value = 777.0   # memo != window
+        orig(engine)
+
+    san.after_step = poisoned
+    with pytest.raises(SanitizerViolation) as ei:
+        srv.run()
+    assert ei.value.check in ("mret-stage-memo", "eq11-hp-utilization",
+                              "eq12-lp-utilization")
+    assert ei.value.cursor["steps"] >= 10
+
+
+def test_sanitizer_catches_lanemap_corruption():
+    """Dropping an empty live lane from the free index (the classic
+    lost-lane leak: the lane never dispatches again) is caught at the
+    next audit."""
+    srv = _tiny_server(sanitize_level=2)
+    san = srv.core._sanitizer
+    lanes = srv.scheduler.lanes
+    orig = san.after_step
+
+    def poisoned(engine):
+        if san.steps >= 9 and lanes._free:
+            lanes._free.discard(next(iter(lanes._free)))
+        orig(engine)
+
+    san.after_step = poisoned
+    with pytest.raises(SanitizerViolation) as ei:
+        srv.run()
+    assert ei.value.check == "lanemap-free-index"
+
+
+def test_sanitizer_catches_conservation_drift():
+    srv = _tiny_server(sanitize_level=2)
+    orig = srv.core._step
+    calls = [0]
+
+    def corrupting(*a, **kw):
+        calls[0] += 1
+        if calls[0] == 10:
+            srv.core.metrics.completed[LP] += 1   # phantom completion
+        return orig(*a, **kw)
+
+    srv.core._step = corrupting
+    with pytest.raises(SanitizerViolation) as ei:
+        srv.run()
+    assert ei.value.check == "metrics-completed-mirror"
+
+
+def test_violation_report_written_as_artifact(tmp_path):
+    s = Sanitizer(level=2, report_dir=str(tmp_path))
+    with pytest.raises(SanitizerViolation):
+        # note_pop with t far beyond now: event fired before its time
+        s.note_pop(1000.0, 0, 0, now=0.0)
+    reports = list(tmp_path.glob("dsan-*.json"))
+    assert len(reports) == 1
+    payload = json.loads(reports[0].read_text())
+    assert payload["check"] == "event-never-early"
+    assert payload["cursor"]["pops"] == 1
+
+
+# ------------------------------------------------- event-order legality
+def test_event_order_backdated_open_loop_push_is_legal():
+    """PoissonArrival pushes past-due successors (open loop): a pop of a
+    SMALLER key is legal when the entry was pushed after the larger key
+    was already popped."""
+    s = Sanitizer(level=1)
+    s.note_push(10.0, 0, 1)
+    s.note_pop(10.0, 0, 1, now=10.0)       # pop t=10
+    s.note_push(3.0, 0, 2)                 # back-dated successor
+    s.note_pop(3.0, 0, 2, now=10.0)        # legal: pushed after the pop
+    assert s.violations == 0
+
+
+def test_event_order_heap_violation_caught():
+    """Two entries queued together must pop in key order — same-instant
+    kind priority (RELEASE before CANCEL before FAULT) included."""
+    s = Sanitizer(level=1)
+    s.note_push(5.0, 2, 1)                 # FAULT@5
+    s.note_push(5.0, 0, 2)                 # RELEASE@5 — must pop first
+    s.note_pop(5.0, 2, 1, now=5.0)         # FAULT popped first: illegal
+    with pytest.raises(SanitizerViolation) as ei:
+        s.note_pop(5.0, 0, 2, now=5.0)
+    assert ei.value.check == "event-order"
+
+
+# ----------------------------------------------------- daemon race guard
+def test_race_guard_catches_cross_thread_mutation():
+    """Acceptance: a deliberately-injected cross-thread scheduler
+    mutation raises a tsan-style report."""
+    srv = serving_server([make_spec("lp", LP, [10.0], 1000.0)])
+    guard = ThreadAffinityGuard(srv).install()    # owner: this thread
+    srv.request("lp", at_ms=0.0)                  # owner calls pass
+    srv.pump(0.0)
+
+    caught = []
+
+    def off_thread():
+        try:
+            srv.pump(50.0)                        # scheduler mutation
+        except RaceViolation as e:
+            caught.append(e)
+
+    th = threading.Thread(target=off_thread)
+    th.start()
+    th.join()
+    assert len(caught) == 1
+    report = caught[0].report
+    assert "data race on scheduler/engine state" in report
+    assert "pump" in report and "single-owner" in report
+    assert guard.violations == [report]
+
+    guard.uninstall()                             # pristine instance again
+    t2 = threading.Thread(target=lambda: srv.pump(60.0))
+    t2.start()
+    t2.join()
+    srv.end_serving()
+
+
+def test_race_guard_daemon_normal_lane_clean(tmp_path):
+    """The guard rides a real daemon (config-enabled) without tripping:
+    handler threads funnel through the command queue, so every guarded
+    call lands on the pump thread."""
+    d, th, c = start_daemon(
+        tmp_path, cfg=daemon_cfg(sanitize={"level": 1, "cadence": 64}),
+        time_scale=200.0, tick_ms=1.0)
+    assert c.ping()["ok"]
+    s0 = c.submit("resnet18", tenant="a")
+    c.result(s0["seq"], timeout_s=30.0)
+    assert c.stats()["ok"]
+    # guard is installed and bound to the pump thread, not ours
+    assert d.race_guard is not None
+    assert d.race_guard.owner is th
+    # injected violation from the client thread is caught...
+    with pytest.raises(RaceViolation):
+        d.server.pump(1.0)
+    # ...and the daemon itself never tripped it
+    assert d.race_guard.violations == [d.race_guard.violations[0]]
+    out = c.drain()
+    th.join(timeout=10.0)
+    assert out["lost"] == []
+    assert len(d.race_guard.violations) == 1      # only our injection
+
+
+def test_daemon_sanitizer_via_config_runs_clean(tmp_path):
+    """ServeDaemon with {"sanitize": ...} builds a sanitizing engine;
+    a full submit/cancel/drain session audits clean."""
+    d, th, c = start_daemon(tmp_path, cfg=daemon_cfg(sanitize=2),
+                            time_scale=0.0, tick_ms=1.0)
+    san = d.server.core._sanitizer
+    assert isinstance(san, Sanitizer) and san.level == 2
+    s0 = c.submit("unet", tenant="a")
+    c.cancel(s0["seq"])
+    s1 = c.submit("resnet18", tenant="b")
+    c.drain()
+    th.join(timeout=10.0)
+    assert san.violations == 0 and san.audits > 0

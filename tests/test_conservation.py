@@ -1,0 +1,178 @@
+"""Metrics conservation laws across the nasty paths, audited live.
+
+Every scenario runs with the DSAN sanitizer at level 2 (audit every
+engine step), so the per-step conservation identities are asserted
+continuously by the auditor; the tests then assert the end-of-run laws
+explicitly: per priority and per tenant,
+
+    submitted == completed + missed + cancelled + rejected + pending
+
+where ``completed`` counts every finished job (missed ones included —
+soft real-time: a missed job still completed, so ``missed`` is a subset
+of ``completed``, not a disjoint term), and per device the completed/
+missed sums must reproduce the global counters.
+"""
+from __future__ import annotations
+
+from repro.api import (HP, LP, ManualArrival, ServerConfig, SubmitHandle)
+from repro.analysis import Sanitizer
+
+from tests.test_serve import (daemon_cfg, ideal_device, make_spec,
+                              start_daemon)
+
+
+def assert_conservation(m, handles):
+    """The full conservation lattice over finalized metrics + handles."""
+    for p in (HP, LP):
+        sub = [h for h in handles if h.task.priority == p]
+        by = {s: sum(1 for h in sub if h.status == s)
+              for s in ("completed", "missed", "cancelled", "rejected",
+                        "pending", "queued", "running")}
+        finished = by["completed"] + by["missed"]
+        pending = by["pending"] + by["queued"] + by["running"]
+        assert len(sub) == (finished + by["cancelled"] + by["rejected"]
+                            + pending)
+    pt = m.per_tenant or {}
+    for tenant, d in pt.items():
+        assert d["submitted"] == (d["completed"] + d["cancelled"]
+                                  + d["rejected"] + d["pending"]), tenant
+        assert d["missed"] <= d["completed"]
+    if m.per_device:
+        for p in (HP, LP):
+            assert sum(s["completed"][p]
+                       for s in m.per_device.values()) == m.completed[p]
+            assert sum(s["missed"][p]
+                       for s in m.per_device.values()) == m.missed[p]
+
+
+def _audited(m, srv):
+    s = srv.core._sanitizer
+    assert isinstance(s, Sanitizer) and s.violations == 0 and s.audits > 0
+    return m
+
+
+# ------------------------------------------------------- cancel-mid-batch
+def test_conservation_cancel_mid_batch():
+    """Batched head with members cancelled in every phase: one detached
+    while queued, one dropped after the batch sealed, the primary of a
+    second batch cancelled outright."""
+    sc = ServerConfig.sim().sanitize(level=2)
+    sc.task(make_spec("hog", HP, [30.0], 1000.0), arrival=ManualArrival())
+    sc.task(make_spec("lp", LP, [10.0], 500.0), arrival=ManualArrival())
+    sc.contexts(1).streams(1).oversubscribe(1.0).device(ideal_device())
+    sc.horizon_ms(1e6).phase_offsets(False).noise(0.0).seed(0)
+    sc.batching(max_batch=8, scope="task")
+    srv = sc.build()
+    srv.begin_serving()
+
+    srv.request("hog", at_ms=0.0, tenant="ops")
+    batch = [srv.request("lp", at_ms=t, tenant="batchers")
+             for t in (5.0, 6.0, 7.0)]
+    srv.pump(7.0)
+    # member detaches while the head is queued behind the hog
+    srv.cancel(batch[1], at_ms=8.0)
+    srv.pump(8.0)
+    assert batch[1].status == SubmitHandle.CANCELLED
+    # batch seals at 30 (hog done); drop a member mid-flight
+    srv.pump(31.0)
+    srv.cancel(batch[2], at_ms=32.0)
+    srv.pump(32.0)
+    # a second batch whose PRIMARY is cancelled before dispatch
+    second = [srv.request("lp", at_ms=t, tenant="batchers")
+              for t in (33.0, 34.0)]
+    srv.pump(34.0)
+    srv.cancel(second[0], at_ms=35.0)
+    srv.pump(35.0)
+
+    m = _audited(srv.end_serving(), srv)
+    handles = srv.core._all_handles
+    assert_conservation(m, handles)
+    assert batch[0].status in (SubmitHandle.COMPLETED, SubmitHandle.MISSED)
+    assert m.cancelled[LP] == 3
+    assert m.per_tenant["batchers"]["cancelled"] == 3
+
+
+# --------------------------------------------------- fault-then-reconfigure
+def test_conservation_fault_then_reconfigure():
+    """A context dies with work queued on it, then an online repartition
+    reshapes the surviving geometry — orphans must re-home twice without
+    double-counting or leaking."""
+    sc = ServerConfig.sim().sanitize(level=2)
+    sc.task(make_spec("hp", HP, [5.0], 40.0))
+    sc.task(make_spec("lp0", LP, [8.0, 8.0], 120.0))
+    sc.task(make_spec("lp1", LP, [6.0, 6.0], 100.0))
+    sc.contexts(2).streams(2).oversubscribe(2.0).device(ideal_device())
+    sc.horizon_ms(800.0).phase_offsets(False).noise(0.0).seed(0)
+    sc.fail_context_at(1, 200.0)
+    sc.reconfigure_at(400.0, n_contexts=3, n_streams=1)
+    srv = sc.build()
+    # tenanted one-shots ride alongside the periodic load
+    extra = [srv.submit(make_spec(f"x{i}", LP, [7.0], 150.0),
+                        at_ms=150.0 + 10.0 * i, tenant="burst")
+             for i in range(4)]
+    m = _audited(srv.run(), srv)
+    assert m.faults == 1 and m.reconfigures == 1
+    assert_conservation(m, srv.core._all_handles)
+    assert all(h.done or h.status in (SubmitHandle.QUEUED,
+                                      SubmitHandle.RUNNING)
+               for h in extra)
+
+
+# ------------------------------- cluster fail_device, in-flight transfers
+def test_conservation_cluster_fail_device_with_transfers():
+    """Kill a device while multi-stage jobs hold inter-stage state on it:
+    survivors re-place, replayed stages pay the transfer charge, and
+    every counter still adds up globally and per device."""
+    sc = (ServerConfig.cluster(2, transfer_ms=1.5).sanitize(level=2)
+          .contexts(2).streams(1).oversubscribe(2.0)
+          .device(ideal_device()).horizon_ms(600.0)
+          .phase_offsets(False).noise(0.0).seed(0))
+    sc.task(make_spec("hp", HP, [4.0], 50.0))
+    sc.task(make_spec("lpa", LP, [10.0, 10.0], 90.0))
+    sc.task(make_spec("lpb", LP, [8.0, 8.0], 80.0))
+    sc.fail_device_at(1, 100.0)
+    srv = sc.build()
+    subs = [srv.submit(make_spec(f"s{i}", LP, [9.0, 9.0], 140.0),
+                       at_ms=90.0 + 2.0 * i, tenant="inflight")
+            for i in range(3)]
+    m = _audited(srv.run(), srv)
+    assert m.per_device and set(m.per_device) == {0, 1}
+    assert_conservation(m, srv.core._all_handles)
+    # the fault really stranded inter-stage state: at least one survivor
+    # paid the cross-device transfer charge (deterministic under seed 0)
+    assert m.faults == 1 and m.transfers >= 1
+    assert sum(m.completed.values()) > 0
+    assert all(h.done or h.status in (SubmitHandle.QUEUED,
+                                      SubmitHandle.RUNNING)
+               for h in subs)
+
+
+# ------------------------------------------- SIGTERM-restart resubmission
+def test_conservation_sigterm_restart_resubmission(tmp_path):
+    """Daemon dies by SIGTERM with acked-but-unfinished work; the restart
+    resubmits under original identities and the final run's books must
+    balance — the restart engine is sanitized end to end."""
+    cfg = daemon_cfg(sanitize=2)
+    d1, th1, c1 = start_daemon(tmp_path, name="d1", cfg=cfg,
+                               time_scale=1e-7)
+    seqs = [c1.submit("resnet18", tenant="teamA")["seq"]
+            for _ in range(3)]
+    seqs.append(c1.submit("unet", tenant="teamB")["seq"])
+    d1._on_signal(None, None)
+    th1.join(timeout=10.0)
+    assert not th1.is_alive()
+    assert d1.server.core._sanitizer.violations == 0
+
+    d2, th2, c2 = start_daemon(tmp_path, name="d2", cfg=cfg,
+                               time_scale=500.0)
+    for seq in seqs:
+        r = c2.result(seq, timeout_s=30.0)
+        assert r["status"] in ("completed", "missed")
+    fin = c2.drain()
+    th2.join(timeout=10.0)
+    assert fin["lost"] == []
+    m = _audited(d2.final_metrics, d2.server)
+    assert_conservation(m, d2.server.core._all_handles)
+    pt = m.per_tenant
+    assert pt["teamA"]["submitted"] == 3 and pt["teamB"]["submitted"] == 1
+    assert pt["teamA"]["completed"] == 3 and pt["teamB"]["completed"] == 1
