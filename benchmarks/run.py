@@ -33,6 +33,7 @@ FIGURES = [
     ("fig11", "benchmarks.fig11_overload"),
     ("fig12", "benchmarks.fig12_elastic"),
     ("fig13", "benchmarks.fig13_cluster"),
+    ("fig14", "benchmarks.fig14_chaos"),
     ("baselines", "benchmarks.baselines"),
 ]
 

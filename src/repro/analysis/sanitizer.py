@@ -53,17 +53,18 @@ from ..core.stage_queue import stage_level
 from ..core.task import HP, LP
 from ..core.metrics import tenant_stats
 from ..runtime.contention import batch_cost
-from ..runtime.engine_core import AUTOSCALE, SubmitHandle
+from ..runtime.engine_core import _NON_WORK, SubmitHandle
 
 _KIND_NAMES = ("RELEASE", "CANCEL", "FAULT", "FAIL_DEV", "ADD_CTX",
-               "RECONFIG", "AUTOSCALE")
+               "RECONFIG", "AUTOSCALE", "RETRY", "WATCHDOG", "CHAOS",
+               "DEGRADE")
 # the engine's own never-early tolerance (engine_core._step pop condition)
 _EARLY_SLACK_MS = 1e-6
 
 _HANDLE_STATUSES = frozenset((
     SubmitHandle.PENDING, SubmitHandle.REJECTED, SubmitHandle.QUEUED,
     SubmitHandle.RUNNING, SubmitHandle.COMPLETED, SubmitHandle.MISSED,
-    SubmitHandle.CANCELLED))
+    SubmitHandle.CANCELLED, SubmitHandle.ABORTED))
 
 
 def _differs(expected: float, actual: float) -> bool:
@@ -147,6 +148,9 @@ class Sanitizer:
         self.completed: Dict[int, int] = {HP: 0, LP: 0}
         self.retired: Dict[int, int] = {HP: 0, LP: 0}   # whole-job cancels
         self.cancelled_subs: Dict[int, int] = {HP: 0, LP: 0}
+        # chaos-layer give-ups (engine _abort_job): a fourth terminal
+        # bucket in the job-conservation law
+        self.aborted: Dict[int, int] = {HP: 0, LP: 0}
 
     @classmethod
     def from_env(cls) -> Optional["Sanitizer"]:
@@ -250,10 +254,15 @@ class Sanitizer:
 
     def note_cancel(self, outcome: str, priority: int,
                     job_retired: bool) -> None:
+        # "shed" (degradation-controller emergency cancel of a handle-less
+        # job) retires the job without any client submission to count
         if outcome in ("cancelled", "cancelling", "detached", "dropped"):
             self.cancelled_subs[priority] += 1
         if job_retired:
             self.retired[priority] += 1    # queued whole-job retirement
+
+    def note_abort(self, priority: int) -> None:
+        self.aborted[priority] += 1
 
     def after_step(self, engine) -> None:
         self.steps += 1
@@ -465,7 +474,17 @@ class Sanitizer:
                         f"finished job of {job.task.name} still active "
                         f"on {k}", engine=engine)
                 where = places.get(id(job), [])
-                if len(where) != 1:
+                if job.job_id in engine._retry_wait:
+                    # parked between a transient stage fault and its
+                    # RETRY event: the job legally has NO live instance
+                    # (the pending RETRY is its work token)
+                    if where:
+                        self._fail(
+                            "active-jobs-retry-wait",
+                            f"retry-waiting job of {job.task.name} still "
+                            f"has live stage instance(s) at {where}",
+                            expected=0, actual=where, engine=engine)
+                elif len(where) != 1:
                     self._fail(
                         "active-jobs-instance-count",
                         f"active job of {job.task.name} (stage "
@@ -562,13 +581,13 @@ class Sanitizer:
                     f"engine timeline heap property broken at index {i}",
                     expected=f">= {tl[(i - 1) // 2][:3]}",
                     actual=tl[i][:3], engine=engine)
-        n_work = sum(1 for e in tl if e[1] != AUTOSCALE)
+        n_work = sum(1 for e in tl if e[1] not in _NON_WORK)
         if n_work != engine._work_events:
             self._fail(
                 "timeline-work-count",
                 "engine _work_events counter diverges from the pending "
-                "non-AUTOSCALE timeline entries (idle detection would "
-                "stall or finish early)", expected=n_work,
+                "work-representing timeline entries (idle detection "
+                "would stall or finish early)", expected=n_work,
                 actual=engine._work_events, engine=engine)
 
     # ---- backend <-> scheduler sync ------------------------------------
@@ -652,14 +671,22 @@ class Sanitizer:
                 live[j.task.priority] += 1
         m = engine.metrics
         for p, name in ((HP, "HP"), (LP, "LP")):
-            want = self.completed[p] + self.retired[p] + live[p]
+            want = (self.completed[p] + self.retired[p] + self.aborted[p]
+                    + live[p])
             if self.admitted[p] != want:
                 self._fail(
                     "job-conservation",
                     f"{name}: admitted != completed + cancelled-retired "
-                    f"+ live ({self.completed[p]} + {self.retired[p]} + "
-                    f"{live[p]}) — a job leaked or retired twice",
+                    f"+ aborted + live ({self.completed[p]} + "
+                    f"{self.retired[p]} + {self.aborted[p]} + {live[p]}) "
+                    f"— a job leaked or retired twice",
                     expected=want, actual=self.admitted[p], engine=engine)
+            if m.aborted[p] != self.aborted[p]:
+                self._fail(
+                    "metrics-aborted-mirror",
+                    f"{name}: engine metrics.aborted diverges from the "
+                    f"abort hook count", expected=self.aborted[p],
+                    actual=m.aborted[p], engine=engine)
             if m.completed[p] != self.completed[p]:
                 self._fail(
                     "metrics-completed-mirror",
@@ -708,13 +735,13 @@ class Sanitizer:
         stats = tenant_stats(engine._all_handles)
         for tenant, d in stats.items():
             whole = (d["completed"] + d["cancelled"] + d["rejected"]
-                     + d["pending"])
+                     + d["aborted"] + d["pending"])
             if d["submitted"] != whole:
                 self._fail(
                     "tenant-conservation",
                     f"tenant {tenant!r}: submitted != completed + "
-                    f"cancelled + rejected + pending", expected=whole,
-                    actual=d["submitted"], engine=engine)
+                    f"cancelled + rejected + aborted + pending",
+                    expected=whole, actual=d["submitted"], engine=engine)
 
     # ---- finalize-only --------------------------------------------------
     def _check_final_metrics(self, engine) -> None:

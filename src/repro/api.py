@@ -37,6 +37,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
+from .chaos.plan import (Brownout, ChaosPlan, DegradationPolicy,
+                         RetryPolicy)
 from .core.batching import BatchPolicy
 from .core.metrics import RunMetrics
 from .core.scheduler import DarisScheduler, SchedulerConfig
@@ -51,6 +53,7 @@ from .runtime.engine_core import (AutoscalePolicy, Completion, EngineCore,
 __all__ = [
     "ServerConfig", "DarisServer", "FaultPlan", "AutoscalePolicy",
     "SubmitHandle",
+    "ChaosPlan", "RetryPolicy", "DegradationPolicy", "Brownout",
     "ArrivalProcess", "ManualArrival", "PeriodicArrival", "PoissonArrival",
     "TraceArrival",
     "ExecutionBackend", "SimBackend", "RealtimeBackend",
@@ -87,6 +90,7 @@ class ServerConfig:
         self._batch_policy: Optional[BatchPolicy] = None
         self._record_decisions = False
         self._sanitize = None
+        self._chaos_plan: Optional[ChaosPlan] = None
         self._input_hw = 64
         self._batch = 1
         self._input_factory = None
@@ -236,6 +240,26 @@ class ServerConfig:
         return self
 
     # ------------------------------------------------------ faults/elastic
+    def chaos(self, plan: Optional[ChaosPlan] = None,
+              **kw) -> "ServerConfig":
+        """Install seeded transient-fault injection + recovery
+        (repro.chaos): pass a built ``ChaosPlan`` or its fields as
+        keyword arguments —
+
+            .chaos(seed=1, stage_fault_rate=0.01,
+                   retry=RetryPolicy(max_attempts=3),
+                   degradation=DegradationPolicy(),
+                   watchdog_kappa=6.0)
+
+        Chaos draws use the plan's own RNG streams, never the simulation
+        stream: a server built without ``.chaos(...)`` is bit-identical
+        to one that never imported the chaos layer."""
+        if plan is not None and kw:
+            raise ValueError("chaos(): pass a ChaosPlan OR field kwargs, "
+                             "not both")
+        self._chaos_plan = plan if plan is not None else ChaosPlan(**kw)
+        return self
+
     def fault_plan(self, fp: FaultPlan) -> "ServerConfig":
         self._fault_plan = fp
         return self
@@ -529,7 +553,7 @@ class DarisServer:
             seed=cfg._seed, arrivals=arrivals, fault_plan=cfg._fault_plan,
             autoscale=cfg._autoscale,
             record_decisions=cfg._record_decisions,
-            sanitize=cfg._sanitize)
+            sanitize=cfg._sanitize, chaos=cfg._chaos_plan)
 
     # ------------------------------------------------------------- serving
     def run(self) -> RunMetrics:
@@ -606,7 +630,8 @@ class DarisServer:
                 "each device's state via its worker schedulers, or run "
                 "single-GPU servers for save/restore workflows")
         from .checkpoint import save_scheduler_state
-        return save_scheduler_state(self.scheduler, path)
+        return save_scheduler_state(self.scheduler, path,
+                                    chaos=self.core._chaos)
 
     def load_state(self, path: str) -> None:
         """Restore scheduler state saved by ``save_state`` (call before

@@ -1,0 +1,9 @@
+"""Chaos layer: seeded fault injection + recovery policies (PR 8)."""
+from .plan import (BROWNOUT, EMERGENCY, NORMAL, Brownout, ChaosPlan,
+                   ChaosState, DegradationPolicy, RetryPolicy,
+                   plan_from_dict)
+
+__all__ = [
+    "Brownout", "ChaosPlan", "ChaosState", "DegradationPolicy",
+    "RetryPolicy", "plan_from_dict", "NORMAL", "BROWNOUT", "EMERGENCY",
+]

@@ -107,7 +107,7 @@ def load_pytree(template, path: str):
 
 
 # ------------------------------------------------------- scheduler state
-def save_scheduler_state(sched, path: str) -> str:
+def save_scheduler_state(sched, path: str, *, chaos=None) -> str:
     """Serialize everything a restarted scheduler needs to reproduce this
     one's placement exactly: per-task MRET windows and context
     assignments, the migration counter, the runtime shape, and the FULL
@@ -135,8 +135,18 @@ def save_scheduler_state(sched, path: str) -> str:
     p = pathlib.Path(path)
     p.parent.mkdir(parents=True, exist_ok=True)
     tmp = p.with_suffix(".tmp")
-    tmp.write_bytes(msgpack.packb(state))
-    os.replace(tmp, p)
+    blob = msgpack.packb(state)
+    attempts = 1 + (chaos.plan.io_max_retries if chaos is not None else 0)
+    for i in range(attempts):
+        try:
+            if chaos is not None and chaos.io_fails():
+                raise OSError("chaos: injected checkpoint write failure")
+            tmp.write_bytes(blob)
+            os.replace(tmp, p)
+            break
+        except OSError:
+            if i + 1 >= attempts:
+                raise
     return str(p)
 
 

@@ -77,6 +77,7 @@ class ClusterScheduler:
         self.transfers = 0            # inter-GPU state payloads actually moved
         self._state_dev: Dict[int, int] = {}   # job_id -> device holding state
         self._next_wake = math.inf
+        self._batch_widen = 1.0
         for _ in range(n_gpus):
             self._add_device()
         self.tasks: List[Task] = [
@@ -96,6 +97,7 @@ class ClusterScheduler:
                        self._cfg_template)
         w = DarisScheduler([], dataclasses.replace(src_cfg),
                            self._device_model_for(d), ctx_ns=d)
+        w.batch_widen = self._batch_widen   # fleet-wide degradation knob
         self.workers[d] = w
         self._absorb(w)
         return d
@@ -201,6 +203,18 @@ class ClusterScheduler:
         self._next_wake = v
         for w in self.workers.values():
             w.next_wake_ms = v
+
+    @property
+    def batch_widen(self) -> float:
+        return self._batch_widen
+
+    @batch_widen.setter
+    def batch_widen(self, v: float) -> None:
+        # degradation-controller knob: every worker's coalescer must see
+        # the same widened max-wait (same forwarding shape as next_wake)
+        self._batch_widen = v
+        for w in self.workers.values():
+            w.batch_widen = v
 
     def device_load(self, d: int, now: float) -> float:
         """Placement load of a device: total utilization of every task
@@ -377,6 +391,13 @@ class ClusterScheduler:
         if outcome == "cancelled":
             self._state_dev.pop(job.job_id, None)
         return outcome, job
+
+    def abort_job(self, job: Job, now: float) -> None:
+        """Chaos-layer give-up on the shared tables (see the single-GPU
+        version); the fleet additionally releases the job's inter-stage
+        state pointer — an aborted job never finishes a stage again."""
+        DarisScheduler.abort_job(self, job, now)
+        self._state_dev.pop(job.job_id, None)
 
     def next_for_lane(self, ctx_key: CtxKey, now: float
                       ) -> Optional[StageInstance]:

@@ -61,6 +61,26 @@ class RunMetrics:
     # when any submission carried a tenant id (the serving front-end),
     # empty for plain benchmark runs
     per_tenant: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    # ---- chaos layer (repro.chaos): all zero with no ChaosPlan ----
+    # transient stage faults injected by the plan
+    chaos_faults: int = 0
+    # failed stages re-dispatched after backoff (RetryPolicy)
+    retries: int = 0
+    # jobs given up on after a transient fault (attempts exhausted, or a
+    # deadline-aware bail-out); aborted jobs unwind their Eq. 12 charge
+    # and are neither completed nor missed nor cancelled
+    aborted: Dict[int, int] = dataclasses.field(
+        default_factory=lambda: {HP: 0, LP: 0})
+    # in-flight stages killed by the per-stage watchdog and re-dispatched
+    # at the stage boundary (each also counts into ``migrations`` when it
+    # re-homed)
+    watchdog_kills: int = 0
+    # LP releases shed by the degradation controller: admissions refused
+    # in BROWNOUT/EMERGENCY plus queued jobs cancelled on EMERGENCY entry
+    shed: Dict[int, int] = dataclasses.field(
+        default_factory=lambda: {HP: 0, LP: 0})
+    # NORMAL/BROWNOUT/EMERGENCY mode changes (DegradationPolicy)
+    degrade_transitions: int = 0
 
     @property
     def jps(self) -> float:
@@ -129,6 +149,19 @@ class RunMetrics:
             "cancelled_hp": self.cancelled[HP],
             "cancelled_lp": self.cancelled[LP],
         }
+        # chaos block only when the chaos layer actually fired: chaos-off
+        # summaries stay byte-identical to the pre-chaos goldens
+        if (self.chaos_faults or self.retries or self.watchdog_kills
+                or self.degrade_transitions or any(self.aborted.values())
+                or any(self.shed.values())):
+            out["chaos_faults"] = self.chaos_faults
+            out["retries"] = self.retries
+            out["aborted_hp"] = self.aborted[HP]
+            out["aborted_lp"] = self.aborted[LP]
+            out["watchdog_kills"] = self.watchdog_kills
+            out["shed_hp"] = self.shed[HP]
+            out["shed_lp"] = self.shed[LP]
+            out["degrade_transitions"] = self.degrade_transitions
         if self.per_device:
             out["per_device"] = {
                 str(d): s for d, s in sorted(self.per_device.items())}
@@ -152,7 +185,7 @@ def tenant_stats(handles) -> Dict[str, Dict]:
             continue
         d = out.setdefault(h.tenant, {
             "submitted": 0, "completed": 0, "missed": 0,
-            "cancelled": 0, "rejected": 0, "pending": 0})
+            "cancelled": 0, "rejected": 0, "aborted": 0, "pending": 0})
         d["submitted"] += 1
         st = h.status
         if st in ("completed", "missed"):
@@ -165,6 +198,8 @@ def tenant_stats(handles) -> Dict[str, Dict]:
             d["cancelled"] += 1
         elif st == "rejected":
             d["rejected"] += 1
+        elif st == "aborted":
+            d["aborted"] += 1
         else:
             d["pending"] += 1
     for tenant, d in out.items():

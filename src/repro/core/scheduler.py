@@ -167,6 +167,10 @@ class DarisScheduler:
         # (EngineCore refreshes it every iteration); inf = no pending
         # events, so batch heads must never be held back
         self.next_wake_ms: float = math.inf
+        # degradation-controller batching knob (repro.chaos): multiplies
+        # the batch policy's max_wait_ms while the server is degraded, so
+        # heads grow larger under brownout. 1.0 = no effect (chaos off).
+        self.batch_widen: float = 1.0
         self._offline_phase()
 
     def _key(self, i: int) -> CtxKey:
@@ -408,7 +412,7 @@ class DarisScheduler:
             self._coalescer.close(task)          # full: seal the batch
             return None
         if (pol.max_wait_ms is not None
-                and now - job.release_ms > pol.max_wait_ms):
+                and now - job.release_ms > pol.max_wait_ms * self.batch_widen):
             self._coalescer.close(task)
             return None
         # slack bound: the enlarged batch must still be predicted to meet
@@ -610,6 +614,16 @@ class DarisScheduler:
         job.cancelled = True
         return "cancelling", job
 
+    def abort_job(self, job: Job, now: float) -> None:
+        """Chaos-layer give-up (RetryPolicy exhausted, or a deadline-aware
+        bail-out): the job leaves ``active_jobs`` immediately, unwinding
+        its Eq. 12 admission charge exactly like a queued cancel. The
+        failed stage's instance is neither queued nor on a lane when this
+        runs (the engine frees the lane before deciding), so there is
+        nothing to remove from the ready queue."""
+        del self.active_jobs[job.ctx][job]
+        job.finish_ms = now
+
     def next_for_lane(self, ctx_idx: int, now: float) -> Optional[StageInstance]:
         if self._coalescer is None:
             return self.queues[ctx_idx].pop()
@@ -639,7 +653,8 @@ class DarisScheduler:
         if job.n_inputs >= pol.max_batch:
             return False
         if (pol.max_wait_ms is not None
-                and self.next_wake_ms - job.release_ms > pol.max_wait_ms):
+                and self.next_wake_ms - job.release_ms
+                > pol.max_wait_ms * self.batch_widen):
             return False
         prof = job.task.spec.stages[0]
         mret0 = job.task.mret.stage_mret(0)

@@ -85,6 +85,11 @@ class StageQueue:
     def __len__(self) -> int:
         return len(self._heap)
 
+    def instances(self) -> List[StageInstance]:
+        """Snapshot of queued instances (heap order, NOT pop order) —
+        the degradation controller's emergency-shed enumeration."""
+        return [inst for _, inst in self._heap]
+
     def drain(self):
         """Remove and return all queued stages (fault recovery path)."""
         items = [inst for _, inst in self._heap]

@@ -154,6 +154,10 @@ class StageInstance:
     # backlog_ms the hottest loop on overload runs
     smret: Optional[StageMret] = None
     cost_b: float = 1.0
+    # chaos-layer retry accounting: execution attempts this stage has
+    # burned (transient stage faults, see repro.chaos). Always 0 with no
+    # ChaosPlan installed.
+    attempts: int = 0
     # inter-GPU migration charge (cluster layer): when this stage
     # dispatches on a different device than the one holding the job's
     # inter-stage state, the dispatcher stamps the configured transfer

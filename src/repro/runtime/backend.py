@@ -33,9 +33,11 @@ earlier or later, and never draw speculatively.
 """
 from __future__ import annotations
 
+import functools
 import heapq
 import itertools
 import math
+import os
 import queue
 import threading
 import time
@@ -64,8 +66,12 @@ _tie = itertools.count()
 #                     (cluster; 0.0 on a single device) — excluded from
 #                     the straggler kill decision, which compares pure
 #                     execution progress against MRET
+#   [10] cfail        chaos-injected transient fault (repro.chaos): the
+#                     stage runs to completion but the result is garbage
+#                     — reported via Completion.failed. Always False
+#                     with no ChaosPlan installed.
 (_INST, _REM, _RATE, _VER, _EFF, _ETA, _SMRET, _COST, _FLOOR,
- _XFER) = range(10)
+ _XFER, _CFAIL) = range(11)
 
 
 class ExecutionBackend(Protocol):
@@ -88,6 +94,9 @@ class ExecutionBackend(Protocol):
     def on_job_done(self, job: Job) -> None: ...
     def has_inflight(self) -> bool: ...
     def on_reconfigure(self) -> None: ...
+    # chaos layer: drop one in-flight stage (watchdog expiry). Only ever
+    # called with a ChaosPlan installed.
+    def kill_lane(self, lane: tuple, inst: StageInstance) -> None: ...
 
 
 class SimBackend:
@@ -172,7 +181,8 @@ class SimBackend:
             inst = entry[_INST]
             del self.running[lane]
             self._rates_dirty = True
-            return [Completion(lane, inst, t - inst.start_ms)]
+            return [Completion(lane, inst, t - inst.start_ms,
+                               entry[_CFAIL])]
         self._advance_to(cap_ms)
         return []
 
@@ -224,10 +234,22 @@ class SimBackend:
             # inter-GPU state migration (cluster dispatcher stamped it):
             # the transfer serializes ahead of the stage program
             work += inst.transfer_ms
+        # chaos hazards draw from the plan's OWN stream (never the sim
+        # rng — the draw-order invariant above stays intact): one draw
+        # per configured hazard per launch, in dispatch order. A stall
+        # is extra serialized work; a fault pays the full execution and
+        # surfaces as Completion.failed at harvest.
+        cfail = False
+        ch = self.core._chaos
+        if ch is not None:
+            cfail, stall = ch.draw_launch()
+            if stall:
+                work += stall
         # version must be globally unique: a reset-to-0 counter lets a
         # stale FINISH from the lane's previous occupant fire early
         self.running[lane] = [inst, work, 0.0, next(_tie), eff, None,
-                              smret, cost, floor, inst.transfer_ms]
+                              smret, cost, floor, inst.transfer_ms,
+                              cfail]
         self._rates_dirty = True
 
     def cancel_ctx(self, ctx_idx: int) -> None:
@@ -238,6 +260,17 @@ class SimBackend:
 
     def on_job_done(self, job: Job) -> None:
         pass
+
+    def kill_lane(self, lane: tuple, inst: StageInstance) -> None:
+        # watchdog expiry: drop the entry; the stale heap prediction
+        # self-invalidates via the version check
+        if self.running.pop(lane, None) is not None:
+            self._rates_dirty = True
+
+    def on_chaos_edge(self) -> None:
+        # a brownout window opened/closed: rates must be recomputed so
+        # in-flight work integrates at the new factor from this instant
+        self._rates_dirty = True
 
     def on_reconfigure(self) -> None:
         # in-flight lanes keep their (retired-context) rates, but the new
@@ -336,7 +369,19 @@ class SimBackend:
                     ns.append(eff.n_sat)
                     mf.append(eff.mem_frac)
                 rates = contention.rates_seq(u, ns, mf)
-                for (_, entry), rate in zip(group, rates):
+                ch = self.core._chaos
+                browned = ch is not None and bool(ch.plan.brownouts)
+                for (lane, entry), rate in zip(group, rates):
+                    if browned:
+                        # per-device brownout window (chaos layer): the
+                        # whole device runs slow_factor-x slower. Cluster
+                        # lane keys are ((dev, ctx), slot); single-device
+                        # keys are (ctx, slot) on device 0.
+                        dev = (lane[0][0] if isinstance(lane[0], tuple)
+                               else 0)
+                        f = ch.brownout_factor(dev, self.now)
+                        if f > 1.0:
+                            rate = rate / f
                     entry[_RATE] = rate if rate > 1e-6 else 1e-6
             self._rates_dirty = False
         now, eps, full = self.now, self.predict_eps, self.full_repredict
@@ -414,9 +459,25 @@ class _WorkerPool:
     def stop(self, timeout_s: float = 1.0) -> None:
         for _ in self._threads:
             self._q.put(None)
+        leaked = 0
         for t in self._threads:
             t.join(timeout=timeout_s)
+            if t.is_alive():
+                leaked += 1
         self._threads = []
+        # surface workers that outlived the join window (a wedged payload
+        # — e.g. a stage blocked in device sync): callers read
+        # ``leaked``, the ops log gets a line, and a sanitized run fails
+        # loudly instead of carrying zombie threads into the next test
+        self.leaked = leaked
+        if leaked:
+            import sys
+            print(f"worker pool: {leaked} worker thread(s) still alive "
+                  f"after stop(timeout={timeout_s}s)", file=sys.stderr)
+            if os.environ.get("DARIS_SANITIZE", "") not in ("", "0"):
+                raise RuntimeError(
+                    f"DSAN: worker pool leaked {leaked} thread(s) — a "
+                    f"stage payload never returned")
 
 
 class RealtimeBackend:
@@ -467,6 +528,10 @@ class RealtimeBackend:
         self._state_ctx: Dict[int, int] = {}   # job_id -> producing context
         self._inflight = 0
         self._cancelled_ctx: set = set()
+        # lane -> token of the launch the engine still believes in; a
+        # watchdog kill_lane drops the token so the un-interruptible
+        # worker's eventual completion is discarded at harvest
+        self._live_token: Dict[tuple, int] = {}
         self._t0 = 0.0
         self._pool = _WorkerPool()
         # pool sizing is by LIVE lane count (plus in-flight stages on
@@ -514,11 +579,12 @@ class RealtimeBackend:
             timeout_s = (cap_ms - self.now_ms()) / 1000.0
             try:
                 if timeout_s <= 0:
-                    lane, inst, et, out = self._done_q.get_nowait()
+                    item = self._done_q.get_nowait()
                 else:
-                    lane, inst, et, out = self._done_q.get(timeout=timeout_s)
+                    item = self._done_q.get(timeout=timeout_s)
             except queue.Empty:
                 return []
+            lane, inst, et, out, token, failed = item
             self._inflight -= 1
             if lane[0] in self._cancelled_ctx:
                 # ghost completion from a failed context: fail_context
@@ -526,9 +592,17 @@ class RealtimeBackend:
                 # launch again, so anything arriving on them is stale —
                 # drop its output along with it
                 continue
-            self._job_state[inst.job.job_id] = out
-            self._state_ctx[inst.job.job_id] = lane[0]
-            return [Completion(lane, inst, et)]
+            if token is not None and self._live_token.get(lane) != token:
+                # watchdog-killed launch: the engine already re-enqueued
+                # the stage; this worker's late result is a ghost
+                continue
+            self._live_token.pop(lane, None)
+            if not failed:
+                # a chaos-failed stage's output is garbage: never commit
+                # it over the job's last good inter-stage state
+                self._job_state[inst.job.job_id] = out
+                self._state_ctx[inst.job.job_id] = lane[0]
+            return [Completion(lane, inst, et, failed)]
 
     def peek_eta(self) -> float:
         """Wall clock: in-flight work can complete at any instant, so the
@@ -563,9 +637,15 @@ class RealtimeBackend:
         self.resharded += 1
         return migrate(x, tgt)
 
-    def _worker(self, lane: tuple, inst: StageInstance) -> None:
+    def _worker(self, lane: tuple, inst: StageInstance, *,
+                token=None, stall_ms: float = 0.0,
+                failed: bool = False) -> None:
         prof = inst.profile
         t0 = time.perf_counter()
+        if stall_ms:
+            # chaos-injected lane stall (driver hiccup / ECC scrub): the
+            # stage runs, just late — the stall serializes ahead of it
+            time.sleep(stall_ms / 1000.0)
         if prof.payload is None:
             # synthetic stage: sleep the batched work (b/g(b) scaling)
             time.sleep(batched_stage_ms(prof, inst.job.n_inputs) / 1000.0)
@@ -583,13 +663,29 @@ class RealtimeBackend:
             except ImportError:
                 pass
         et_ms = (time.perf_counter() - t0) * 1000.0
-        self._done_q.put((lane, inst, et_ms, out))
+        self._done_q.put((lane, inst, et_ms, out, token, failed))
 
     def launch(self, lane: tuple, inst: StageInstance) -> None:
         self._inflight += 1
         # elastic scale-out/reconfigure may have added lanes since start()
         self._ensure_pool()
-        self._pool.submit(self._worker, lane, inst)
+        # chaos draws happen HERE, on the engine thread in dispatch order
+        # (the deterministic stream position), never on the worker
+        cfail, stall = False, 0.0
+        ch = self.core._chaos
+        if ch is not None:
+            cfail, stall = ch.draw_launch()
+        token = next(_tie)
+        self._live_token[lane] = token
+        self._pool.submit(
+            functools.partial(self._worker, token=token, stall_ms=stall,
+                              failed=cfail), lane, inst)
+
+    def kill_lane(self, lane: tuple, inst: StageInstance) -> None:
+        # workers can't be interrupted: forget the launch token so the
+        # harvest loop discards the ghost completion when it lands (the
+        # in-flight count still drains through advance)
+        self._live_token.pop(lane, None)
 
     def cancel_ctx(self, ctx_idx: int) -> None:
         # workers can't be interrupted; mark the context so their

@@ -31,8 +31,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..chaos.plan import BROWNOUT, EMERGENCY, NORMAL, ChaosState
 from ..core.metrics import RunMetrics, empty_metrics, tenant_stats
-from ..core.scheduler import DarisScheduler
+from ..core.scheduler import DarisScheduler, Rejection
 from ..core.task import HP, LP, Job, StageInstance, Task, TaskSpec
 from .arrivals import ArrivalProcess
 
@@ -48,7 +49,18 @@ _seq = itertools.count()
 # the same instant must release first (the cancel then finds a live job),
 # and a cancel racing a fault must unwind cleanly before the fault
 # re-homes whatever survives.
-RELEASE, CANCEL, FAULT, FAIL_DEV, ADD_CTX, RECONFIG, AUTOSCALE = range(7)
+# The chaos kinds (PR 8) sort after AUTOSCALE: RETRY re-dispatches a
+# failed stage after its backoff, WATCHDOG audits one armed lane, CHAOS
+# marks a brownout window edge (backend re-rate), DEGRADE is the
+# degradation controller's periodic check.
+(RELEASE, CANCEL, FAULT, FAIL_DEV, ADD_CTX, RECONFIG, AUTOSCALE,
+ RETRY, WATCHDOG, CHAOS, DEGRADE) = range(11)
+
+# kinds that never *represent* pending work: autoscale/degrade checks
+# re-arm themselves forever, watchdogs are stale once their stage ends,
+# brownout edges only re-rate. RETRY is NOT here — during its backoff a
+# job's only token is the RETRY event, so idleness must see it.
+_NON_WORK = frozenset((AUTOSCALE, WATCHDOG, CHAOS, DEGRADE))
 
 _EPS = 1e-9
 
@@ -116,10 +128,15 @@ class AutoscalePolicy:
 
 @dataclasses.dataclass
 class Completion:
-    """One finished stage execution, reported by a backend."""
+    """One finished stage execution, reported by a backend. ``failed``
+    marks a chaos-injected transient stage fault: the full execution
+    time was paid but the result is garbage — the engine must retry or
+    abort instead of advancing the pipeline. Always False with no
+    ``ChaosPlan`` installed."""
     lane: tuple
     inst: StageInstance
     et_ms: float
+    failed: bool = False
 
 
 class SubmitHandle:
@@ -133,6 +150,9 @@ class SubmitHandle:
                                      -> missed    (finished late)
                 -> cancelled                      (client cancel, any
                                                    pre-terminal state)
+                -> aborted                        (chaos layer gave up:
+                                                   retries exhausted or
+                                                   deadline-aware bail)
 
     ``queued`` means admitted and waiting in the stage queue; ``running``
     means the job's first stage has dispatched. ``missed`` jobs still
@@ -147,7 +167,9 @@ class SubmitHandle:
     COMPLETED = "completed"
     MISSED = "missed"
     CANCELLED = "cancelled"
-    TERMINAL = frozenset((REJECTED, COMPLETED, MISSED, CANCELLED))
+    ABORTED = "aborted"
+    TERMINAL = frozenset((REJECTED, COMPLETED, MISSED, CANCELLED,
+                          ABORTED))
 
     def __init__(self, task: Task, tenant: Optional[str] = None,
                  at_ms: float = 0.0):
@@ -189,7 +211,7 @@ class EngineCore:
                  fault_plan: Optional[FaultPlan] = None,
                  autoscale: Optional[AutoscalePolicy] = None,
                  record_decisions: bool = False,
-                 sanitize=None):
+                 sanitize=None, chaos=None):
         self.sched = sched
         self.backend = backend
         self.horizon = horizon_ms
@@ -197,6 +219,15 @@ class EngineCore:
         self.metrics = empty_metrics(horizon_ms)
         self.fault_plan = fault_plan
         self.autoscale = autoscale
+        # chaos layer (repro.chaos): ChaosPlan or pre-built ChaosState;
+        # None keeps every hook below a bare is-not-None test (twin-path)
+        if chaos is None or isinstance(chaos, ChaosState):
+            self._chaos: Optional[ChaosState] = chaos
+        else:
+            self._chaos = ChaosState(chaos)
+        # job_id -> (job, inst) parked between a transient stage fault
+        # and its RETRY event (the job's only work token meanwhile)
+        self._retry_wait: Dict[int, tuple] = {}
         self._last_scale_ms = -math.inf
         self.decisions: Optional[List[str]] = [] if record_decisions else None
         # task.index -> arrival process (tasks without one never self-release)
@@ -222,7 +253,7 @@ class EngineCore:
 
     # ------------------------------------------------------------ plumbing
     def _push(self, t: float, kind: int, payload) -> None:
-        if kind != AUTOSCALE:
+        if kind not in _NON_WORK:
             self._work_events += 1
         entry = (t, kind, next(_seq), payload)
         heapq.heappush(self._timeline, entry)
@@ -345,6 +376,13 @@ class EngineCore:
                 self._push(t_ms, RECONFIG, dict(kwargs))
         if self.autoscale is not None:
             self._push(self.autoscale.check_every_ms, AUTOSCALE, None)
+        if self._chaos is not None:
+            for t in self._chaos.brownout_edges():
+                if t <= self.horizon:
+                    self._push(t, CHAOS, None)
+            deg = self._chaos.plan.degradation
+            if deg is not None:
+                self._push(deg.check_every_ms, DEGRADE, None)
 
     def _step(self, until_idle: bool, frontier: Optional[float]) -> bool:
         """One drive iteration. Returns False when the loop should stop:
@@ -369,7 +407,7 @@ class EngineCore:
         elif (self._timeline and t_evt <= self.horizon
               and now >= t_evt - 1e-6):
             t, kind, seq, payload = heapq.heappop(self._timeline)
-            if kind != AUTOSCALE:
+            if kind not in _NON_WORK:
                 self._work_events -= 1
             if self._sanitizer is not None:
                 self._sanitizer.note_pop(t, kind, seq, now)
@@ -388,6 +426,14 @@ class EngineCore:
                 self._handle_reconfigure(now, payload)
             elif kind == AUTOSCALE:
                 self._handle_autoscale(now)
+            elif kind == RETRY:
+                self._handle_retry(now, payload)
+            elif kind == WATCHDOG:
+                self._handle_watchdog(now, payload)
+            elif kind == CHAOS:
+                self._handle_chaos_edge()
+            elif kind == DEGRADE:
+                self._handle_degrade(now)
         elif now >= self.horizon - _EPS:
             return False
         elif not self._timeline and not self.backend.has_inflight():
@@ -462,34 +508,51 @@ class EngineCore:
             # reaches the scheduler (accounting happened at cancel time)
             self._log(f"release {task.name} skipped (cancelled)")
             return
-        pre_coalesced = self.sched.coalesced
-        job = self.sched.on_release(task, now)
-        if job is None:
-            self._log(f"reject {task.name}")
+        if (self._chaos is not None and task.priority == LP
+                and self._chaos.mode != NORMAL):
+            # degradation shed (BROWNOUT/EMERGENCY): LP refused at the
+            # door — books it as a rejection everywhere the admission
+            # path would, plus the dedicated shed counter
+            self.sched.rejections.append(Rejection(task.name, now, LP))
+            self.sched.rejected_counts[LP] += 1
+            self.metrics.shed[LP] += 1
+            self._log(f"shed {task.name} ({self._chaos.mode})")
             if handle is not None:
                 handle.status = SubmitHandle.REJECTED
+            if self._sanitizer is not None:
+                self._sanitizer.note_release(LP, "rejected")
         else:
-            if self.sched.coalesced > pre_coalesced:
-                self._log(f"batch {task.name} -> ctx{job.ctx} "
-                          f"b={job.n_inputs}")
+            pre_coalesced = self.sched.coalesced
+            job = self.sched.on_release(task, now)
+            if job is None:
+                self._log(f"reject {task.name}")
+                if handle is not None:
+                    handle.status = SubmitHandle.REJECTED
             else:
-                self._log(f"admit {task.name} -> ctx{job.ctx}")
-            if handle is not None:
-                handle.status = SubmitHandle.QUEUED
-                handle.job = job
-                # a coalesced join's member release stamp is ``now`` (the
-                # value on_release appended to extra_release_ms), same as
-                # a primary's job.release_ms — either way the handle's
-                # identity for cancellation is (task.index, now)
-                handle.release_ms = now
-                if job.start_ms is not None:
-                    handle.status = SubmitHandle.RUNNING
-                self._job_handles.setdefault(job.job_id, []).append(handle)
-        if self._sanitizer is not None:
-            outcome = ("rejected" if job is None else
-                       "coalesced" if self.sched.coalesced > pre_coalesced
-                       else "admitted")
-            self._sanitizer.note_release(task.priority, outcome)
+                if self.sched.coalesced > pre_coalesced:
+                    self._log(f"batch {task.name} -> ctx{job.ctx} "
+                              f"b={job.n_inputs}")
+                else:
+                    self._log(f"admit {task.name} -> ctx{job.ctx}")
+                if handle is not None:
+                    handle.status = SubmitHandle.QUEUED
+                    handle.job = job
+                    # a coalesced join's member release stamp is ``now``
+                    # (the value on_release appended to
+                    # extra_release_ms), same as a primary's
+                    # job.release_ms — either way the handle's identity
+                    # for cancellation is (task.index, now)
+                    handle.release_ms = now
+                    if job.start_ms is not None:
+                        handle.status = SubmitHandle.RUNNING
+                    self._job_handles.setdefault(job.job_id,
+                                                 []).append(handle)
+            if self._sanitizer is not None:
+                outcome = ("rejected" if job is None else
+                           "coalesced"
+                           if self.sched.coalesced > pre_coalesced
+                           else "admitted")
+                self._sanitizer.note_release(task.priority, outcome)
         if proc is not None:
             nxt, skipped = proc.next_after(sched_t, now)
             if skipped:
@@ -625,11 +688,211 @@ class EngineCore:
         if nxt <= self.horizon:
             self._push(nxt, AUTOSCALE, None)
 
+    # ------------------------------------------------- chaos layer (PR 8)
+    def _on_stage_failed(self, c: Completion, now: float) -> None:
+        """A transient stage fault surfaced at completion time: the full
+        execution time was paid but the result is garbage. Decide retry
+        (backoff on the virtual clock, RETRY event) vs abort (attempts
+        exhausted, or deadline-aware give-up). Failed stages never reach
+        ``on_stage_finish`` — no MRET observation, no pipeline advance,
+        no inter-stage state commit."""
+        inst = c.inst
+        job = inst.job
+        p = job.task.priority
+        self.metrics.chaos_faults += 1
+        inst.attempts += 1
+        pol = self._chaos.plan.retry
+        delay = pol.delay_ms(inst.attempts)
+        give_up = inst.attempts >= pol.max_attempts
+        if not give_up and pol.deadline_aware and inst.smret is not None:
+            # even an immediately-successful retry lands at now + delay +
+            # predicted stage time; past the job's absolute deadline the
+            # retry only burns device time a live job could use
+            pred = inst.smret.value() * inst.cost_b
+            spd = getattr(self.sched, "speed", 1.0)
+            if spd != 1.0:
+                pred /= spd
+            if now + delay + pred > job.abs_deadline_ms:
+                give_up = True
+        if give_up:
+            self._abort_job(job, now, p)
+            return
+        self.metrics.retries += 1
+        inst.work_done = 0.0
+        inst.lane = None
+        inst.start_ms = None
+        self._retry_wait[job.job_id] = (job, inst)
+        self._push(now + delay, RETRY, job.job_id)
+        self._log(f"retry {job.task.name} s{job.stage_idx} "
+                  f"attempt={inst.attempts} delay={delay:.2f}")
+
+    def _abort_job(self, job: Job, now: float, p: int) -> None:
+        """Give up on a transiently-failing job: it leaves the scheduler
+        immediately (unwinding the Eq. 12 charge) and every handle riding
+        it goes terminal ABORTED. Neither completed nor missed nor
+        cancelled — ``metrics.aborted`` is its own bucket."""
+        self.sched.abort_job(job, now)
+        self.backend.on_job_done(job)
+        self.metrics.aborted[p] += 1
+        self._log(f"abort {job.task.name} s{job.stage_idx}")
+        if self._sanitizer is not None:
+            self._sanitizer.note_abort(p)
+        handles = self._job_handles.pop(job.job_id, None)
+        if handles:
+            for h in handles:
+                if h._cancelled or h.done:
+                    continue
+                h.status = SubmitHandle.ABORTED
+
+    def _handle_retry(self, now: float, job_id: int) -> None:
+        """RETRY event: the backoff elapsed — re-enqueue the failed
+        stage at the boundary (normal dispatch then re-launches it; a
+        migration may re-home it exactly like any queued stage)."""
+        entry = self._retry_wait.pop(job_id, None)
+        if entry is None:
+            return                 # aborted/cancelled away meanwhile
+        job, inst = entry
+        if job.cancelled:
+            # the cancel landed during the backoff ("cancelling"): this
+            # boundary is where the job retires — same bookkeeping as the
+            # in-flight boundary retirement in _on_completion
+            self.sched.abort_job(job, now)
+            self.backend.on_job_done(job)
+            if self._sanitizer is not None:
+                self._sanitizer.note_job_done(job)
+            self._job_handles.pop(job.job_id, None)
+            self._log(f"retire {job.task.name} (cancelled during retry)")
+            return
+        self.sched.queues[job.ctx].push(inst)
+        self._log(f"redispatch {job.task.name} s{job.stage_idx}")
+
+    def _handle_watchdog(self, now: float, payload) -> None:
+        """WATCHDOG event: the lane armed at dispatch time has been
+        running longer than k x its predicted MRET. Kill the backend
+        entry and re-dispatch the stage at the boundary via the existing
+        zero-delay migration path (mirrors the sim straggler kill, but
+        works on any backend — it is the engine's own timeline)."""
+        lane, inst, armed_ms = payload
+        if self.sched.lanes.get(lane) is not inst \
+                or inst.start_ms != armed_ms:  # dsan: ignore[DSAN003] — stamp identity, not arithmetic
+            return                 # stale: the stage already finished
+        job = inst.job
+        self.backend.kill_lane(lane, inst)
+        self.sched.lanes[lane] = None
+        self.metrics.watchdog_kills += 1
+        inst.work_done = 0.0
+        inst.lane = None
+        inst.start_ms = None
+        old = job.ctx
+        if job.task.fixed_ctx:
+            tgt = job.task.ctx
+        else:
+            tgt = min((c.index for c in self.sched.live_contexts()),
+                      key=lambda k: self.sched.migration_eta(
+                          k, now, old, job))
+            if tgt != old:
+                self.sched.migrations += 1
+        if job in self.sched.active_jobs.get(old, {}):
+            del self.sched.active_jobs[old][job]
+            self.sched.active_jobs[tgt][job] = None
+        job.ctx = tgt
+        self.sched.queues[tgt].push(inst)
+        self._log(f"watchdog kill {job.task.name} s{job.stage_idx} "
+                  f"lane({lane[0]},{lane[1]}) -> ctx{tgt}")
+
+    def _handle_chaos_edge(self) -> None:
+        """CHAOS event: a brownout window opened or closed — the backend
+        must recompute rates so in-flight work picks the change up."""
+        hook = getattr(self.backend, "on_chaos_edge", None)
+        if hook is not None:
+            hook()
+        self._log("brownout edge")
+
+    def _handle_degrade(self, now: float) -> None:
+        """DEGRADE event: the degradation controller's periodic check.
+        Reads the same utilization signal as the autoscaler, walks the
+        NORMAL/BROWNOUT/EMERGENCY hysteresis, and applies the mode's
+        side effects (batch widening; EMERGENCY sheds queued LP)."""
+        ch = self._chaos
+        pol = ch.plan.degradation
+        live = self.sched.live_contexts()
+        if live:
+            used = [(self.sched.util_hp_total(c.index, now)
+                     + self.sched.util_lp_active(c.index, now))
+                    / max(c.n_streams, 1) for c in live]
+            signal = sum(used) / len(live)
+            mode = ch.mode
+            if mode == NORMAL:
+                new = (EMERGENCY if signal >= pol.emergency_enter else
+                       BROWNOUT if signal >= pol.brownout_enter else
+                       NORMAL)
+            elif mode == BROWNOUT:
+                new = (EMERGENCY if signal >= pol.emergency_enter else
+                       NORMAL if signal < pol.brownout_exit else
+                       BROWNOUT)
+            else:  # EMERGENCY cools off in stages: -> BROWNOUT first
+                new = (BROWNOUT if signal < pol.emergency_exit else
+                       EMERGENCY)
+            if ch.set_mode(now, new):
+                self.metrics.degrade_transitions += 1
+                self.sched.batch_widen = (pol.batch_widen
+                                          if new != NORMAL else 1.0)
+                self._log(f"degrade {ch.transitions[-1][1]} -> {new} "
+                          f"(signal={signal:.2f})")
+                if new == EMERGENCY:
+                    self._shed_queued_lp(now)
+        nxt = now + pol.check_every_ms
+        if nxt <= self.horizon:
+            self._push(nxt, DEGRADE, None)
+
+    def _shed_queued_lp(self, now: float) -> None:
+        """EMERGENCY entry: cancel every queued (not yet dispatched) LP
+        job through the PR 6 cancellation path — members detach first,
+        then the primary retires the whole job, so admission charges
+        unwind and batch heads seal exactly as client cancels do.
+        In-flight LP finishes (zero-delay semantics)."""
+        victims = []
+        for q in self.sched.queues.values():
+            for inst in q.instances():
+                job = inst.job
+                if job.task.priority == LP and not job.cancelled:
+                    victims.append(job)
+        for job in victims:
+            handles = self._job_handles.get(job.job_id)
+            if handles:
+                # handle-carried job: cancel each submission, members
+                # before the primary (the final cancel retires the job
+                # and does all the accounting _handle_cancel owns)
+                for h in list(handles)[::-1]:
+                    self._handle_cancel(h)
+            else:
+                # handle-less (periodic) job: same chain straight on the
+                # scheduler — detach/drop the members, retire the primary
+                for idx, rel in list(zip(job.extra_member_idx,
+                                         job.extra_release_ms))[::-1]:
+                    self.sched.cancel_job(idx, rel, now)
+                outcome, _ = self.sched.cancel_job(
+                    job.task.index, job.release_ms, now)
+                if outcome == "cancelled":
+                    self.backend.on_job_done(job)
+                    if self._sanitizer is not None:
+                        # not a client cancel (no submission to count):
+                        # only the job-retired ledger moves
+                        self._sanitizer.note_cancel("shed", LP, True)
+            self.metrics.shed[LP] += 1
+            self._log(f"emergency shed {job.task.name}")
+
     def _on_completion(self, c: Completion) -> None:
         now = self.backend.now_ms()
         job = c.inst.job
         stage = job.stage_idx
         self.sched.lanes[c.lane] = None
+        if c.failed and self._chaos is not None and not job.cancelled:
+            # chaos-injected transient fault: never feeds MRET, never
+            # advances the pipeline (cancelled jobs retire normally — the
+            # boundary retirement outranks the failure)
+            self._on_stage_failed(c, now)
+            return
         done = self.sched.on_stage_finish(c.inst, now, c.et_ms)
         self._log(f"finish {job.task.name} s{stage}")
         if done is None:
@@ -711,6 +974,18 @@ class EngineCore:
             self._log(f"dispatch {inst.task.name} s{inst.job.stage_idx} "
                       f"lane({lane[0]},{lane[1]})")
             self.backend.launch(lane, inst)
+            if (self._chaos is not None
+                    and self._chaos.plan.watchdog_kappa > 0.0
+                    and inst.smret is not None):
+                # arm the per-stage watchdog: k x predicted MRET (plus
+                # any serialized transfer charge) from this dispatch. The
+                # event self-invalidates if the stage finishes first
+                # (lane occupant / start stamp check in _handle_watchdog)
+                pred = inst.smret.value() * inst.cost_b
+                t = (now + self._chaos.plan.watchdog_kappa * pred
+                     + inst.transfer_ms)
+                if t <= self.horizon:
+                    self._push(t, WATCHDOG, (lane, inst, now))
 
     def _idle(self) -> bool:
         # autoscaler check events keep the timeline populated forever;

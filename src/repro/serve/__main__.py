@@ -13,10 +13,11 @@
     python -m repro.serve stats  --socket /tmp/daris.sock
     python -m repro.serve drain  --socket /tmp/daris.sock
 
-    # offline: deterministic journal replay / durability audit
+    # offline: deterministic journal replay / durability audit / repair
     python -m repro.serve replay --config serve.json \\
         --journal /tmp/daris.jsonl
     python -m repro.serve audit  --journal /tmp/daris.jsonl
+    python -m repro.serve fsck   --journal /tmp/daris.jsonl [--yes]
 """
 from __future__ import annotations
 
@@ -27,7 +28,8 @@ import sys
 from .client import DarisClient
 from .config import build_server, load_config
 from .daemon import ServeDaemon
-from .journal import audit_zero_lost, read_journal, to_trace_arrivals
+from .journal import (audit_zero_lost, fsck_journal, read_journal,
+                      repair_journal, to_trace_arrivals)
 
 
 def _cmd_daemon(a) -> int:
@@ -82,6 +84,33 @@ def _cmd_audit(a) -> int:
     return 0
 
 
+def _cmd_fsck(a) -> int:
+    """Classify journal damage; with ``--yes``, truncate mid-file
+    corruption to the last valid prefix (destructive, hence the explicit
+    confirmation — everything past the first bad line is lost)."""
+    report = fsck_journal(a.journal)
+    n = len(report["records"])
+    if report["kind"] == "clean":
+        print(f"ok: journal is clean ({n} records)")
+        return 0
+    if report["kind"] == "torn-tail":
+        print(f"ok: torn tail at line {report['bad_line']} ({n} valid "
+              f"records before it) — a normal crash artifact; readers "
+              f"drop it, no repair needed")
+        return 0
+    print(f"CORRUPT: undecodable line {report['bad_line']} with valid "
+          f"records after it; last valid prefix is "
+          f"{report['valid_bytes']} bytes ({n} records)")
+    if not a.yes:
+        print("re-run with --yes to truncate to the last valid prefix "
+              "(records at and beyond the damage are LOST)")
+        return 1
+    repair_journal(a.journal)
+    print(f"repaired: truncated to {report['valid_bytes']} bytes "
+          f"({n} records)")
+    return 0
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(prog="repro.serve", description=__doc__)
     sub = p.add_subparsers(dest="verb", required=True)
@@ -116,6 +145,12 @@ def main(argv=None) -> int:
     au = sub.add_parser("audit", help="zero-lost durability audit")
     au.add_argument("--journal", required=True)
 
+    fs = sub.add_parser("fsck", help="journal damage triage / repair")
+    fs.add_argument("--journal", required=True)
+    fs.add_argument("--yes", action="store_true",
+                    help="truncate mid-file corruption to the last "
+                         "valid prefix (destructive)")
+
     a = p.parse_args(argv)
     if a.verb == "daemon":
         return _cmd_daemon(a)
@@ -123,6 +158,8 @@ def main(argv=None) -> int:
         return _cmd_replay(a)
     if a.verb == "audit":
         return _cmd_audit(a)
+    if a.verb == "fsck":
+        return _cmd_fsck(a)
     return _client_verb(a)
 
 

@@ -29,16 +29,45 @@ class DaemonError(RuntimeError):
 
 
 class DarisClient:
-    def __init__(self, socket_path: str, timeout_s: float = 60.0):
+    """``connect_retries`` transient-failure retries on connect: a daemon
+    mid-restart refuses connections for a moment, and a loaded one can
+    time out the accept — both retryable. Backoff doubles from
+    ``retry_backoff_s`` and is capped at ``retry_backoff_cap_s``; only
+    the CONNECT is retried (a request that reached the daemon may have
+    been acted on, so re-sending it is not idempotent)."""
+
+    def __init__(self, socket_path: str, timeout_s: float = 60.0,
+                 connect_retries: int = 3, retry_backoff_s: float = 0.05,
+                 retry_backoff_cap_s: float = 1.0):
         self.socket_path = str(socket_path)
         self.timeout_s = timeout_s
+        self.connect_retries = int(connect_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_cap_s = float(retry_backoff_cap_s)
 
     # ------------------------------------------------------------- plumbing
+    def _connect(self) -> socket.socket:
+        delay = self.retry_backoff_s
+        for attempt in range(self.connect_retries + 1):
+            s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            s.settimeout(self.timeout_s)
+            try:
+                s.connect(self.socket_path)
+                return s
+            except (ConnectionRefusedError, socket.timeout):
+                s.close()
+                if attempt >= self.connect_retries:
+                    raise
+                time.sleep(delay)
+                delay = min(delay * 2.0, self.retry_backoff_cap_s)
+            except BaseException:
+                s.close()
+                raise
+        raise ConnectionRefusedError(self.socket_path)  # unreachable
+
     def call(self, req: Dict, check: bool = True) -> Dict:
-        s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        s.settimeout(self.timeout_s)
+        s = self._connect()
         try:
-            s.connect(self.socket_path)
             f = s.makefile("rwb")
             f.write((json.dumps(req) + "\n").encode("utf-8"))
             f.flush()

@@ -96,6 +96,12 @@ def build_server(cfg: Dict, *, arrivals: Optional[Dict[str, object]] = None
                     scope=b.get("scope", "model"))
     if "sched" in cfg:
         sc.scheduler_options(**cfg["sched"])
+    c = cfg.get("chaos")
+    if c:
+        # {"chaos": {"seed": 0, "stage_fault_rate": 0.01, ...}} — the
+        # same dict shape ChaosPlan takes; see chaos.plan.plan_from_dict
+        from ..chaos.plan import plan_from_dict
+        sc.chaos(plan_from_dict(c))
     s = cfg.get("sanitize")
     if s:
         # {"sanitize": 2} or {"sanitize": {"level": 1, "cadence": 64}};

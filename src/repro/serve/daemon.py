@@ -33,8 +33,8 @@ from typing import Dict, Optional
 
 from ..api import DarisServer
 from .config import build_server
-from .journal import (Journal, TERMINAL_STATUSES, read_journal,
-                      unfinished_submits)
+from .journal import (Journal, TERMINAL_STATUSES, fsck_journal,
+                      read_journal, unfinished_submits)
 
 _POLL_S = 0.02          # pump period while idle
 _RESULT_POLL_S = 0.005  # handler-thread wait granularity for `result`
@@ -60,6 +60,18 @@ class ServeDaemon:
         base_t, base_seq = 0.0, 0
         if os.path.exists(journal_path) \
                 and os.path.getsize(journal_path) > 0:
+            fsck = fsck_journal(journal_path)
+            if fsck["kind"] == "mid-file":
+                # a torn TAIL is a normal crash artifact (tolerated);
+                # valid records AFTER damage mean acknowledged work would
+                # be silently dropped on resume — refuse, never guess
+                raise RuntimeError(
+                    f"journal {journal_path} is corrupt mid-file (first "
+                    f"bad line {fsck['bad_line']}, valid records follow "
+                    f"it): refusing to resume. Inspect and repair with "
+                    f"`python -m repro.serve fsck --journal "
+                    f"{journal_path}` (add --yes to truncate to the "
+                    f"last valid prefix).")
             records = read_journal(journal_path)
             stamps = [r["at_ms"] for r in records if "at_ms" in r]
             seqs = [r["seq"] for r in records if "seq" in r]
@@ -69,7 +81,10 @@ class ServeDaemon:
         if checkpoint_path and os.path.exists(checkpoint_path):
             self.server.load_state(checkpoint_path)
 
-        self.journal = Journal(journal_path, fsync=fsync)
+        self.journal = Journal(
+            journal_path, fsync=fsync,
+            chaos=getattr(self.server.core, "_chaos", None))
+        self._degrade_seen = 0    # chaos transitions already journaled
         self._seq = itertools.count(base_seq)
         self._last_t = base_t          # latest stamped virtual instant
         self._virt0 = base_t           # virtual time at daemon start
@@ -255,7 +270,9 @@ class ServeDaemon:
 
     # ------------------------------------------------------------- harvest
     def _harvest(self) -> None:
-        """Journal terminal outcomes for every open submission."""
+        """Journal terminal outcomes for every open submission, plus any
+        new chaos degradation-mode transitions (ops forensics: the
+        journal records WHEN the engine shed load and why)."""
         for seq in list(self._open):
             h = self._handles[seq]
             if h.status in TERMINAL_STATUSES:
@@ -263,6 +280,13 @@ class ServeDaemon:
                                      "status": h.status,
                                      "response_ms": h.response_ms})
                 self._open.discard(seq)
+        ch = getattr(self.server.core, "_chaos", None)
+        if ch is not None:
+            while self._degrade_seen < len(ch.transitions):
+                at_ms, frm, to = ch.transitions[self._degrade_seen]
+                self.journal.append({"rec": "degrade", "from": frm,
+                                     "to": to, "at_ms": at_ms})
+                self._degrade_seen += 1
 
     # -------------------------------------------------------------- socket
     def _open_socket(self) -> None:

@@ -33,17 +33,23 @@ JOURNAL_VERSION = 1
 
 # submissions in these states are finished business; anything else found
 # in a journal at restart must be re-injected
-TERMINAL_STATUSES = ("completed", "missed", "rejected", "cancelled")
+TERMINAL_STATUSES = ("completed", "missed", "rejected", "cancelled",
+                     "aborted")
 
 
 class Journal:
     """Append-only JSONL writer. ``append`` flushes every record (the
     ack-after-journal contract); ``fsync=True`` additionally fsyncs,
-    trading throughput for power-loss durability."""
+    trading throughput for power-loss durability. ``chaos`` (a
+    ``ChaosState``) injects transient flush failures: ``append`` retries
+    up to ``plan.io_max_retries`` times, then re-raises — the daemon's
+    ack-after-journal contract turns an exhausted retry into a refused
+    submission rather than a silently lost one."""
 
-    def __init__(self, path: str, fsync: bool = False):
+    def __init__(self, path: str, fsync: bool = False, chaos=None):
         self.path = str(path)
         self.fsync = fsync
+        self.chaos = chaos
         fresh = not os.path.exists(self.path) \
             or os.path.getsize(self.path) == 0
         self._f = open(self.path, "a", encoding="utf-8")
@@ -51,10 +57,21 @@ class Journal:
             self.append({"rec": "meta", "version": JOURNAL_VERSION})
 
     def append(self, record: Dict) -> None:
-        self._f.write(json.dumps(record, sort_keys=True) + "\n")
-        self._f.flush()
-        if self.fsync:
-            os.fsync(self._f.fileno())
+        line = json.dumps(record, sort_keys=True) + "\n"
+        ch = self.chaos
+        attempts = 1 + (ch.plan.io_max_retries if ch is not None else 0)
+        for i in range(attempts):
+            try:
+                if ch is not None and ch.io_fails():
+                    raise OSError("chaos: injected journal write failure")
+                self._f.write(line)
+                self._f.flush()
+                if self.fsync:
+                    os.fsync(self._f.fileno())
+                return
+            except OSError:
+                if i + 1 >= attempts:
+                    raise
 
     def close(self) -> None:
         self._f.close()
@@ -74,6 +91,78 @@ def read_journal(path: str) -> List[Dict]:
             except json.JSONDecodeError:
                 break     # torn tail: everything after it is unreadable
     return out
+
+
+def fsck_journal(path: str) -> Dict:
+    """Classify journal damage without modifying the file.
+
+    Returns ``{"ok", "kind", "records", "bad_line", "valid_bytes"}``:
+
+    * ``kind="clean"`` — every line parses.
+    * ``kind="torn-tail"`` — exactly one undecodable line and it is the
+      LAST line: the classic crash-mid-append artifact. ``read_journal``
+      already tolerates this (the torn record was never acknowledged).
+    * ``kind="mid-file"`` — an undecodable line with valid JSON records
+      AFTER it. That is not a torn write; it is corruption (bit rot,
+      concurrent writer, manual editing) and acknowledged records after
+      the damage would be silently dropped by a tolerant reader. The
+      daemon refuses to start on such a journal; ``repair_journal``
+      truncates to ``valid_bytes`` (the last valid prefix) after the
+      operator confirms losing everything beyond it.
+
+    ``valid_bytes`` is the byte offset of the end of the last good line
+    BEFORE the first bad one — the truncation point a repair uses.
+    """
+    records: List[Dict] = []
+    bad_line = None            # 1-based line number of first bad line
+    valid_bytes = 0
+    after_bad = False          # any valid JSON after the first bad line?
+    offset = 0
+    with open(path, "rb") as f:
+        for lineno, raw in enumerate(f, 1):
+            end = offset + len(raw)
+            text = raw.decode("utf-8", errors="replace").strip()
+            if not text:
+                if bad_line is None:
+                    valid_bytes = end
+                offset = end
+                continue
+            try:
+                rec = json.loads(text)
+            except json.JSONDecodeError:
+                if bad_line is None:
+                    bad_line = lineno
+                offset = end
+                continue
+            if bad_line is None:
+                records.append(rec)
+                valid_bytes = end
+            else:
+                after_bad = True
+            offset = end
+    if bad_line is None:
+        kind = "clean"
+    elif after_bad:
+        kind = "mid-file"
+    else:
+        kind = "torn-tail"
+    return {"ok": kind in ("clean", "torn-tail"), "kind": kind,
+            "records": records, "bad_line": bad_line,
+            "valid_bytes": valid_bytes}
+
+
+def repair_journal(path: str) -> Dict:
+    """Truncate ``path`` to its last valid prefix (``fsck_journal``'s
+    ``valid_bytes``). Destructive — every record at or beyond the first
+    undecodable line is lost; callers must get explicit operator
+    confirmation first (``python -m repro.serve fsck --yes``)."""
+    report = fsck_journal(path)
+    if report["kind"] == "clean":
+        return report
+    with open(path, "r+b") as f:
+        f.truncate(report["valid_bytes"])
+    report["repaired"] = True
+    return report
 
 
 def submit_records(records: List[Dict]) -> List[Dict]:

@@ -1,0 +1,372 @@
+"""Chaos layer (repro.chaos): seeded fault injection, deadline-aware
+retry/abort, stage watchdogs, brownout degradation, journal fsck, and
+client connect retry.
+
+Every engine scenario runs with the DSAN sanitizer at level 2, so the
+conservation law with the new ``aborted`` term —
+
+    admitted == completed + retired + aborted + live
+
+— is audited on every engine step, not just at the end.
+"""
+from __future__ import annotations
+
+import json
+import socket
+
+import pytest
+
+from repro.api import (HP, LP, Brownout, ChaosPlan, DegradationPolicy,
+                       ManualArrival, RetryPolicy, ServerConfig,
+                       SubmitHandle)
+from repro.analysis import Sanitizer
+from repro.chaos import ChaosState, NORMAL, plan_from_dict
+
+from tests.test_serve import daemon_cfg, ideal_device, make_spec
+
+
+def chaos_server(plan=None, *, specs, horizon=600.0, contexts=2,
+                 streams=1, os_=2.0, sanitize=2, manual=(), **sched_kw):
+    sc = ServerConfig.sim()
+    if sanitize:
+        sc.sanitize(level=sanitize)
+    for s in specs:
+        sc.task(s)
+    for s in manual:
+        sc.task(s, arrival=ManualArrival())
+    sc.contexts(contexts).streams(streams).oversubscribe(os_)
+    sc.device(ideal_device()).horizon_ms(horizon)
+    sc.phase_offsets(False).noise(0.0).seed(0)
+    if sched_kw:
+        sc.scheduler_options(**sched_kw)
+    if plan is not None:
+        sc.chaos(plan)
+    return sc.build()
+
+
+def _audited(srv):
+    s = srv.core._sanitizer
+    assert isinstance(s, Sanitizer) and s.violations == 0 and s.audits > 0
+
+
+SPECS = lambda: [make_spec("hp", HP, [4.0], 40.0),          # noqa: E731
+                 make_spec("lp0", LP, [6.0], 60.0),
+                 make_spec("lp1", LP, [5.0], 50.0)]
+
+
+# ------------------------------------------------------------ determinism
+def test_chaos_determinism_same_seed_same_run():
+    """Same seed + plan + workload -> bit-identical summaries."""
+    plan = ChaosPlan(seed=7, stage_fault_rate=0.2, stall_rate=0.2,
+                     stall_ms=8.0, watchdog_kappa=6.0,
+                     degradation=DegradationPolicy(
+                         check_every_ms=50.0, brownout_enter=0.5,
+                         brownout_exit=0.3, emergency_enter=0.8,
+                         emergency_exit=0.4))
+    runs = []
+    for _ in range(2):
+        srv = chaos_server(plan, specs=SPECS())
+        m = srv.run()
+        _audited(srv)
+        runs.append(m.summary())
+    assert runs[0] == runs[1]
+    assert runs[0]["chaos_faults"] > 0
+
+
+def test_chaos_off_bit_identical():
+    """An installed all-defaults plan is a no-op: the run matches a bare
+    engine exactly (twin-path discipline)."""
+    bare = chaos_server(None, specs=SPECS()).run().summary()
+    noop = chaos_server(ChaosPlan(seed=3), specs=SPECS()).run().summary()
+    assert bare == noop
+    assert "chaos_faults" not in bare
+
+
+def test_different_seed_different_faults():
+    a = chaos_server(ChaosPlan(seed=1, stage_fault_rate=0.3),
+                     specs=SPECS()).run().summary()
+    b = chaos_server(ChaosPlan(seed=2, stage_fault_rate=0.3),
+                     specs=SPECS()).run().summary()
+    assert a["chaos_faults"] > 0 and b["chaos_faults"] > 0
+    assert a != b
+
+
+# ---------------------------------------------------------- retry / abort
+def test_retry_recovers_transient_faults():
+    """Moderate fault rate + generous deadlines: retries succeed, work
+    still completes, books balance under level-2 audit."""
+    plan = ChaosPlan(seed=0, stage_fault_rate=0.25,
+                     retry=RetryPolicy(max_attempts=5, backoff_ms=0.5))
+    srv = chaos_server(plan, specs=[make_spec("hp", HP, [4.0], 80.0),
+                                    make_spec("lp", LP, [6.0], 120.0)])
+    m = srv.run()
+    _audited(srv)
+    assert m.chaos_faults > 0 and m.retries > 0
+    assert sum(m.completed.values()) > 0
+
+
+def test_abort_after_attempts_exhausted():
+    """Every stage faults, retries capped, deadline-awareness off: every
+    admitted job must end ABORTED — none completed, none leaked."""
+    plan = ChaosPlan(seed=0, stage_fault_rate=1.0,
+                     retry=RetryPolicy(max_attempts=2, backoff_ms=0.5,
+                                       deadline_aware=False))
+    srv = chaos_server(plan, specs=[],
+                       manual=[make_spec("job", LP, [5.0], 200.0)],
+                       horizon=2000.0, contexts=1, os_=1.0)
+    srv.begin_serving()
+    hs = [srv.request("job", at_ms=10.0 * i, tenant="t")
+          for i in range(5)]
+    m = srv.end_serving(until_idle=True)
+    _audited(srv)
+    assert all(h.status == SubmitHandle.ABORTED for h in hs)
+    assert m.aborted[LP] == 5 and sum(m.completed.values()) == 0
+    # each job: first try + one retry, both fault
+    assert m.chaos_faults == 10 and m.retries == 5
+    assert m.per_tenant["t"]["aborted"] == 5
+
+
+def test_deadline_aware_gives_up_early():
+    """Tight deadline + always-failing stage: the deadline-aware bailout
+    aborts without burning the full attempt budget."""
+    plan = ChaosPlan(seed=0, stage_fault_rate=1.0,
+                     retry=RetryPolicy(max_attempts=50, backoff_ms=4.0,
+                                       backoff_mult=1.0,
+                                       deadline_aware=True))
+    srv = chaos_server(plan, specs=[],
+                       manual=[make_spec("job", LP, [5.0], 20.0)],
+                       horizon=2000.0, contexts=1, os_=1.0)
+    srv.begin_serving()
+    h = srv.request("job", at_ms=0.0)
+    m = srv.end_serving(until_idle=True)
+    _audited(srv)
+    assert h.status == SubmitHandle.ABORTED
+    assert m.aborted[LP] == 1
+    assert m.retries < 10    # far under the 50-attempt budget
+
+
+def test_cancel_while_retry_waiting():
+    """Cancelling a job parked in backoff resolves cleanly (the RETRY
+    event is the job's only token; cancel must not leak it)."""
+    plan = ChaosPlan(seed=0, stage_fault_rate=1.0,
+                     retry=RetryPolicy(max_attempts=10, backoff_ms=50.0,
+                                       backoff_cap_ms=50.0,
+                                       deadline_aware=False))
+    srv = chaos_server(plan, specs=[],
+                       manual=[make_spec("job", LP, [5.0], 1000.0)],
+                       horizon=5000.0, contexts=1, os_=1.0)
+    srv.begin_serving()
+    h = srv.request("job", at_ms=0.0)
+    srv.pump(10.0)           # first attempt faulted; now in backoff
+    srv.cancel(h, at_ms=12.0)
+    m = srv.end_serving(until_idle=True)
+    _audited(srv)
+    assert h.status == SubmitHandle.CANCELLED
+    assert sum(m.completed.values()) == 0
+
+
+# --------------------------------------------------------------- watchdog
+def test_watchdog_kills_and_redispatches():
+    """Stalled stages blow the k x MRET watchdog, get killed at the lane
+    and re-dispatched at the stage boundary; clean launches complete."""
+    plan = ChaosPlan(seed=0, stall_rate=0.5, stall_ms=60.0,
+                     watchdog_kappa=3.0)
+    srv = chaos_server(plan, specs=SPECS(), horizon=1200.0,
+                       straggler_kappa=0.0)    # watchdog, not stragglers
+    m = srv.run()
+    _audited(srv)
+    assert m.watchdog_kills > 0
+    assert m.stragglers == 0
+    assert sum(m.completed.values()) > 0
+
+
+# ------------------------------------------------------------- brownouts
+def test_brownout_slows_device_and_stays_deterministic():
+    plan = ChaosPlan(seed=0, brownouts=(
+        Brownout(t0_ms=100.0, t1_ms=400.0, device=0, slow_factor=3.0),))
+    clean = chaos_server(None, specs=SPECS()).run().summary()
+    srv = chaos_server(plan, specs=SPECS())
+    browned = srv.run().summary()
+    _audited(srv)
+    # a 3x slowdown for half the run must show up in LP response times
+    assert browned["resp_lp"]["mean"] > clean["resp_lp"]["mean"]
+    again = chaos_server(plan, specs=SPECS()).run().summary()
+    assert browned == again
+
+
+# ------------------------------------------------------------ degradation
+def test_degradation_sheds_lp_keeps_hp():
+    """Overload trips BROWNOUT/EMERGENCY: LP admissions are shed, HP
+    keeps its zero-miss record, transitions are recorded."""
+    specs = [make_spec("hp", HP, [4.0], 40.0)] + [
+        make_spec(f"lp{i}", LP, [9.0], 30.0) for i in range(4)]
+    plan = ChaosPlan(seed=0, degradation=DegradationPolicy(
+        check_every_ms=20.0, brownout_enter=0.5, brownout_exit=0.3,
+        emergency_enter=0.75, emergency_exit=0.4))
+    srv = chaos_server(plan, specs=specs, contexts=1, os_=4.0)
+    m = srv.run()
+    _audited(srv)
+    assert m.degrade_transitions > 0
+    assert m.shed[LP] > 0 and m.shed[HP] == 0
+    assert m.dmr(HP) == 0.0
+    ch = srv.core._chaos
+    assert ch.transitions and ch.transitions[0][1] == NORMAL
+
+
+# -------------------------------------------------------------- I/O chaos
+def test_journal_append_io_chaos_retries_then_survives(tmp_path):
+    from repro.serve.journal import Journal, read_journal
+    ch = ChaosState(ChaosPlan(seed=0, io_error_rate=0.2, io_max_retries=4))
+    j = Journal(str(tmp_path / "j.jsonl"), chaos=ch)
+    for i in range(20):
+        j.append({"rec": "submit", "seq": i})
+    j.close()
+    assert ch.io_injected > 0
+    assert len(read_journal(j.path)) == 21      # meta + 20, none lost
+
+
+def test_journal_append_io_chaos_exhausts(tmp_path):
+    from repro.serve.journal import Journal
+    ch = ChaosState(ChaosPlan(seed=0, io_error_rate=1.0, io_max_retries=2))
+    with pytest.raises(OSError, match="chaos"):
+        Journal(str(tmp_path / "j.jsonl"), chaos=ch)   # meta append fails
+
+
+def test_checkpoint_io_chaos(tmp_path):
+    from repro.checkpoint.ckpt import (load_scheduler_state,
+                                       save_scheduler_state)
+    srv = chaos_server(None, specs=SPECS(), sanitize=0, horizon=100.0)
+    srv.run()
+    path = str(tmp_path / "s.msgpack")
+    ch = ChaosState(ChaosPlan(seed=0, io_error_rate=1.0, io_max_retries=2))
+    with pytest.raises(OSError, match="chaos"):
+        save_scheduler_state(srv.scheduler, path, chaos=ch)
+    ch2 = ChaosState(ChaosPlan(seed=0, io_error_rate=0.4, io_max_retries=4))
+    save_scheduler_state(srv.scheduler, path, chaos=ch2)
+    load_scheduler_state(srv.scheduler, path)   # round-trips after retry
+
+
+# ------------------------------------------------------------ journal fsck
+def _write_journal(path, lines):
+    path.write_text("\n".join(lines) + "\n")
+
+
+def test_fsck_clean_and_torn_tail(tmp_path):
+    from repro.serve.journal import fsck_journal
+    p = tmp_path / "j.jsonl"
+    good = [json.dumps({"rec": "submit", "seq": i}) for i in range(3)]
+    _write_journal(p, good)
+    r = fsck_journal(str(p))
+    assert r["kind"] == "clean" and r["ok"] and len(r["records"]) == 3
+    # torn tail: partial trailing line, no newline
+    p.write_text("\n".join(good) + "\n" + '{"rec": "sub')
+    r = fsck_journal(str(p))
+    assert r["kind"] == "torn-tail" and r["ok"]
+    assert r["bad_line"] == 4 and len(r["records"]) == 3
+
+
+def test_fsck_midfile_detect_and_repair(tmp_path):
+    from repro.serve.journal import fsck_journal, read_journal, repair_journal
+    p = tmp_path / "j.jsonl"
+    good = [json.dumps({"rec": "submit", "seq": i}) for i in range(4)]
+    lines = good[:2] + ["@@corrupt@@"] + good[2:]
+    _write_journal(p, lines)
+    r = fsck_journal(str(p))
+    assert r["kind"] == "mid-file" and not r["ok"]
+    assert r["bad_line"] == 3 and len(r["records"]) == 2
+    # a tolerant reader would silently drop the 2 records after the rot
+    assert len(read_journal(str(p))) == 2
+    repair_journal(str(p))
+    r2 = fsck_journal(str(p))
+    assert r2["kind"] == "clean" and len(r2["records"]) == 2
+    assert read_journal(str(p)) == r2["records"]
+
+
+def test_daemon_refuses_midfile_corrupt_journal(tmp_path):
+    from repro.serve.daemon import ServeDaemon
+    p = tmp_path / "journal.jsonl"
+    rec = {"rec": "submit", "seq": 0, "task": "resnet18", "tenant": None,
+           "prio": 0, "at_ms": 1.0}
+    _write_journal(p, [json.dumps({"rec": "meta", "version": 1}),
+                       "@@rot@@", json.dumps(rec)])
+    with pytest.raises(RuntimeError, match="repro.serve fsck"):
+        ServeDaemon(daemon_cfg(), socket_path=str(tmp_path / "d.sock"),
+                    journal_path=str(p))
+
+
+def test_fsck_cli_verb(tmp_path, capsys):
+    from repro.serve.__main__ import main
+    p = tmp_path / "j.jsonl"
+    good = [json.dumps({"rec": "submit", "seq": i}) for i in range(3)]
+    _write_journal(p, good[:2] + ["@@rot@@"] + good[2:])
+    assert main(["fsck", "--journal", str(p)]) == 1     # refuse w/o --yes
+    assert "CORRUPT" in capsys.readouterr().out
+    assert main(["fsck", "--journal", str(p), "--yes"]) == 0
+    assert main(["fsck", "--journal", str(p)]) == 0     # clean now
+
+
+# -------------------------------------------------------- client retries
+def test_client_connect_retry_backoff(tmp_path, monkeypatch):
+    """Connect refusals retry with doubling capped backoff, then raise."""
+    from repro.serve.client import DarisClient
+    sock_path = str(tmp_path / "dead.sock")
+    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    s.bind(sock_path)
+    s.close()            # socket file exists, nobody listening -> refused
+    sleeps = []
+    monkeypatch.setattr("repro.serve.client.time.sleep", sleeps.append)
+    c = DarisClient(sock_path, connect_retries=3, retry_backoff_s=0.05,
+                    retry_backoff_cap_s=0.08)
+    with pytest.raises(ConnectionRefusedError):
+        c.ping()
+    assert sleeps == [0.05, 0.08, 0.08]
+
+
+# ----------------------------------------------------- realtime backend
+@pytest.mark.slow
+def test_realtime_backend_chaos_faults_and_retry():
+    """Chaos on the wall-clock backend: faults drawn deterministically on
+    the engine thread at launch, failed completions never commit worker
+    output, retries recover — real JAX execution underneath."""
+    from repro.api import DeviceModel
+    from repro.models.cnn import build_resnet
+    from repro.serving.engine import staged_cnn_taskspec
+    model = build_resnet(18, width=8)
+    specs = [staged_cnn_taskspec(model, priority=HP, jps=20.0,
+                                 input_hw=32, tag="-hp"),
+             staged_cnn_taskspec(model, priority=LP, jps=20.0,
+                                 input_hw=32, tag="-lp")]
+    srv = (ServerConfig.realtime()
+           .tasks(specs).contexts(2).oversubscribe(2.0)
+           .device(DeviceModel(n_units=2.0)).horizon_ms(1500.0)
+           .sanitize(level=1)
+           .chaos(ChaosPlan(seed=0, stage_fault_rate=0.3,
+                            retry=RetryPolicy(max_attempts=4,
+                                              backoff_ms=1.0)))
+           .build())
+    m = srv.run()
+    _audited(srv)
+    assert m.chaos_faults > 0 and m.retries > 0
+    assert sum(m.completed.values()) > 0
+
+
+# ------------------------------------------------------- config plumbing
+def test_plan_from_dict_serving_config():
+    plan = plan_from_dict({
+        "seed": 5, "stage_fault_rate": 0.01,
+        "retry": {"max_attempts": 4, "backoff_ms": 2.0},
+        "degradation": {"check_every_ms": 50.0},
+        "brownouts": [{"t0_ms": 10.0, "t1_ms": 20.0, "slow_factor": 2.5}],
+        "watchdog_kappa": 4.0})
+    assert plan.retry.max_attempts == 4
+    assert plan.degradation.check_every_ms == 50.0
+    assert plan.brownouts[0].slow_factor == 2.5
+
+
+def test_serve_config_chaos_key():
+    from repro.serve.config import build_server
+    cfg = daemon_cfg(chaos={"seed": 1, "stage_fault_rate": 0.02,
+                            "watchdog_kappa": 4.0})
+    srv = build_server(cfg)
+    assert srv.core._chaos is not None
+    assert srv.core._chaos.plan.stage_fault_rate == 0.02

@@ -5,7 +5,8 @@ engine step), so the per-step conservation identities are asserted
 continuously by the auditor; the tests then assert the end-of-run laws
 explicitly: per priority and per tenant,
 
-    submitted == completed + missed + cancelled + rejected + pending
+    submitted == completed + missed + cancelled + rejected + aborted
+                 + pending
 
 where ``completed`` counts every finished job (missed ones included —
 soft real-time: a missed job still completed, so ``missed`` is a subset
@@ -27,15 +28,16 @@ def assert_conservation(m, handles):
         sub = [h for h in handles if h.task.priority == p]
         by = {s: sum(1 for h in sub if h.status == s)
               for s in ("completed", "missed", "cancelled", "rejected",
-                        "pending", "queued", "running")}
+                        "aborted", "pending", "queued", "running")}
         finished = by["completed"] + by["missed"]
         pending = by["pending"] + by["queued"] + by["running"]
         assert len(sub) == (finished + by["cancelled"] + by["rejected"]
-                            + pending)
+                            + by["aborted"] + pending)
     pt = m.per_tenant or {}
     for tenant, d in pt.items():
         assert d["submitted"] == (d["completed"] + d["cancelled"]
-                                  + d["rejected"] + d["pending"]), tenant
+                                  + d["rejected"] + d["aborted"]
+                                  + d["pending"]), tenant
         assert d["missed"] <= d["completed"]
     if m.per_device:
         for p in (HP, LP):
@@ -142,6 +144,36 @@ def test_conservation_cluster_fail_device_with_transfers():
     # paid the cross-device transfer charge (deterministic under seed 0)
     assert m.faults == 1 and m.transfers >= 1
     assert sum(m.completed.values()) > 0
+    assert all(h.done or h.status in (SubmitHandle.QUEUED,
+                                      SubmitHandle.RUNNING)
+               for h in subs)
+
+
+# --------------------------------------------------- chaos retry / abort
+def test_conservation_chaos_faults_with_tenants():
+    """Transient stage faults with deadline-aware retry: some jobs
+    recover, some abort — the lattice (now with the ``aborted`` term)
+    must still close, per priority, per tenant, live on every step."""
+    from repro.api import ChaosPlan, RetryPolicy
+    sc = ServerConfig.sim().sanitize(level=2)
+    sc.task(make_spec("hp", HP, [4.0], 60.0))
+    sc.task(make_spec("lp", LP, [6.0], 50.0))
+    sc.task(make_spec("one", LP, [5.0], 45.0), arrival=ManualArrival())
+    sc.contexts(2).streams(1).oversubscribe(2.0).device(ideal_device())
+    sc.horizon_ms(1500.0).phase_offsets(False).noise(0.0).seed(0)
+    sc.chaos(ChaosPlan(seed=0, stage_fault_rate=0.5,
+                       retry=RetryPolicy(max_attempts=3, backoff_ms=2.0)))
+    srv = sc.build()
+    subs = [srv.submit(make_spec(f"x{i}", LP, [5.0], 45.0),
+                       at_ms=40.0 * i, tenant="chaosers")
+            for i in range(6)]
+    m = _audited(srv.run(), srv)
+    assert m.chaos_faults > 0 and m.retries > 0
+    assert sum(m.aborted.values()) > 0          # 50% faults: some give up
+    assert sum(m.completed.values()) > 0        # ...and some recover
+    assert_conservation(m, srv.core._all_handles)
+    d = m.per_tenant["chaosers"]
+    assert d["submitted"] == 6
     assert all(h.done or h.status in (SubmitHandle.QUEUED,
                                       SubmitHandle.RUNNING)
                for h in subs)
