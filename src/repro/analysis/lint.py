@@ -26,6 +26,16 @@ know about:
   ``eq=False`` elements it happens to degrade to a linear identity
   scan, but the intent must be declared (``# dsan: ignore[DSAN005]``)
   or an O(1) identity container used instead.
+* **DSAN006** — a call through an optional hook attribute
+  (``self._sanitizer.…(...)`` / ``self._chaos.…(...)``) that no
+  enclosing ``is not None`` check guards. The twin-path zero-overhead
+  contract keeps these hooks ``None`` unless opted in; an unguarded
+  call is an AttributeError waiting for the default path.
+* **DSAN007** — an RNG draw from a non-chaos stream inside
+  ``repro/chaos/`` code (``np.random.*`` globals, or a ``*rng``
+  attribute not owned by ``self``). Chaos must draw only from its own
+  seeded ``self.rng`` / ``self.io_rng`` streams — borrowing the sim
+  stream breaks the chaos-off bit-identical twin path.
 
 Suppression: ``# dsan: ignore`` (all rules) or
 ``# dsan: ignore[DSAN003, DSAN005]`` on the offending line.
@@ -89,6 +99,16 @@ _WALL_CLOCK_NAMES = frozenset(("monotonic", "perf_counter",
 _DETERMINISTIC = re.compile(
     r"(^|[/\\])(core|cluster)[/\\]|[/\\]runtime[/\\]engine_core\.py$")
 
+# optional hook attributes gated by the twin-path contract (DSAN006)
+_HOOK_ATTRS = frozenset(("_sanitizer", "_chaos"))
+
+# chaos code must draw from its own seeded streams (DSAN007)
+_CHAOS_PATH = re.compile(r"(^|[/\\])chaos[/\\]")
+_RNG_DRAWS = frozenset((
+    "random", "normal", "uniform", "integers", "choice",
+    "standard_normal", "lognormal", "exponential", "poisson",
+    "shuffle", "permutation"))
+
 
 def _name_of(node: ast.AST) -> Optional[str]:
     """Best-effort identifier for a comparison operand / receiver."""
@@ -130,6 +150,7 @@ class _Checker(ast.NodeVisitor):
         self.lines = lines
         self.findings: List[Finding] = []
         self.deterministic = bool(_DETERMINISTIC.search(path))
+        self.chaos_path = bool(_CHAOS_PATH.search(path))
 
     def _flag(self, node: ast.AST, rule: str, message: str) -> None:
         if not _suppressed(self.lines, node.lineno, rule):
@@ -169,11 +190,140 @@ class _Checker(ast.NodeVisitor):
 
     def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
         self._check_memo_mutation(node)
+        self._check_hook_guards(node)
         self.generic_visit(node)
 
     def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
         self._check_memo_mutation(node)
+        self._check_hook_guards(node)
         self.generic_visit(node)
+
+    # ---- DSAN006: unguarded optional-hook calls -------------------------
+    @staticmethod
+    def _hook_in_chain(node: ast.AST) -> Optional[str]:
+        """Hook attr name when an attribute chain passes through
+        ``<recv>._sanitizer`` / ``<recv>._chaos``."""
+        while isinstance(node, ast.Attribute):
+            if node.attr in _HOOK_ATTRS:
+                return node.attr
+            node = node.value
+        return None
+
+    def _hook_guards(self, test: ast.AST) -> tuple:
+        """(hooks proven non-None when ``test`` is true, when false)."""
+        pos: Set[str] = set()
+        neg: Set[str] = set()
+        if isinstance(test, ast.Compare) and len(test.ops) == 1:
+            name = (test.left.attr
+                    if isinstance(test.left, ast.Attribute)
+                    and test.left.attr in _HOOK_ATTRS else None)
+            comp = test.comparators[0]
+            if (name and isinstance(comp, ast.Constant)
+                    and comp.value is None):
+                if isinstance(test.ops[0], ast.IsNot):
+                    pos.add(name)
+                elif isinstance(test.ops[0], ast.Is):
+                    neg.add(name)
+        elif isinstance(test, ast.Attribute) and test.attr in _HOOK_ATTRS:
+            pos.add(test.attr)      # truthiness guard: `if self._chaos:`
+        elif isinstance(test, ast.BoolOp):
+            if isinstance(test.op, ast.And):
+                for v in test.values:
+                    p, _ = self._hook_guards(v)
+                    pos |= p
+            else:
+                for v in test.values:
+                    _, n = self._hook_guards(v)
+                    neg |= n
+        elif isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            p, n = self._hook_guards(test.operand)
+            return n, p
+        return pos, neg
+
+    @staticmethod
+    def _terminates(stmts: List[ast.stmt]) -> bool:
+        return bool(stmts) and isinstance(
+            stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+    def _check_hook_guards(self, fn: ast.AST) -> None:
+        self._scan_hook_stmts(fn.body, set())
+
+    def _scan_hook_stmts(self, stmts: List[ast.stmt],
+                         guarded: Set[str]) -> None:
+        guarded = set(guarded)
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue            # own scope, scanned separately
+            if isinstance(st, ast.If):
+                pos, neg = self._hook_guards(st.test)
+                self._scan_hook_expr(st.test, guarded)
+                self._scan_hook_stmts(st.body, guarded | pos)
+                self._scan_hook_stmts(st.orelse, guarded | neg)
+                # `if hook is None: return` proves the tail non-None
+                if self._terminates(st.body):
+                    guarded |= neg
+                if st.orelse and self._terminates(st.orelse):
+                    guarded |= pos
+                continue
+            if isinstance(st, ast.While):
+                pos, _ = self._hook_guards(st.test)
+                self._scan_hook_expr(st.test, guarded)
+                self._scan_hook_stmts(st.body, guarded | pos)
+                self._scan_hook_stmts(st.orelse, guarded)
+                continue
+            if isinstance(st, (ast.For, ast.AsyncFor)):
+                self._scan_hook_expr(st.iter, guarded)
+                self._scan_hook_stmts(st.body, guarded)
+                self._scan_hook_stmts(st.orelse, guarded)
+                continue
+            if isinstance(st, (ast.With, ast.AsyncWith)):
+                for item in st.items:
+                    self._scan_hook_expr(item.context_expr, guarded)
+                self._scan_hook_stmts(st.body, guarded)
+                continue
+            if isinstance(st, ast.Try):
+                for blk in (st.body, st.orelse, st.finalbody):
+                    self._scan_hook_stmts(blk, guarded)
+                for h in st.handlers:
+                    self._scan_hook_stmts(h.body, guarded)
+                continue
+            if isinstance(st, ast.Assign):
+                for tgt in st.targets:
+                    if (isinstance(tgt, ast.Attribute)
+                            and tgt.attr in _HOOK_ATTRS):
+                        guarded -= {tgt.attr}   # may have been rebound
+                self._scan_hook_expr(st.value, guarded)
+                continue
+            self._scan_hook_expr(st, guarded)
+
+    def _scan_hook_expr(self, node: ast.AST, guarded: Set[str]) -> None:
+        if isinstance(node, ast.IfExp):
+            pos, neg = self._hook_guards(node.test)
+            self._scan_hook_expr(node.test, guarded)
+            self._scan_hook_expr(node.body, guarded | pos)
+            self._scan_hook_expr(node.orelse, guarded | neg)
+            return
+        if isinstance(node, ast.BoolOp) and isinstance(node.op, ast.And):
+            acc = set(guarded)      # short-circuit: later operands are
+            for v in node.values:   # guarded by earlier non-None tests
+                self._scan_hook_expr(v, acc)
+                p, _ = self._hook_guards(v)
+                acc |= p
+            return
+        if isinstance(node, ast.Call):
+            hook = self._hook_in_chain(node.func)
+            if hook and hook not in guarded:
+                self._flag(
+                    node, "DSAN006",
+                    f"call through optional hook '{hook}' without an "
+                    f"`is not None` guard — the twin-path contract keeps "
+                    f"it None unless opted in")
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            self._scan_hook_expr(child, guarded)
 
     # ---- DSAN002: identity dataclass used as value key ------------------
     @staticmethod
@@ -244,7 +394,34 @@ class _Checker(ast.NodeVisitor):
                     node, "DSAN004",
                     f"wall-clock read {f.id}() in a deterministic sim "
                     f"path — use the backend's virtual clock (now_ms)")
+        self._check_chaos_rng(node)
         self.generic_visit(node)
+
+    # ---- DSAN007: foreign RNG stream in chaos code ----------------------
+    def _check_chaos_rng(self, node: ast.Call) -> None:
+        if not self.chaos_path:
+            return
+        f = node.func
+        if not isinstance(f, ast.Attribute) or f.attr not in _RNG_DRAWS:
+            return
+        recv = f.value
+        if (isinstance(recv, ast.Attribute) and recv.attr == "random"
+                and isinstance(recv.value, ast.Name)
+                and recv.value.id in ("np", "numpy")):
+            self._flag(
+                node, "DSAN007",
+                f"np.random.{f.attr}() draws from the global stream "
+                f"inside chaos code — use the plan's seeded self.rng / "
+                f"self.io_rng")
+        elif (isinstance(recv, ast.Attribute) and recv.attr.endswith("rng")
+              and not (isinstance(recv.value, ast.Name)
+                       and recv.value.id == "self")):
+            self._flag(
+                node, "DSAN007",
+                f"RNG draw from foreign stream '{recv.attr}' inside "
+                f"chaos code — chaos must stay on its own seeded "
+                f"self.rng / self.io_rng (chaos-off twin paths are "
+                f"bit-identical only if no shared stream is consumed)")
 
     # ---- DSAN005: bare .remove on identity collections ------------------
     def visit_Expr(self, node: ast.Expr) -> None:

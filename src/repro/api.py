@@ -95,6 +95,7 @@ class ServerConfig:
         self._batch = 1
         self._input_factory = None
         self._ctx_shardings: Optional[Dict[int, object]] = None
+        self._schedcheck_report = None   # set by verify()
 
     # -------------------------------------------------------- entry points
     @classmethod
@@ -468,7 +469,17 @@ class ServerConfig:
                     "to device failure); add GPUs/contexts or a "
                     "reconfigure/autoscale plan")
         if fp and fp.reconfigure_at:
+            seen_at: Dict[float, Dict] = {}
             for t_ms, kwargs in fp.reconfigure_at:
+                prev = seen_at.get(t_ms)
+                if prev is not None:
+                    raise ValueError(
+                        f"duplicate reconfigure_at events at t_ms={t_ms}: "
+                        f"{prev} and {dict(kwargs)} would each run a full "
+                        f"Algorithm-1 re-place at the same instant "
+                        f"(double-counting migrations); merge them into "
+                        f"one event or offset their timestamps")
+                seen_at[t_ms] = dict(kwargs)
                 if t_ms > self._horizon_ms:
                     raise ValueError(f"reconfigure_at t_ms={t_ms} is beyond "
                                      f"the horizon ({self._horizon_ms} ms)")
@@ -505,6 +516,26 @@ class ServerConfig:
         if dupes and self._arrivals:
             raise ValueError("per-name arrival overrides require unique "
                              "task names")
+
+    def verify(self, *, enforce: bool = True) -> "ServerConfig":
+        """Static schedulability gate (``repro.analysis.schedcheck``):
+        analyze this configuration's whole timeline without running it.
+        With ``enforce=True`` (default) raises ``UnschedulableError``
+        when any HP task is statically UNSCHEDULABLE in any epoch; the
+        full report stays readable via ``schedcheck_report`` either way.
+        Fluent — chain it right before ``build()``."""
+        from .analysis.schedcheck import (UNSCHEDULABLE, UnschedulableError,
+                                          analyze_config)
+        report = analyze_config(self)
+        self._schedcheck_report = report
+        if enforce and report.hp_verdict == UNSCHEDULABLE:
+            raise UnschedulableError(report)
+        return self
+
+    @property
+    def schedcheck_report(self):
+        """The last ``verify()`` report (None until verify() runs)."""
+        return self._schedcheck_report
 
     def build(self) -> "DarisServer":
         self._validate()

@@ -50,7 +50,7 @@ Recovery knobs:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -225,7 +225,7 @@ class ChaosState:
     def brownout_edges(self) -> List[float]:
         """Window boundaries — the engine schedules a re-rate event at
         each so in-flight work picks the factor change up mid-stage."""
-        edges = set()
+        edges: Set[float] = set()
         for b in self.plan.brownouts:
             edges.add(b.t0_ms)
             edges.add(b.t1_ms)

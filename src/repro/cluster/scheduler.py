@@ -178,6 +178,20 @@ class ClusterScheduler:
             merged.update(w.contexts)
         return merged
 
+    def geometry_snapshot(self) -> Dict:
+        """Fleet-wide static geometry view for offline analysis: per-device
+        ``DarisScheduler.geometry_snapshot`` keyed by device id."""
+        devices = {str(d): self.workers[d].geometry_snapshot()
+                   for d in self.live_devices()}
+        return {
+            "kind": "cluster",
+            "transfer_ms": self.transfer_ms,
+            "devices": devices,
+            "summary": f"{len(devices)} GPUs: " + "; ".join(
+                f"dev{d}[{snap['summary']}]"
+                for d, snap in devices.items()),
+        }
+
     @property
     def migrations(self) -> int:
         return self._migrations + sum(w.migrations

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Hashable, List, Set
+from typing import Dict, Hashable, List, Set
 
 CtxKey = Hashable   # int (single device) | (device, int) (cluster layer)
 
@@ -93,3 +93,36 @@ def overlap_matrix(contexts: List[Context]) -> List[List[int]]:
     n = len(contexts)
     return [[len(contexts[a].units & contexts[b].units) for b in range(n)]
             for a in range(n)]
+
+
+# ------------------------------------------------------------ introspection
+# (static analysis — repro.analysis.schedcheck — reads oversubscription
+# interference through these instead of re-deriving Eq. 9 on its own)
+
+def unit_residency(contexts: List[Context]) -> Dict[int, int]:
+    """unit id -> number of the given contexts whose Eq. 9 allocation
+    includes it (1 everywhere at OS=1; grows with oversubscription)."""
+    res: Dict[int, int] = {}
+    for c in contexts:
+        for u in c.units:
+            res[u] = res.get(u, 0) + 1
+    return res
+
+
+def max_coresidency(contexts: List[Context]) -> int:
+    """Worst-case unit sharing: the max number of contexts co-resident on
+    any single unit — the interference degree the oversubscribed wrap-
+    around allocation creates (1 = disjoint partitions)."""
+    res = unit_residency(contexts)
+    return max(res.values()) if res else 0
+
+
+def interference_sets(contexts: List[Context]) -> Dict[CtxKey, List[CtxKey]]:
+    """ctx index -> indices of the other given contexts sharing at least
+    one unit with it (the co-resident set whose busy lanes contend for
+    the same SMs under OS > 1)."""
+    out: Dict[CtxKey, List[CtxKey]] = {}
+    for a in contexts:
+        out[a.index] = [b.index for b in contexts
+                        if b.index != a.index and a.units & b.units]
+    return out

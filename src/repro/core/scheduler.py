@@ -224,6 +224,33 @@ class DarisScheduler:
     def _invalidate_live(self) -> None:
         self._live_cache = None
 
+    def geometry_snapshot(self) -> Dict:
+        """Static view of the live Eq. 9 geometry for offline analysis
+        (repro.analysis.schedcheck): per-context capacity/streams plus the
+        oversubscription interference structure (which contexts share SMs,
+        worst per-unit co-residency). Pure introspection — no state change."""
+        from .partition import interference_sets, max_coresidency
+        live = self.live_contexts()
+        inter = interference_sets(live)
+        cores = max_coresidency(live)
+        return {
+            "kind": "device",
+            "n_units": self.device.n_units,
+            "speed": self.speed,
+            "oversubscription": self.cfg.oversubscription,
+            "total_streams": sum(c.n_streams for c in live),
+            "total_cap": sum(c.cap for c in live),
+            "max_coresidency": cores,
+            "contexts": [
+                {"ctx": str(c.index), "cap": c.cap, "n_streams": c.n_streams,
+                 "shares_units_with": [str(k) for k in inter[c.index]]}
+                for c in live],
+            "summary": (f"{len(live)} ctx x {self.cfg.n_streams} streams, "
+                        f"os={self.cfg.oversubscription:g}, "
+                        f"{int(self.device.n_units)} units, "
+                        f"co-residency {cores}"),
+        }
+
     def make_task(self, spec: TaskSpec, index: int) -> Task:
         """Create (but do not place) a task: same staging/AFET treatment
         as constructor-registered tasks. The cluster layer uses this to

@@ -25,9 +25,12 @@ as self-releasing periodic load behind the served traffic.
 from __future__ import annotations
 
 import json
-from typing import Dict, List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional
 
 from ..api import DarisServer, ManualArrival, ServerConfig
+
+if TYPE_CHECKING:                                   # pragma: no cover
+    from ..analysis.schedcheck import Report
 from ..core.task import HP, LP, TaskSpec
 
 _PRIO = {"HP": HP, "LP": LP, "hp": HP, "lp": LP}
@@ -61,12 +64,14 @@ def _task_specs(cfg: Dict) -> List[Dict]:
     return out
 
 
-def build_server(cfg: Dict, *, arrivals: Optional[Dict[str, object]] = None
-                 ) -> DarisServer:
-    """Build the serving engine a config describes. ``arrivals`` swaps in
-    replacement arrival processes by task name (the journal replayer's
-    ``TraceArrival`` injection point); configured manual/background roles
-    apply otherwise."""
+def server_config(cfg: Dict, *, arrivals: Optional[Dict[str, object]] = None
+                  ) -> ServerConfig:
+    """The (unbuilt) ``ServerConfig`` a serving config describes.
+    ``arrivals`` swaps in replacement arrival processes by task name (the
+    journal replayer's ``TraceArrival`` injection point); configured
+    manual/background roles apply otherwise. The static analyzer
+    (``repro.analysis.schedcheck``) consumes this directly — same object
+    the daemon builds, so analysis and serving can never diverge."""
     sc = ServerConfig.sim()
     specs = _task_specs(cfg)
     overrides = arrivals or {}
@@ -111,4 +116,33 @@ def build_server(cfg: Dict, *, arrivals: Optional[Dict[str, object]] = None
                         cadence=s.get("cadence"))
         else:
             sc.sanitize(level=int(s))
-    return sc.build()
+    return sc
+
+
+def build_server(cfg: Dict, *, arrivals: Optional[Dict[str, object]] = None
+                 ) -> DarisServer:
+    """Build the serving engine a config describes (see
+    ``server_config`` for the construction contract)."""
+    return server_config(cfg, arrivals=arrivals).build()
+
+
+def check_schedulability(cfg: Dict) -> Optional[Report]:
+    """Opt-in startup gate: ``{"schedcheck": "warn" | "enforce"}``.
+
+    Returns the analysis ``Report`` (or None when the key is absent /
+    ``"off"``). ``"enforce"`` raises ``UnschedulableError`` when any HP
+    task is statically UNSCHEDULABLE; ``"warn"`` only reports. The
+    analyzer treats manual (client-driven) tasks at their declared rate,
+    so the verdict is a contract on offered load, not a tautology."""
+    mode = str(cfg.get("schedcheck", "off")).lower()
+    if mode == "off":
+        return None
+    if mode not in ("warn", "enforce"):
+        raise ValueError(f"schedcheck mode must be 'off', 'warn' or "
+                         f"'enforce', got {mode!r}")
+    from ..analysis.schedcheck import (UNSCHEDULABLE, UnschedulableError,
+                                       analyze_config)
+    report = analyze_config(server_config(cfg), label="serve-config")
+    if mode == "enforce" and report.hp_verdict == UNSCHEDULABLE:
+        raise UnschedulableError(report)
+    return report

@@ -32,7 +32,7 @@ import time
 from typing import Dict, Optional
 
 from ..api import DarisServer
-from .config import build_server
+from .config import build_server, check_schedulability
 from .journal import (Journal, TERMINAL_STATUSES, fsck_journal,
                       read_journal, unfinished_submits)
 
@@ -52,6 +52,14 @@ class ServeDaemon:
         self.checkpoint_path = checkpoint_path
         self.tick_ms = float(tick_ms)
         self.time_scale = float(time_scale)
+        # opt-in static schedulability gate, BEFORE any engine exists:
+        # "enforce" refuses to start an HP-unschedulable config (raises
+        # UnschedulableError), "warn" reports and proceeds
+        self.schedcheck_report = check_schedulability(cfg)
+        if self.schedcheck_report is not None:
+            print(f"[daemon] schedcheck: HP "
+                  f"{self.schedcheck_report.hp_verdict} "
+                  f"(overall {self.schedcheck_report.verdict})")
         self.server: DarisServer = build_server(cfg)
 
         # ---- resume: journal first (what was promised), checkpoint

@@ -91,6 +91,59 @@ def test_lint_suppression_same_line_and_line_above():
         == ["DSAN005"]
 
 
+def test_lint_unguarded_hook_call_flagged():
+    bad = """
+    def step(self):
+        self._sanitizer.on_step(1.0)
+    """
+    assert _rules(bad) == ["DSAN006"]
+    # reassigning the hook inside the guard invalidates it
+    sneaky = """
+    def step(self):
+        if self._chaos is not None:
+            self._chaos = other
+            self._chaos.tick()
+    """
+    assert _rules(sneaky) == ["DSAN006"]
+
+
+def test_lint_guarded_hook_call_clean():
+    good = """
+    def step(self):
+        if self._sanitizer is not None:
+            self._sanitizer.on_step(1.0)
+        if self._chaos:
+            self._chaos.tick()
+    """
+    early = """
+    def step(self):
+        if self._chaos is None:
+            return
+        self._chaos.tick()
+    """
+    ternary = """
+    def step(self):
+        f = self._chaos.factor() if self._chaos is not None else 1.0
+        return f
+    """
+    assert _rules(good) == [] and _rules(early) == []
+    assert _rules(ternary) == []
+
+
+def test_lint_chaos_rng_stream_rules():
+    foreign = "def roll(self, engine):\n    return engine.rng.uniform()\n"
+    glob = "def roll(self):\n    return np.random.random()\n"
+    own = "def roll(self):\n    return self.rng.uniform() + " \
+          "self.io_rng.normal()\n"
+    chaos = "src/repro/chaos/plan.py"
+    assert [f.rule for f in check_source(foreign, path=chaos)] \
+        == ["DSAN007"]
+    assert [f.rule for f in check_source(glob, path=chaos)] == ["DSAN007"]
+    assert check_source(own, path=chaos) == []
+    # only chaos code is in scope; the engine owns the sim stream
+    assert check_source(foreign, path="src/repro/sim/engine.py") == []
+
+
 def test_lint_src_tree_is_clean():
     """The shipping tree must satisfy its own lint gate (CI runs the
     same command with ruff/mypy chained)."""

@@ -1,0 +1,344 @@
+"""SchedCheck: static analyzer verdict classes, timeline epoch
+splitting, autoscale what-if epochs, Eq. 8 slice accounting, soundness
+of the worst-case rate bound against the live contention model, the
+bound-vs-sim differential oracle, the ServerConfig/daemon-config wiring
+(satellite: duplicate reconfigure_at rejection), and the CLI."""
+from __future__ import annotations
+
+import json
+import math
+
+import pytest
+
+from repro.analysis.schedcheck import (CONDITIONAL, GUARANTEED,
+                                       UNSCHEDULABLE, UnschedulableError,
+                                       analyze_config, differential_check,
+                                       worst_verdict)
+from repro.analysis.schedcheck.analyzer import _worst_speed
+from repro.api import HP, LP, Brownout, ChaosPlan, ServerConfig
+from repro.runtime.contention import ContentionModel, DeviceModel
+from repro.serve.config import check_schedulability
+
+from tests.test_serve import ideal_device, make_spec
+
+
+def light_cfg(horizon=1000.0):
+    """2 tasks, 2 contexts, os=2 on the ideal device: comfortably
+    schedulable, finite bounds everywhere."""
+    sc = ServerConfig.sim().horizon_ms(horizon)
+    sc.task(make_spec("hp", HP, [5.0], 50.0))
+    sc.task(make_spec("lp", LP, [8.0], 100.0))
+    sc.device(ideal_device()).contexts(2).streams(1).oversubscribe(2.0)
+    sc.phase_offsets(False).noise(0.0).seed(0)
+    return sc
+
+
+# ------------------------------------------------------- verdict classes
+def test_light_config_hp_guaranteed():
+    rep = analyze_config(light_cfg(), label="light")
+    assert rep.hp_verdict == GUARANTEED
+    assert len(rep.epochs) == 1 and rep.epochs[0].cause == "build"
+    tv = rep.task_verdicts("hp")[0]
+    assert tv.binding == "wcrt-within-deadline"
+    assert tv.wcrt_ms <= tv.deadline_ms and tv.slack_ms > 0
+    bound = rep.hp_bound_ms()
+    assert math.isfinite(bound) and bound >= tv.solo_ms
+
+
+def test_wcet_exceeds_deadline_unschedulable():
+    sc = ServerConfig.sim().horizon_ms(500.0)
+    sc.task(make_spec("hp", HP, [60.0], 50.0))     # solo 60ms > D 50ms
+    sc.device(ideal_device()).contexts(1).streams(1).oversubscribe(1.0)
+    sc.phase_offsets(False).noise(0.0).seed(0)
+    rep = analyze_config(sc)
+    tv = rep.task_verdicts("hp")[0]
+    assert (tv.verdict, tv.binding) == (UNSCHEDULABLE,
+                                        "wcet-exceeds-deadline")
+    assert rep.verdict == UNSCHEDULABLE
+    assert rep.hp_bound_ms() > tv.deadline_ms
+
+
+def test_eq11_overload_unschedulable():
+    sc = ServerConfig.sim().horizon_ms(500.0)
+    sc.task(make_spec("hp-a", HP, [40.0], 50.0))   # 0.8 lanes solo
+    sc.task(make_spec("hp-b", HP, [40.0], 50.0))   # + 0.8 > 1 stream
+    sc.device(ideal_device()).contexts(1).streams(1).oversubscribe(1.0)
+    sc.phase_offsets(False).noise(0.0).seed(0)
+    rep = analyze_config(sc)
+    assert {tv.binding for tv in rep.epochs[0].tasks} == {"eq11-overload"}
+    assert rep.hp_verdict == UNSCHEDULABLE
+
+
+def test_open_loop_arrivals_are_conditional():
+    sc = light_cfg().open_loop(100.0, seed=1)
+    rep = analyze_config(sc)
+    tv = rep.task_verdicts("hp")[0]
+    assert (tv.verdict, tv.binding) == (CONDITIONAL, "arrival-process")
+    assert tv.wcrt_ms == math.inf
+    assert rep.hp_verdict == CONDITIONAL
+    assert any("open-loop" in a for a in rep.assumptions)
+
+
+def test_chaos_fault_rate_caps_verdict():
+    sc = light_cfg().chaos(ChaosPlan(seed=0, stage_fault_rate=0.01))
+    rep = analyze_config(sc)
+    tv = rep.task_verdicts("hp")[0]
+    assert (tv.verdict, tv.binding) == (CONDITIONAL, "chaos-fault-rate")
+    # the WCRT number itself is still finite — only the guarantee is off
+    assert math.isfinite(tv.wcrt_ms)
+
+
+def test_verdict_ordering():
+    assert worst_verdict([GUARANTEED, CONDITIONAL]) == CONDITIONAL
+    assert worst_verdict([CONDITIONAL, UNSCHEDULABLE]) == UNSCHEDULABLE
+    assert worst_verdict([]) == GUARANTEED
+
+
+# ------------------------------------------------------- timeline epochs
+def test_reconfigure_splits_epochs():
+    sc = light_cfg(horizon=1000.0)
+    sc.reconfigure_at(400.0, n_contexts=1, oversubscription=1.0)
+    rep = analyze_config(sc)
+    assert [e.cause for e in rep.epochs] == ["build", "reconfigure"]
+    assert (rep.epochs[0].t0_ms, rep.epochs[0].t1_ms) == (0.0, 400.0)
+    assert (rep.epochs[1].t0_ms, rep.epochs[1].t1_ms) == (400.0, 1000.0)
+    # retired-lane carry is surfaced as an explicit assumption
+    assert any("draining lanes" in a for a in rep.assumptions)
+
+
+def test_fail_context_and_scale_out_epochs():
+    sc = light_cfg(horizon=1000.0)
+    sc.fail_context_at(1, 300.0).scale_out_at(600.0)
+    rep = analyze_config(sc)
+    assert [e.cause for e in rep.epochs] == ["build", "fail-context",
+                                            "scale-out"]
+    n_ctx = [len(e.contexts) for e in rep.epochs]
+    assert n_ctx == [2, 1, 2]
+
+
+def test_last_context_fault_is_total_failure():
+    sc = ServerConfig.sim().horizon_ms(1000.0)
+    sc.task(make_spec("hp", HP, [5.0], 50.0))
+    sc.device(ideal_device()).contexts(1).streams(1).oversubscribe(1.0)
+    sc.phase_offsets(False).noise(0.0).seed(0)
+    sc.fail_context_at(0, 300.0)
+    rep = analyze_config(sc)
+    dead = rep.epochs[-1]
+    assert dead.cause == "total-failure"
+    assert dead.t1_ms == 1000.0
+    assert all(tv.binding == "total-failure" for tv in dead.tasks)
+    assert rep.verdict == UNSCHEDULABLE
+
+
+def test_brownout_epochs_inflate_the_bound():
+    plan = ChaosPlan(seed=0, brownouts=(
+        Brownout(t0_ms=200.0, t1_ms=400.0, device=0, slow_factor=4.0),))
+    rep = analyze_config(light_cfg(horizon=600.0).chaos(plan))
+    assert [e.cause for e in rep.epochs] == ["build", "brownout-start",
+                                             "brownout-end"]
+    wc = [e.tasks[0].wcrt_ms for e in rep.epochs]
+    assert wc[1] > wc[0]                   # 4x slowdown inflates the bound
+    assert wc[2] == pytest.approx(wc[0], rel=1e-6)   # and it clears
+
+
+def test_cluster_fail_device_epoch():
+    sc = ServerConfig.cluster(2, transfer_ms=0.0)
+    sc.task(make_spec("g0-hp", HP, [5.0], 50.0))
+    sc.task(make_spec("g1-hp", HP, [5.0], 50.0))
+    sc.device(ideal_device()).contexts(1).streams(1).oversubscribe(1.0)
+    sc.horizon_ms(1000.0).phase_offsets(False).noise(0.0).seed(0)
+    sc.fail_device_at(1, 300.0)
+    rep = analyze_config(sc)
+    assert [e.cause for e in rep.epochs] == ["build", "fail-device"]
+    devices = [{tv.device for tv in e.tasks} for e in rep.epochs]
+    assert devices[0] == {0, 1} and devices[1] == {0}
+
+
+def test_autoscale_floor_is_a_hypothetical_epoch():
+    sc = light_cfg().autoscale(0.3, 0.85, min_contexts=1, max_contexts=4)
+    rep = analyze_config(sc)
+    assert [e.cause for e in rep.epochs] == ["build"]
+    assert [e.cause for e in rep.hypothetical] == ["autoscale-floor"]
+    # the what-if shape counts toward the verdict but not the HP bound
+    floor_wcrt = max(tv.wcrt_ms for tv in rep.hypothetical[0].tasks
+                     if tv.priority == "HP")
+    assert rep.hp_bound_ms() <= floor_wcrt
+    assert rep.verdict == worst_verdict(
+        [e.verdict for e in rep.epochs + rep.hypothetical])
+
+
+# ---------------------------------------------------- Eq. 8 slice checks
+def test_virtual_deadline_slices_sum_to_deadline():
+    sc = ServerConfig.sim().horizon_ms(500.0)
+    sc.task(make_spec("hp", HP, [4.0, 2.0, 6.0], 60.0))
+    sc.device(ideal_device()).contexts(1).streams(1).oversubscribe(1.0)
+    sc.phase_offsets(False).noise(0.0).seed(0)
+    rep = analyze_config(sc)
+    tv = rep.task_verdicts("hp")[0]
+    assert sum(s.vdl_ms for s in tv.stages) \
+        == pytest.approx(tv.deadline_ms, rel=1e-9)
+    # Eq. 8: slices proportional to the MRET split
+    assert tv.stages[2].vdl_ms > tv.stages[0].vdl_ms > tv.stages[1].vdl_ms
+
+
+# ------------------------------------------- worst-case speed soundness
+def test_worst_speed_lower_bounds_contention_model():
+    """Property: for sampled co-resident lane sets, the analyzer's
+    independently-worst-cased speed never exceeds what the live
+    contention model actually grants any lane (the soundness argument
+    behind every per-stage wc_ms)."""
+    import numpy as np
+    rng = np.random.default_rng(42)
+    dev = DeviceModel(n_units=6.0, bubble=0.3, l2_pressure=0.15)
+    cm = ContentionModel(dev)
+    for _ in range(300):
+        m = int(rng.integers(1, 7))
+        nsat = rng.uniform(0.5, 5.0, size=m)
+        mf = rng.uniform(0.0, 0.9, size=m)
+        share = rng.uniform(0.25, 4.0, size=m)
+        actual = cm.rates_seq(list(share), list(nsat), list(mf))
+        total_cap = float(share.sum())
+        co_nsat, co_mf = float(nsat.max()), float(mf.max())
+        for i in range(m):
+            lb = _worst_speed(dev, float(nsat[i]), float(mf[i]),
+                              float(share[i]), total_cap, m,
+                              co_nsat, co_mf)
+            assert lb <= actual[i] + 1e-12, (
+                f"worst-case speed {lb} above model speed {actual[i]} "
+                f"for lane {i} of {m}")
+
+
+# --------------------------------------------------- differential oracle
+def test_oracle_bound_dominates_simulation():
+    res = differential_check(light_cfg(horizon=2000.0).noise(0.06),
+                             label="light")
+    assert res.ok and not res.vacuous
+    assert res.observed_max_ms <= res.bound_ms
+    assert res.violations == []
+    assert "light" in res.render()
+
+
+def test_guaranteed_implies_zero_hp_misses():
+    res = differential_check(light_cfg(horizon=2000.0).noise(0.06))
+    assert res.hp_verdict == GUARANTEED
+    assert res.dmr_hp == 0.0
+
+
+def test_oracle_on_figure_scenarios():
+    figure_specs = pytest.importorskip(
+        "benchmarks.figure_specs",
+        reason="benchmarks package needs the repo root on sys.path")
+    for name in ("fig4_6_light", "fig13_light"):
+        res = differential_check(figure_specs.scenario(name), label=name)
+        assert res.ok, res.violations
+        assert res.hp_verdict == GUARANTEED and res.dmr_hp == 0.0
+        assert not res.vacuous
+
+
+# ------------------------------------------------------- config wiring
+def test_duplicate_reconfigure_events_rejected():
+    sc = light_cfg()
+    sc.reconfigure_at(400.0, n_contexts=1)
+    sc.reconfigure_at(400.0, oversubscription=3.0)
+    with pytest.raises(ValueError, match="duplicate reconfigure_at"):
+        analyze_config(sc)
+    # distinct timestamps stay legal
+    sc2 = light_cfg()
+    sc2.reconfigure_at(400.0, n_contexts=1)
+    sc2.reconfigure_at(500.0, oversubscription=3.0)
+    assert len(analyze_config(sc2).epochs) == 3
+
+
+def test_server_config_verify_gate():
+    ok = light_cfg().verify()
+    assert ok.schedcheck_report.hp_verdict == GUARANTEED
+
+    bad = ServerConfig.sim().horizon_ms(500.0)
+    bad.task(make_spec("hp", HP, [60.0], 50.0))
+    bad.device(ideal_device()).contexts(1).streams(1).oversubscribe(1.0)
+    bad.phase_offsets(False).noise(0.0).seed(0)
+    with pytest.raises(UnschedulableError) as ei:
+        bad.verify()
+    assert ei.value.report.hp_verdict == UNSCHEDULABLE
+    # warn-only mode keeps the report without raising
+    bad.verify(enforce=False)
+    assert bad.schedcheck_report.hp_verdict == UNSCHEDULABLE
+
+
+def test_check_schedulability_modes():
+    cfg = {"tasks": [{"dnn": "resnet18", "priority": "HP", "jps": 30.0}],
+           "contexts": 2, "streams": 1, "oversubscribe": 2.0, "seed": 0}
+    assert check_schedulability(cfg) is None            # default: off
+    rep = check_schedulability({**cfg, "schedcheck": "warn"})
+    assert rep is not None and rep.hp_verdict in (GUARANTEED, CONDITIONAL)
+    rep = check_schedulability({**cfg, "schedcheck": "enforce"})
+    assert rep.hp_verdict != UNSCHEDULABLE
+    with pytest.raises(ValueError, match="schedcheck mode"):
+        check_schedulability({**cfg, "schedcheck": "always"})
+
+
+def test_enforce_mode_blocks_unschedulable_daemon_config():
+    cfg = {"tasks": [{"dnn": "unet", "priority": "HP", "jps": 2000.0}],
+           "contexts": 1, "streams": 1, "oversubscribe": 1.0, "seed": 0,
+           "schedcheck": "enforce"}
+    with pytest.raises(UnschedulableError):
+        check_schedulability(cfg)
+    # the same config in warn mode reports instead of raising
+    rep = check_schedulability({**cfg, "schedcheck": "warn"})
+    assert rep.hp_verdict == UNSCHEDULABLE
+
+
+# ------------------------------------------------------------ JSON + CLI
+def test_report_json_roundtrip():
+    rep = analyze_config(light_cfg(), label="rt")
+    d = json.loads(rep.to_json())
+    assert d["label"] == "rt" and d["hp_verdict"] == GUARANTEED
+    assert len(d["epochs"]) == 1
+    task_names = {t["task"] for t in d["epochs"][0]["tasks"]}
+    assert task_names == {"hp", "lp"}
+    # infinities must serialize as nulls, not break json
+    bad = light_cfg().open_loop(100.0)
+    d2 = json.loads(analyze_config(bad).to_json())
+    hp = [t for t in d2["epochs"][0]["tasks"] if t["task"] == "hp"][0]
+    assert hp["wcrt_ms"] is None
+
+
+def test_cli_on_config_files(tmp_path, capsys):
+    from repro.analysis.schedcheck.__main__ import main
+    cfg = {"tasks": [{"dnn": "resnet18", "priority": "HP", "jps": 30.0},
+                     {"dnn": "unet", "priority": "LP", "jps": 10.0}],
+           "contexts": 2, "streams": 1, "oversubscribe": 2.0, "seed": 0}
+    path = tmp_path / "serve.json"
+    path.write_text(json.dumps(cfg))
+    out = tmp_path / "verdicts.json"
+    rc = main([str(path), "--require-hp-guaranteed",
+               "--json", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())   # single config -> bare report
+    assert payload["hp_verdict"] == GUARANTEED
+    assert math.isfinite(payload["hp_bound_ms"])
+    assert "GUARANTEED" in capsys.readouterr().out
+
+
+def test_cli_fails_unschedulable_config(tmp_path, capsys):
+    from repro.analysis.schedcheck.__main__ import main
+    cfg = {"tasks": [{"dnn": "unet", "priority": "HP", "jps": 2000.0}],
+           "contexts": 1, "streams": 1, "oversubscribe": 1.0, "seed": 0}
+    path = tmp_path / "hot.json"
+    path.write_text(json.dumps(cfg))
+    assert main([str(path)]) == 1
+    capsys.readouterr()
+
+
+def test_cli_usage_error_is_2(capsys):
+    from repro.analysis.schedcheck.__main__ import main
+    assert main([]) == 2
+    capsys.readouterr()
+
+
+def test_shipped_example_configs_are_guaranteed(capsys):
+    from repro.analysis.schedcheck.__main__ import main
+    assert main(["examples/configs/serve_basic.json",
+                 "examples/configs/serve_tiered.json",
+                 "--require-hp-guaranteed"]) == 0
+    capsys.readouterr()
