@@ -15,12 +15,16 @@ before/after numbers in ``benchmarks/BENCH_engine.json`` comparable.
 
 Usage:
     python -m benchmarks.perf_engine [--fast]          # measure + write
-        artifacts/bench/BENCH_engine.json
+        artifacts/bench/BENCH_engine.json (heap engine)
+    python -m benchmarks.perf_engine --fast --engine epoch
+        # same scenarios through the array-programmed epoch engine
     python -m benchmarks.perf_engine --fast --check    # compare against
         the committed benchmarks/BENCH_engine.json; exit 1 if any
-        scenario's events/sec regressed more than --tolerance (30%)
-    python -m benchmarks.perf_engine --fast --write-baseline
-        # refresh the committed baseline (keeps before_* fields)
+        scenario's events/sec regressed more than --tolerance (30%);
+        --engine epoch gates against the epoch_* baseline columns
+    python -m benchmarks.perf_engine --fast --engine both --write-baseline
+        # refresh the committed baseline (keeps before_* fields unless
+        # --refresh-before; epoch numbers land in epoch_* columns)
 
 CI runs the ``--check`` mode on every push. Absolute events/sec moves
 with host hardware, so the gate is *shape-normalized*: each scenario is
@@ -41,53 +45,123 @@ BASELINE = pathlib.Path(__file__).resolve().parent / "BENCH_engine.json"
 OUT = pathlib.Path("artifacts/bench/BENCH_engine.json")
 
 
+def _diurnal_trace(rng, base_per_ms: float, horizon_ms: float):
+    """Arrival times (ms) from an inhomogeneous Poisson process whose
+    rate swings sinusoidally over one full cycle of the horizon —
+    fleet traffic following a compressed diurnal curve. Thinning against
+    the peak rate keeps the draw exact and seed-deterministic."""
+    peak = base_per_ms * 1.8
+    times, t = [], 0.0
+    while True:
+        t += float(rng.exponential(1.0 / peak))
+        if t >= horizon_ms:
+            return times
+        lam = base_per_ms * (1.0 + 0.8 * math.sin(
+            2.0 * math.pi * t / horizon_ms))
+        if float(rng.uniform()) * peak < lam:
+            times.append(t)
+
+
 def _scenarios(fast: bool):
-    """name -> zero-arg builder returning an unrun DarisServer."""
-    from repro.api import BatchPolicy
-    from repro.core.scheduler import SchedulerConfig
-    from repro.serving.profiles import TABLE1
+    """name -> builder(engine) returning an unrun DarisServer with that
+    sim engine ("heap" | "epoch") selected."""
+    import numpy as np
+
+    from repro.api import BatchPolicy, Brownout, ServerConfig, TraceArrival
+    from repro.core.task import LP, StageProfile, TaskSpec
+    from repro.serving.profiles import TABLE1, device
     from repro.serving.requests import ratio_taskset, table2_taskset
 
     from .common import make_server, mps_cfg, mps_str_cfg, str_cfg
 
     h = 1500.0 if fast else 4000.0
 
-    def build(specs, cfg, horizon=None):
-        return make_server(specs, cfg, horizon_ms=horizon or h).build()
+    def build(specs, cfg, horizon=None, engine="heap"):
+        return (make_server(specs, cfg, horizon_ms=horizon or h)
+                .engine(engine).build())
+
+    def cluster_build(engine):
+        # fig13-shaped: heterogeneous 4-GPU cluster, global admission,
+        # speed-aware placement
+        return (ServerConfig.cluster(
+                    4, device_models=["a100", "a100", "v100", "v100"])
+                .tasks(table2_taskset("resnet18"))
+                .contexts(4).streams(1).oversubscribe(4.0)
+                .device(device()).horizon_ms(h).seed(0)
+                .engine(engine).build())
+
+    def chaos_build(engine):
+        # fig14-shaped: faults + stalls + a mid-run brownout with the
+        # stage watchdog armed — exercises the kill/retry hot paths
+        return (make_server(table2_taskset("resnet18"), mps_cfg(6, 6.0),
+                            horizon_ms=h)
+                .chaos(seed=3, stage_fault_rate=0.02, stall_rate=0.05,
+                       stall_ms=3.0, watchdog_kappa=6.0,
+                       brownouts=(Brownout(0.25 * h, 0.55 * h, device=0,
+                                           slow_factor=2.0),))
+                .engine(engine).build())
+
+    def fleet_build(engine):
+        # 64-device fleet replaying a diurnal trace: the epoch engine's
+        # showpiece (hundreds of concurrent lanes per array pass)
+        n_dev, per_dev = 64, 3
+        specs = [TaskSpec(name=f"svc{i:03d}", period_ms=24.0, priority=LP,
+                          stages=[StageProfile(name=f"svc{i:03d}/s0",
+                                               t_alone_ms=2.0,
+                                               n_sat=20.0, mem_frac=0.3),
+                                  StageProfile(name=f"svc{i:03d}/s1",
+                                               t_alone_ms=2.0,
+                                               n_sat=20.0, mem_frac=0.3)])
+                 for i in range(n_dev * per_dev)]
+        cfg = (ServerConfig.cluster(n_dev)
+               .tasks(specs)
+               .contexts(4).streams(1).oversubscribe(4.0)
+               .device(device()).horizon_ms(h).seed(0)
+               .engine(engine))
+        for i, s in enumerate(specs):
+            rng = np.random.default_rng(9000 + i)
+            cfg.arrival(s.name,
+                        TraceArrival(_diurnal_trace(rng, 1.0 / 24.0, h)))
+        return cfg.build()
 
     rn18_over_jps = TABLE1["resnet18"][1] * 1.5 / 30
     return {
-        "mps_rn18_6x1_os6": lambda: build(
-            table2_taskset("resnet18"), mps_cfg(6, 6.0)),
-        "mps_incv3_8x1_os8": lambda: build(
-            table2_taskset("inceptionv3"), mps_cfg(8, 8.0)),
-        "str_unet_6": lambda: build(table2_taskset("unet"), str_cfg(6)),
-        "mps_str_rn18_3x3_os3": lambda: build(
-            table2_taskset("resnet18"), mps_str_cfg(3, 3, 3.0)),
-        "batch_incv3_6x1_os6": lambda: build(
+        "mps_rn18_6x1_os6": lambda e="heap": build(
+            table2_taskset("resnet18"), mps_cfg(6, 6.0), engine=e),
+        "mps_incv3_8x1_os8": lambda e="heap": build(
+            table2_taskset("inceptionv3"), mps_cfg(8, 8.0), engine=e),
+        "str_unet_6": lambda e="heap": build(
+            table2_taskset("unet"), str_cfg(6), engine=e),
+        "mps_str_rn18_3x3_os3": lambda e="heap": build(
+            table2_taskset("resnet18"), mps_str_cfg(3, 3, 3.0), engine=e),
+        "batch_incv3_6x1_os6": lambda e="heap": build(
             table2_taskset("inceptionv3"),
-            mps_cfg(6, 6.0, batch_policy=BatchPolicy(max_batch=8))),
-        "overload_rn18_hpa": lambda: build(
+            mps_cfg(6, 6.0, batch_policy=BatchPolicy(max_batch=8)),
+            engine=e),
+        "overload_rn18_hpa": lambda e="heap": build(
             ratio_taskset("resnet18", 0.66, 30, rn18_over_jps),
-            mps_cfg(6, 6.0, overload_hpa=True)),
+            mps_cfg(6, 6.0, overload_hpa=True), engine=e),
+        "cluster_rn18_4gpu": cluster_build,
+        "chaos_rn18_6x1_os6": chaos_build,
+        "fleet_64dev_diurnal": fleet_build,
     }
 
 
-def run_scenario(build, repeat: int = 1) -> dict:
+def run_scenario(build, repeat: int = 1, engine: str = "heap") -> dict:
     """Best-of-``repeat`` measurement: scenarios are deterministic, so
     event counts are identical across repeats and the fastest wall time
     is the least-noisy estimate — fast-mode runs are short enough that
     shared-runner noise would otherwise dominate a single shot."""
     best = None
     for _ in range(max(repeat, 1)):
-        r = _run_scenario_once(build)
+        r = _run_scenario_once(build, engine)
         if best is None or r["wall_s"] < best["wall_s"]:
             best = r
     return best
 
 
-def _run_scenario_once(build) -> dict:
-    server = build()
+def _run_scenario_once(build, engine: str = "heap") -> dict:
+    server = build(engine)
     core = server.core
     counts = {"releases": 0, "stage_completions": 0}
 
@@ -99,9 +173,9 @@ def _run_scenario_once(build) -> dict:
         counts["stage_completions"] += len(out)
         return out
 
-    def handle_release(task, proc, t):
+    def handle_release(task, proc, t, handle=None):
         counts["releases"] += 1
-        return orig_release(task, proc, t)
+        return orig_release(task, proc, t, handle)
 
     core.backend.advance = advance
     core._handle_release = handle_release
@@ -119,13 +193,14 @@ def _run_scenario_once(build) -> dict:
     }
 
 
-def measure(fast: bool, repeat: int = 1) -> dict:
-    out = {"meta": {"fast": fast}, "scenarios": {}}
+def measure(fast: bool, repeat: int = 1, engine: str = "heap") -> dict:
+    out = {"meta": {"fast": fast, "engine": engine}, "scenarios": {}}
     for name, build in _scenarios(fast).items():
-        r = run_scenario(build, repeat)
+        r = run_scenario(build, repeat, engine)
         out["scenarios"][name] = r
-        print(f"# {name}: {r['events']} events in {r['wall_s']:.2f}s "
-              f"-> {r['events_per_sec']:.0f} ev/s", file=sys.stderr)
+        print(f"# [{engine}] {name}: {r['events']} events in "
+              f"{r['wall_s']:.2f}s -> {r['events_per_sec']:.0f} ev/s",
+              file=sys.stderr)
     return out
 
 
@@ -135,7 +210,7 @@ def _geomean(xs) -> float:
 
 
 def check(fresh: dict, baseline: dict, tolerance: float,
-          abs_tolerance: float = 0.30) -> int:
+          abs_tolerance: float = 0.30, engine: str = "heap") -> int:
     """Exit code 1 on regression.
 
     Absolute events/sec moves with host hardware (the committed baseline
@@ -155,43 +230,87 @@ def check(fresh: dict, baseline: dict, tolerance: float,
     below its absolute floor. The residual blind spot is a uniform
     slowdown measured on much slower hardware — refresh the baseline
     with ``--write-baseline`` when hardware or engine generations
-    change."""
+    change.
+
+    ``engine`` selects which baseline columns to gate against: the heap
+    engine's numbers live in the standard ``events_per_sec`` fields, the
+    epoch engine's in ``epoch_events_per_sec`` (written by
+    ``--write-baseline --engine epoch`` / ``both``)."""
     if fresh["meta"].get("fast") != baseline.get("meta", {}).get("fast"):
         print("# baseline fidelity (meta.fast) does not match this run; "
               "refresh it with the same mode (--write-baseline)",
               file=sys.stderr)
         return 1
+    key = ("events_per_sec" if engine == "heap"
+           else "epoch_events_per_sec")
     base = baseline.get("scenarios", {})
-    common = [n for n in fresh["scenarios"] if n in base]
+    common = [n for n in fresh["scenarios"]
+              if n in base and key in base[n]]
     for name in fresh["scenarios"]:
-        if name not in base:
-            print(f"# {name}: no committed baseline, skipping",
+        if name not in common:
+            print(f"# {name}: no committed {engine} baseline, skipping",
                   file=sys.stderr)
     if not common:
         return 0
     f_gm = _geomean([fresh["scenarios"][n]["events_per_sec"]
                      for n in common])
-    b_gm = _geomean([base[n]["events_per_sec"] for n in common])
+    b_gm = _geomean([base[n][key] for n in common])
     failed = 0
     for name in common:
-        r, b = fresh["scenarios"][name], base[name]
+        r, b = fresh["scenarios"][name], base[name][key]
         rel_fresh = r["events_per_sec"] / f_gm
-        rel_base = b["events_per_sec"] / b_gm
+        rel_base = b / b_gm
         rel_ok = rel_fresh >= rel_base * (1.0 - tolerance)
-        abs_ok = (r["events_per_sec"]
-                  >= b["events_per_sec"] * (1.0 - abs_tolerance))
+        abs_ok = r["events_per_sec"] >= b * (1.0 - abs_tolerance)
         ok = rel_ok or abs_ok
-        print(f"# {name}: {r['events_per_sec']:.0f} ev/s "
+        print(f"# [{engine}] {name}: {r['events_per_sec']:.0f} ev/s "
               f"(norm {rel_fresh:.2f} vs baseline {rel_base:.2f}; "
-              f"committed {b['events_per_sec']:.0f}) "
+              f"committed {b:.0f}) "
               f"{'OK' if ok else 'REGRESSION'}", file=sys.stderr)
         failed += 0 if ok else 1
     return 1 if failed else 0
 
 
+def _merge_baseline(old: dict, fresh: dict, engine: str,
+                    refresh_before: bool) -> None:
+    """Fold one engine's fresh measurements into the committed baseline
+    dict (in place). Heap numbers own the standard fields; epoch numbers
+    land in ``epoch_*`` columns of the same scenario entry so the two
+    engines read side by side."""
+    for name, r in fresh["scenarios"].items():
+        prev = old["scenarios"].get(name, {})
+        if engine == "heap":
+            merged = dict(prev)
+            merged.update(r)
+            for k in ("before_events_per_sec", "before_wall_s"):
+                if refresh_before:
+                    merged[k] = r[k.replace("before_", "")]
+                elif k in prev:
+                    merged[k] = prev[k]
+            old["scenarios"][name] = merged
+        else:
+            prev["epoch_events_per_sec"] = r["events_per_sec"]
+            prev["epoch_wall_s"] = r["wall_s"]
+            old["scenarios"][name] = prev
+    meta = old.get("meta", {})
+    meta["fast"] = fresh["meta"]["fast"]
+    if engine == "heap" and refresh_before:
+        meta["note"] = (
+            "before_* re-baselined to the heap engine at the epoch-engine "
+            "PR head (current host); epoch_* columns are the "
+            "array-programmed engine on the same host. Refresh with "
+            "perf_engine --fast --engine both --write-baseline "
+            "[--refresh-before]")
+    old["meta"] = meta
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--engine", choices=("heap", "epoch", "both"),
+                    default="heap",
+                    help="which sim engine to measure (both = heap then "
+                         "epoch; epoch numbers go to epoch_* columns)")
     ap.add_argument("--check", action="store_true",
                     help="compare against the committed baseline")
     ap.add_argument("--tolerance", type=float, default=0.30,
@@ -202,6 +321,10 @@ def main() -> None:
     ap.add_argument("--write-baseline", action="store_true",
                     help="refresh benchmarks/BENCH_engine.json (keeps "
                          "before_* fields)")
+    ap.add_argument("--refresh-before", action="store_true",
+                    help="with --write-baseline: re-baseline before_* "
+                         "from this run's heap numbers (use after an "
+                         "engine generation or host change)")
     ap.add_argument("--repeat", type=int, default=0,
                     help="best-of-N per scenario (default: 3 with "
                          "--check, else 1)")
@@ -209,27 +332,27 @@ def main() -> None:
     args = ap.parse_args()
 
     repeat = args.repeat or (3 if args.check else 1)
-    fresh = measure(args.fast, repeat)
+    engines = (("heap", "epoch") if args.engine == "both"
+               else (args.engine,))
+    runs = {e: measure(args.fast, repeat, e) for e in engines}
+
+    primary = runs[engines[0]]
+    out_payload = json.loads(json.dumps(primary))
+    if "epoch" in runs and len(engines) > 1:
+        for name, r in runs["epoch"]["scenarios"].items():
+            out_payload["scenarios"][name]["epoch_events_per_sec"] = \
+                r["events_per_sec"]
+            out_payload["scenarios"][name]["epoch_wall_s"] = r["wall_s"]
     out = pathlib.Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(fresh, indent=1))
+    out.write_text(json.dumps(out_payload, indent=1))
     print(f"# wrote {out}", file=sys.stderr)
 
     if args.write_baseline:
         old = (json.loads(BASELINE.read_text()) if BASELINE.exists()
                else {"scenarios": {}, "meta": {}})
-        for name, r in fresh["scenarios"].items():
-            prev = old["scenarios"].get(name, {})
-            merged = dict(r)
-            for k in ("before_events_per_sec", "before_wall_s"):
-                if k in prev:
-                    merged[k] = prev[k]
-            old["scenarios"][name] = merged
-        # refresh fidelity, keep provenance fields (the note explaining
-        # where before_* numbers came from must survive refreshes)
-        meta = old.get("meta", {})
-        meta["fast"] = fresh["meta"]["fast"]
-        old["meta"] = meta
+        for e in engines:
+            _merge_baseline(old, runs[e], e, args.refresh_before)
         BASELINE.write_text(json.dumps(old, indent=1))
         print(f"# wrote {BASELINE}", file=sys.stderr)
 
@@ -238,12 +361,15 @@ def main() -> None:
             print("# no committed baseline; nothing to check",
                   file=sys.stderr)
             return
-        sys.exit(check(fresh, json.loads(BASELINE.read_text()),
-                       args.tolerance, args.abs_tolerance))
+        baseline = json.loads(BASELINE.read_text())
+        rc = max(check(runs[e], baseline, args.tolerance,
+                       args.abs_tolerance, engine=e) for e in engines)
+        sys.exit(rc)
 
-    for name, r in fresh["scenarios"].items():
-        print(f"perf_engine/{name},{r['wall_s']*1e6:.0f},"
-              f"{r['events_per_sec']:.0f}")
+    for e in engines:
+        for name, r in runs[e]["scenarios"].items():
+            print(f"perf_engine/{e}/{name},{r['wall_s']*1e6:.0f},"
+                  f"{r['events_per_sec']:.0f}")
 
 
 if __name__ == "__main__":

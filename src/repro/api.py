@@ -47,6 +47,7 @@ from .runtime.arrivals import (ArrivalProcess, ManualArrival,
                                PeriodicArrival, PoissonArrival, TraceArrival)
 from .runtime.backend import (ExecutionBackend, RealtimeBackend, SimBackend)
 from .runtime.contention import DeviceModel
+from .runtime.epoch import EpochSimBackend
 from .runtime.engine_core import (AutoscalePolicy, Completion, EngineCore,
                                   FaultPlan, SubmitHandle)
 
@@ -56,7 +57,7 @@ __all__ = [
     "ChaosPlan", "RetryPolicy", "DegradationPolicy", "Brownout",
     "ArrivalProcess", "ManualArrival", "PeriodicArrival", "PoissonArrival",
     "TraceArrival",
-    "ExecutionBackend", "SimBackend", "RealtimeBackend",
+    "ExecutionBackend", "SimBackend", "EpochSimBackend", "RealtimeBackend",
     "SchedulerConfig", "DeviceModel", "TaskSpec", "StageProfile",
     "BatchPolicy", "HP", "LP", "RunMetrics", "EngineCore", "Completion",
 ]
@@ -82,6 +83,7 @@ class ServerConfig:
         self._horizon_ms = 6000.0
         self._seed = 0
         self._noise_sigma: Optional[float] = None
+        self._engine = "heap"
         self._phase_offsets = True
         self._arrivals: Dict[str, ArrivalProcess] = {}
         self._open_loop: Optional[tuple] = None   # (rate_jps, seed)
@@ -221,6 +223,23 @@ class ServerConfig:
     def noise(self, sigma: float) -> "ServerConfig":
         """Lognormal stage-time noise (sim backend only)."""
         self._noise_sigma = sigma
+        return self
+
+    def engine(self, kind: str) -> "ServerConfig":
+        """Simulation engine selection (sim backend only):
+
+        * ``"heap"`` (default) — the versioned prediction-heap engine
+          (``SimBackend``), the bit-exact reference path;
+        * ``"epoch"`` — the array-programmed epoch engine
+          (``EpochSimBackend``, runtime/epoch.py): vectorized lane-state
+          integration and cohort-ordered ETA selection, bit-identical to
+          the heap path and ~an order of magnitude faster at fleet-scale
+          lane counts.
+        """
+        if kind not in ("heap", "epoch"):
+            raise ValueError(f"unknown engine {kind!r}: expected "
+                             f"'heap' or 'epoch'")
+        self._engine = kind
         return self
 
     def record_decisions(self, enabled: bool = True) -> "ServerConfig":
@@ -368,6 +387,9 @@ class ServerConfig:
                              f"{cfg.oversubscription}")
         if self._noise_sigma is not None and self._backend_kind != SIM:
             raise ValueError("noise() applies to the sim backend only")
+        if self._engine != "heap" and self._backend_kind != SIM:
+            raise ValueError("engine() applies to the sim backend only "
+                             "(the realtime backend has no sim engine)")
         if self._noise_sigma is not None and self._noise_sigma < 0:
             raise ValueError("noise sigma must be >= 0")
         if self._autoscale is not None:
@@ -560,7 +582,9 @@ class DarisServer:
                 list(cfg._specs), sched_cfg, cfg._device,
                 **cfg._sched_cls_kw)
         if cfg._backend_kind == SIM:
-            backend = SimBackend(
+            engine_cls = (EpochSimBackend if cfg._engine == "epoch"
+                          else SimBackend)
+            backend = engine_cls(
                 noise_sigma=(0.06 if cfg._noise_sigma is None
                              else cfg._noise_sigma))
         else:

@@ -67,6 +67,7 @@ class ClusterScheduler:
         # shared namespace: one table each, handed to every worker
         self.lanes = LaneMap()
         self.queues: Dict[CtxKey, object] = {}
+        self.hot_queues: set = set()
         self.active_jobs: Dict[CtxKey, Dict[Job, None]] = {}
         self.rejections: list = []
         self.rejected_counts: Dict[int, int] = {HP: 0, LP: 0}
@@ -111,6 +112,12 @@ class ClusterScheduler:
         w.lanes = self.lanes
         self.queues.update(w.queues)
         w.queues = self.queues
+        # the dispatch hot-set is fleet-global too: re-point the fresh
+        # worker's queues (and any it creates later) at the shared one
+        # (register_hot is state-based, so re-registering is idempotent)
+        for k, q in self.queues.items():
+            q.register_hot(k, self.hot_queues)
+        w.hot_queues = self.hot_queues
         self.active_jobs.update(w.active_jobs)
         w.active_jobs = self.active_jobs
         w.rejections = self.rejections

@@ -19,6 +19,12 @@ from typing import List, Optional, Sequence
 
 
 class StageMret:
+    # process-wide estimator generation: bumped whenever ANY stage
+    # estimator's value may have changed. Aggregate caches over many
+    # estimators (StageQueue.backlog_ms) key on it to stay O(1) without
+    # tracking which queue holds which estimator.
+    generation: int = 0
+
     def __init__(self, afet_ms: float, ws: int = 5):
         self.ws = ws
         self.window: deque = deque(maxlen=ws)
@@ -28,11 +34,13 @@ class StageMret:
     def observe(self, et_ms: float) -> None:
         self.window.append(et_ms)
         self._value = None
+        StageMret.generation += 1
 
     def invalidate(self) -> None:
         """Drop the memoized max after direct ``window`` mutation
         (checkpoint restore)."""
         self._value = None
+        StageMret.generation += 1
 
     def value(self) -> float:
         """Eq. 1: max over the recent window (AFET until history exists)."""

@@ -107,6 +107,11 @@ class LaneMap(dict):
     def free_lanes(self) -> List[tuple]:
         return sorted(self._free)
 
+    def free_set(self) -> set:
+        """Live free lanes, unordered — the dispatch loop filters by
+        hot context first, then sorts the (much smaller) remainder."""
+        return self._free
+
     def busy_in_ctx(self, ctx: int) -> List[tuple]:
         """Sorted (lane, inst) pairs of occupied lanes in one context."""
         return sorted(self._busy_by_ctx.get(ctx, {}).items())
@@ -147,6 +152,11 @@ class DarisScheduler:
         self._live_cache: Optional[List[Context]] = None
         self.queues: Dict[CtxKey, StageQueue] = {
             c.index: StageQueue(cfg.queue_cfg) for c in self.contexts}
+        # dispatch index: context keys whose queue currently holds work
+        # (maintained by the queues themselves — see StageQueue.register_hot)
+        self.hot_queues: set = set()
+        for k, q in self.queues.items():
+            q.register_hot(k, self.hot_queues)
         # lane occupancy: (ctx, slot) -> StageInstance | None (indexed)
         self.lanes = LaneMap()
         for c in self.contexts:
@@ -167,6 +177,11 @@ class DarisScheduler:
         # (EngineCore refreshes it every iteration); inf = no pending
         # events, so batch heads must never be held back
         self.next_wake_ms: float = math.inf
+        # lazy work-accounting hook (runtime/epoch.py): the epoch engine
+        # integrates work_done in slot arrays and only flushes a
+        # context's StageInstances right before predicted_finish reads
+        # them. None (heap engine, realtime) = work_done is always live.
+        self.work_sync = None
         # degradation-controller batching knob (repro.chaos): multiplies
         # the batch policy's max_wait_ms while the server is degraded, so
         # heads grow larger under brownout. 1.0 = no effect (chaos off).
@@ -329,6 +344,8 @@ class DarisScheduler:
         Batched stages cost b/g(b) x their normalized MRET, here and in
         ``StageQueue.backlog_ms``; faster devices drain the same backlog
         proportionally sooner."""
+        if self.work_sync is not None:
+            self.work_sync(k)
         ctx = self.contexts[k]
         rem = 0.0
         for _, inst in self.lanes.busy_in_ctx(k):
@@ -475,8 +492,10 @@ class DarisScheduler:
         job.extra_release_ms.append(now)
         job.extra_member_idx.append(task.index)
         # the head instance is still queued: refresh its cached backlog
-        # cost to the grown batch size (see StageInstance.cost_b)
+        # cost to the grown batch size (see StageInstance.cost_b) — and
+        # tell the queue its memoized backlog total is stale
         inst.cost_b = batch_cost(inst.profile, job.n_inputs)
+        self.queues[job.ctx].touch()
         self.coalesced += 1
         return job
 
@@ -595,7 +614,10 @@ class DarisScheduler:
             if inst is not None and job.stage_idx == 0:
                 job.extra_release_ms.pop(member)
                 job.extra_member_idx.pop(member)
+                # in-place cost_b change of a still-queued instance:
+                # invalidate the queue's memoized backlog total
                 inst.cost_b = batch_cost(inst.profile, job.n_inputs)
+                q.touch()
                 return "detached", job
             job.dropped_releases.append(rel)
             return "dropped", job
@@ -761,7 +783,9 @@ class DarisScheduler:
         structure (queue, active-job set, lanes)."""
         self._invalidate_live()
         self.contexts.append(ctx)
-        self.queues[ctx.index] = StageQueue(self.cfg.queue_cfg)
+        q = StageQueue(self.cfg.queue_cfg)
+        q.register_hot(ctx.index, self.hot_queues)
+        self.queues[ctx.index] = q
         self.active_jobs[ctx.index] = {}
         for s in range(ctx.n_streams):
             self.lanes[(ctx.index, s)] = None

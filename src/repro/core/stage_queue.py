@@ -15,6 +15,7 @@ import itertools
 from typing import List, Optional, Tuple
 
 from ..runtime.contention import batch_cost
+from .mret import StageMret
 from .task import HP, StageInstance
 
 _seq = itertools.count()
@@ -40,6 +41,33 @@ class StageQueue:
     def __init__(self, qcfg: Optional[QueueConfig] = None):
         self.qcfg = qcfg or QueueConfig()
         self._heap: List[Tuple[tuple, StageInstance]] = []
+        # memoized backlog_ms (see below): version counts structural
+        # mutations; the cache key pairs it with the process-wide MRET
+        # generation so estimator updates invalidate it too
+        self._version = 0
+        self._backlog_key: Tuple[int, int] = (-1, -1)
+        self._backlog_total = 0.0
+        # dispatch hot-set hookup (see register_hot)
+        self._hot: Optional[set] = None
+        self._hot_key = None
+
+    def register_hot(self, key, hot: set) -> None:
+        """Join the scheduler's dispatch index: the queue keeps ``key``
+        in ``hot`` exactly while it holds work, so the engine's dispatch
+        loop can skip every context with an empty queue instead of
+        probing each free lane (fleet runs: hundreds of probes/event)."""
+        self._hot_key = key
+        self._hot = hot
+        if self._heap:
+            hot.add(key)
+        else:
+            hot.discard(key)
+
+    def touch(self) -> None:
+        """Invalidate the memoized backlog total after an in-place
+        mutation the queue cannot see (a queued instance's ``cost_b``
+        refresh on batch coalesce/detach)."""
+        self._version += 1
 
     def push(self, inst: StageInstance) -> None:
         if inst.smret is None:
@@ -51,11 +79,18 @@ class StageQueue:
         key = (stage_level(inst, self.qcfg), inst.virtual_deadline_ms,
                next(_seq))
         heapq.heappush(self._heap, (key, inst))
+        self._version += 1
+        if self._hot is not None:
+            self._hot.add(self._hot_key)
 
     def pop(self) -> Optional[StageInstance]:
         if not self._heap:
             return None
-        return heapq.heappop(self._heap)[1]
+        self._version += 1
+        out = heapq.heappop(self._heap)[1]
+        if not self._heap and self._hot is not None:
+            self._hot.discard(self._hot_key)
+        return out
 
     def peek(self) -> Optional[StageInstance]:
         return self._heap[0][1] if self._heap else None
@@ -79,6 +114,9 @@ class StageQueue:
                 if i < len(self._heap):
                     self._heap[i] = last
                     heapq.heapify(self._heap)
+                self._version += 1
+                if not self._heap and self._hot is not None:
+                    self._hot.discard(self._hot_key)
                 return True
         return False
 
@@ -94,14 +132,28 @@ class StageQueue:
         """Remove and return all queued stages (fault recovery path)."""
         items = [inst for _, inst in self._heap]
         self._heap = []
+        self._version += 1
+        if self._hot is not None:
+            self._hot.discard(self._hot_key)
         return items
 
     def backlog_ms(self) -> float:
         """Sum of MRET of queued stages (migration target estimation);
         batched stages cost b/g(b) x their normalized MRET. Uses the
         per-instance cached estimator/cost (see StageInstance): same
-        floats, same left-to-right order, none of the property chains."""
+        floats, same left-to-right order, none of the property chains.
+
+        Memoized on (queue version, StageMret.generation): migration
+        candidate scans call this once per live context per straggler
+        kill, and between queue/estimator mutations the recompute would
+        run the identical loop over identical floats — the cached total
+        IS that loop's result, bit for bit."""
+        key = (self._version, StageMret.generation)
+        if key == self._backlog_key:   # dsan: ignore[DSAN003] stamp identity
+            return self._backlog_total
         total = 0.0
         for _, inst in self._heap:
             total += inst.smret.value() * inst.cost_b
+        self._backlog_key = key
+        self._backlog_total = total
         return total

@@ -1,0 +1,224 @@
+"""Fused contention + ETA kernel for fleet-scale lane sweeps.
+
+Evaluates the processor-sharing contention model (runtime/contention.py:
+Eq. 9 share-capping, unit-budget shrink, L2-thrash bandwidth congestion)
+and the finish-time prediction ``eta = now + rem / rate`` over thousands
+of lanes in one jitted pass. Two implementations:
+
+* ``rates`` / ``fused`` — jitted jnp in **float64** (scoped
+  ``jax.experimental.enable_x64``), with the three reductions (share
+  total, unit usage, bandwidth phi) evaluated as *sequential*
+  left-to-right ``lax.fori_loop`` accumulations over the live prefix.
+  This reproduces ``ContentionModel.rates_seq`` bit-for-bit — it is the
+  path the epoch engine (runtime/epoch.py) dispatches to above
+  ``EpochSimBackend.KERNEL_MIN`` lanes per rate-group, so engine results
+  stay on the golden-fixture bits no matter which side of the threshold
+  a sweep lands on (tests/test_epoch_engine.py locks this).
+
+* ``fused_pallas`` — a Pallas kernel (TPU; interpret-mode elsewhere)
+  following the kernels/ops.py dispatch idiom. TPU vector units have no
+  float64, so this variant runs in float32: it serves analytic
+  fleet-capacity sweeps where raw lane throughput matters and bit-parity
+  with the CPU reference does not. It is NOT used by the sim engines.
+
+Inputs are padded to a power-of-two panel so jit retraces O(log m)
+times, never per lane count; padding lanes are masked out of every
+reduction (they contribute exact ``+0.0``) and sliced off the result.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import enable_x64
+    _HAVE_JAX = True
+except Exception:                                    # pragma: no cover
+    _HAVE_JAX = False
+
+
+def available() -> bool:
+    """True when the jitted float64 kernel can run in this process."""
+    return _HAVE_JAX
+
+
+def _panel(m: int) -> int:
+    """Smallest power-of-two >= m (floor 8): the static pad size."""
+    return 1 << max(m - 1, 7).bit_length()
+
+
+if _HAVE_JAX:
+
+    @jax.jit
+    def _kernel_f64(u, ns, mf, rem, m, now, one, n_units, bubble, l2p):
+        """One fused pass: speeds (pre-clamp), clamped rates, ETAs.
+
+        Every elementwise step is the same IEEE-754 op sequence as
+        ``ContentionModel.rates_arrays``; the reductions accumulate
+        left-to-right over the live prefix (padding adds +0.0, which is
+        exact for these non-negative terms), matching ``_seq_sum``.
+
+        Two XLA:CPU rewrites silently change bits, so the kernel routes
+        around both:
+
+        * ``add(mul(a, b), c)`` contracts into a single-rounding FMA —
+          one ulp off the two-rounding scalar reference — and neither
+          ``optimization_barrier`` nor a bitcast round-trip survives the
+          simplifier. ``nofma(t) = t * one`` does (``one`` is a
+          runtime-supplied 1.0): a multiply by a runtime parameter cannot
+          be folded, and even if the *outer* multiply contracts,
+          ``fma(t, 1.0, c)`` rounds identically to ``t + c``.
+
+        * division by a compile-time constant is rewritten to a multiply
+          by its (inexactly rounded) reciprocal. Hence the device
+          parameters (``n_units``, ``bubble``, ``l2p``) arrive as traced
+          runtime scalars, never jit-time constants, so every divisor in
+          the graph stays a true divide.
+        """
+        P = u.shape[0]
+        live = jnp.arange(P) < m
+        mf64 = m.astype(u.dtype)
+
+        def nofma(x):
+            return x * one
+
+        def seq_sum(x):
+            # the product array is materialized (dynamically indexed in
+            # the loop), so the loop add cannot contract with it
+            x = jnp.where(live, x, 0.0)
+            return lax.fori_loop(0, P, lambda j, acc: acc + x[j], 0.0)
+
+        total = seq_sum(u)
+        u = jnp.where(total > n_units, u * (n_units / total), u)
+        gain = (1.0 - bubble / mf64) / (1.0 - bubble)
+        speeds = jnp.minimum(1.0, jnp.minimum(u, ns) / ns * gain)
+        used = seq_sum(speeds * ns)
+        budget = n_units * (1.0 + nofma(bubble * (1.0 - 1.0 / mf64)))
+        speeds = jnp.where(used > budget, speeds * (budget / used), speeds)
+        thrash = 1.0 + nofma(l2p * jnp.maximum(mf64 - 1.0, 0.0))
+        phi = seq_sum(mf * speeds) * thrash
+        speeds = jnp.where(phi > 1.0,
+                           speeds / ((1.0 - mf) + nofma(mf * phi)), speeds)
+        rates = jnp.where(speeds > 1e-6, speeds, 1e-6)
+        eta = now + rem / rates
+        return speeds, rates, eta
+
+    def _call(device, u, ns, mf, rem, now):
+        m = len(u)
+        P = _panel(m)
+        with enable_x64():
+            bu = np.ones(P)         # neutral pads: ns=1 avoids 0/0
+            bns = np.ones(P)
+            bmf = np.zeros(P)
+            brem = np.zeros(P)
+            bu[:m] = u
+            bns[:m] = ns
+            bmf[:m] = mf
+            if rem is not None:
+                brem[:m] = rem
+            bu[m:] = 0.0
+            return _kernel_f64(
+                jnp.asarray(bu), jnp.asarray(bns), jnp.asarray(bmf),
+                jnp.asarray(brem), jnp.asarray(m), jnp.asarray(float(now)),
+                jnp.asarray(1.0), jnp.asarray(float(device.n_units)),
+                jnp.asarray(float(device.bubble)),
+                jnp.asarray(float(device.l2_pressure)))
+
+
+def rates(device, u: Sequence[float], ns: Sequence[float],
+          mf: Sequence[float]) -> List[float]:
+    """Bit-exact drop-in for ``ContentionModel.rates_seq`` (pre-clamp
+    speed fractions) through the jitted float64 kernel."""
+    m = len(u)
+    if m == 0:
+        return []
+    speeds, _, _ = _call(device, u, ns, mf, None, 0.0)
+    return np.asarray(speeds)[:m].tolist()
+
+
+def fused(device, now: float, u: Sequence[float], ns: Sequence[float],
+          mf: Sequence[float], rem: Sequence[float]
+          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused contention + ETA: returns ``(rates, etas)`` as float64
+    arrays of length ``len(u)``, where rates carry the engine's 1e-6
+    clamp and ``eta = now + rem / rate`` — the epoch engine's whole
+    prediction pass for one rate-group in a single jitted call."""
+    m = len(u)
+    if m == 0:
+        z = np.empty(0)
+        return z, z
+    _, r, eta = _call(device, u, ns, mf, rem, now)
+    return np.asarray(r)[:m], np.asarray(eta)[:m]
+
+
+# --------------------------------------------------------------- Pallas
+def _on_tpu() -> bool:                               # pragma: no cover
+    return _HAVE_JAX and jax.default_backend() == "tpu"
+
+
+def fused_pallas(device, now: float, u, ns, mf, rem, *,
+                 interpret: bool = None):
+    """Float32 Pallas variant of ``fused`` for analytic fleet sweeps
+    (see module docstring — NOT the engines' bit-exact path). Single
+    VMEM-resident panel; reductions run as sequential ``fori_loop``
+    accumulations inside the kernel, mirroring the f64 path's order."""
+    if not _HAVE_JAX:
+        raise RuntimeError("contention_eta.fused_pallas requires jax")
+    from jax.experimental import pallas as pl
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    m = len(u)
+    P = max(128, _panel(m))
+    f32 = np.float32
+
+    def pad(x, fill):
+        out = np.full(P, fill, dtype=f32)
+        out[:m] = np.asarray(x, dtype=f32)[:m]
+        return out
+
+    bu, bns = pad(u, 0.0), pad(ns, 1.0)
+    bmf, brem = pad(mf, 0.0), pad(rem, 0.0)
+    n_units = f32(device.n_units)
+    bubble = f32(device.bubble)
+    l2p = f32(device.l2_pressure)
+    mf32 = f32(m)
+    now32 = f32(now)
+
+    def kernel(u_ref, ns_ref, mf_ref, rem_ref, rate_ref, eta_ref):
+        live = (lax.broadcasted_iota(jnp.int32, (1, P), 1)
+                < m).astype(jnp.float32)
+        u = u_ref[...] * live
+        ns_ = ns_ref[...]
+        mfr = mf_ref[...] * live
+
+        def seq_sum(x):
+            return lax.fori_loop(
+                0, P, lambda j, acc: acc + x[0, j], jnp.float32(0.0))
+
+        total = seq_sum(u)
+        u = jnp.where(total > n_units, u * (n_units / total), u)
+        gain = (1.0 - bubble / mf32) / (1.0 - bubble)
+        speeds = jnp.minimum(1.0, jnp.minimum(u, ns_) / ns_ * gain)
+        used = seq_sum(speeds * ns_)
+        budget = n_units * (1.0 + bubble * (1.0 - 1.0 / mf32))
+        speeds = jnp.where(used > budget, speeds * (budget / used), speeds)
+        thrash = 1.0 + l2p * jnp.maximum(mf32 - 1.0, 0.0)
+        phi = seq_sum(mfr * speeds) * thrash
+        speeds = jnp.where(phi > 1.0,
+                           speeds / ((1.0 - mfr) + mfr * phi), speeds)
+        rate = jnp.where(speeds > 1e-6, speeds, jnp.float32(1e-6))
+        rate_ref[...] = rate
+        eta_ref[...] = now32 + rem_ref[...] / rate
+
+    out_shape = [jax.ShapeDtypeStruct((1, P), f32)] * 2
+    rate, eta = pl.pallas_call(kernel, out_shape=out_shape,
+                               interpret=interpret)(
+        bu.reshape(1, P), bns.reshape(1, P),
+        bmf.reshape(1, P), brem.reshape(1, P))
+    return np.asarray(rate)[0, :m], np.asarray(eta)[0, :m]

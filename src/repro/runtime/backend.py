@@ -74,6 +74,63 @@ _tie = itertools.count()
  _XFER, _CFAIL) = range(11)
 
 
+def launch_values(core: EngineCore, lane: tuple, inst: StageInstance,
+                  rng, noise_sigma: float) -> tuple:
+    """The per-launch scalar pipeline shared by ``SimBackend`` and the
+    array-programmed ``EpochSimBackend`` (runtime/epoch.py): noise draw,
+    batched work, effective profile, straggler constants, heterogeneous
+    speed scaling, transfer charge, chaos hazards. One implementation is
+    what makes the two engines bit-identical by construction — and it is
+    the ONLY place the shared sim rng is drawn from at launch time (see
+    the draw-order invariant in the module docstring).
+
+    Returns ``(work, eff, smret, cost, floor, xfer, cfail)``.
+    """
+    prof = inst.profile
+    b = inst.job.n_inputs
+    noise = math.exp(rng.normal(0.0, noise_sigma))
+    # batched jobs carry b inputs in one dispatch: work scales by
+    # b / g(b) (Table-I-calibrated curve), overhead is paid once
+    alone = batched_stage_ms(prof, b)
+    work = (alone + prof.overhead_ms) * noise
+    # batched kernels also widen — the effective profile competes for
+    # more units in the rate computation (identity object for b = 1).
+    # The contention model is the LANE's device's (cluster lanes can
+    # sit on heterogeneous GPUs; on one device this is sched.contention)
+    con = core.sched.contention_of(lane[0])
+    eff = con.batched_profile(prof, b)
+    # straggler-check constants, hoisted out of the per-event loop:
+    # the stage's MRET estimator, its batch cost, and its kill floor
+    # are fixed for the lifetime of this launch
+    smret = inst.task.mret.stages[inst.job.stage_idx]
+    cost = batch_cost(prof, b)
+    floor = 4.0 * (alone + prof.overhead_ms)
+    spd = con.device.speed
+    if spd != 1.0:
+        # heterogeneous device: profiles/MRET are reference-speed, so
+        # the executed work — and every wall-clock-comparable straggler
+        # constant — shrinks by the device's speed factor
+        work /= spd
+        cost /= spd
+        floor /= spd
+    if inst.transfer_ms:
+        # inter-GPU state migration (cluster dispatcher stamped it):
+        # the transfer serializes ahead of the stage program
+        work += inst.transfer_ms
+    # chaos hazards draw from the plan's OWN stream (never the sim
+    # rng — the draw-order invariant above stays intact): one draw
+    # per configured hazard per launch, in dispatch order. A stall
+    # is extra serialized work; a fault pays the full execution and
+    # surfaces as Completion.failed at harvest.
+    cfail = False
+    ch = core._chaos
+    if ch is not None:
+        cfail, stall = ch.draw_launch()
+        if stall:
+            work += stall
+    return work, eff, smret, cost, floor, inst.transfer_ms, cfail
+
+
 class ExecutionBackend(Protocol):
     """Structural type for execution substrates (see module docstring)."""
 
@@ -203,53 +260,12 @@ class SimBackend:
 
     # ----------------------------------------------------------- execution
     def launch(self, lane: tuple, inst: StageInstance) -> None:
-        prof = inst.profile
-        b = inst.job.n_inputs
-        noise = math.exp(self.rng.normal(0.0, self.noise_sigma))
-        # batched jobs carry b inputs in one dispatch: work scales by
-        # b / g(b) (Table-I-calibrated curve), overhead is paid once
-        alone = batched_stage_ms(prof, b)
-        work = (alone + prof.overhead_ms) * noise
-        # batched kernels also widen — the effective profile competes for
-        # more units in the rate computation (identity object for b = 1).
-        # The contention model is the LANE's device's (cluster lanes can
-        # sit on heterogeneous GPUs; on one device this is sched.contention)
-        con = self.core.sched.contention_of(lane[0])
-        eff = con.batched_profile(prof, b)
-        # straggler-check constants, hoisted out of the per-event loop:
-        # the stage's MRET estimator, its batch cost, and its kill floor
-        # are fixed for the lifetime of this launch
-        smret = inst.task.mret.stages[inst.job.stage_idx]
-        cost = batch_cost(prof, b)
-        floor = 4.0 * (alone + prof.overhead_ms)
-        spd = con.device.speed
-        if spd != 1.0:
-            # heterogeneous device: profiles/MRET are reference-speed, so
-            # the executed work — and every wall-clock-comparable straggler
-            # constant — shrinks by the device's speed factor
-            work /= spd
-            cost /= spd
-            floor /= spd
-        if inst.transfer_ms:
-            # inter-GPU state migration (cluster dispatcher stamped it):
-            # the transfer serializes ahead of the stage program
-            work += inst.transfer_ms
-        # chaos hazards draw from the plan's OWN stream (never the sim
-        # rng — the draw-order invariant above stays intact): one draw
-        # per configured hazard per launch, in dispatch order. A stall
-        # is extra serialized work; a fault pays the full execution and
-        # surfaces as Completion.failed at harvest.
-        cfail = False
-        ch = self.core._chaos
-        if ch is not None:
-            cfail, stall = ch.draw_launch()
-            if stall:
-                work += stall
+        work, eff, smret, cost, floor, xfer, cfail = launch_values(
+            self.core, lane, inst, self.rng, self.noise_sigma)
         # version must be globally unique: a reset-to-0 counter lets a
         # stale FINISH from the lane's previous occupant fire early
         self.running[lane] = [inst, work, 0.0, next(_tie), eff, None,
-                              smret, cost, floor, inst.transfer_ms,
-                              cfail]
+                              smret, cost, floor, xfer, cfail]
         self._rates_dirty = True
 
     def cancel_ctx(self, ctx_idx: int) -> None:
@@ -352,7 +368,6 @@ class SimBackend:
             return
         sched = self.core.sched
         entries = list(self.running.items())
-        m = len(entries)
         if self._rates_dirty or self.full_repredict:
             # lanes on different GPUs never contend: the scheduler splits
             # the running set into per-device groups (exactly one group —
@@ -394,10 +409,20 @@ class SimBackend:
             entry[_VER] = next(_tie)
             entry[_ETA] = eta
             heapq.heappush(heap, (eta, next(_tie), lane, entry[_VER]))
-        # compaction: once stale predictions outnumber live ones 2:1,
-        # rebuild the heap with only the live entries (pop order of
-        # survivors is unchanged — the seq tie-breaker is preserved)
-        if len(heap) > self._COMPACT_MIN and len(heap) > 2 * m:
+        self.maybe_compact()
+
+    def maybe_compact(self) -> None:
+        """Compaction: once stale predictions outnumber live ones 2:1,
+        rebuild the heap with only the live entries (pop order of
+        survivors is unchanged — the seq tie-breaker is preserved).
+        Runs after every prediction pass AND from the serving pump's
+        pause path (EngineCore._step): an idle daemon under churny
+        cancel traffic never reaches ``running_set_changed`` again, so
+        without the pause-path call its stale entries accrete
+        unboundedly."""
+        heap = self._heap
+        if (len(heap) > self._COMPACT_MIN
+                and len(heap) > 2 * len(self.running)):
             running = self.running
             live = [e for e in heap
                     if (ent := running.get(e[2])) is not None

@@ -395,7 +395,17 @@ class EngineCore:
         if frontier is not None:
             nxt = min(t_evt, self.backend.peek_eta())
             if nxt == math.inf or nxt > frontier:
-                return False      # pause — never advance past the frontier
+                # pause — never advance past the frontier. The pause is a
+                # serving daemon's steady state, so this is also where the
+                # backend gets its housekeeping window: a churny
+                # cancel-heavy workload leaves stale finish predictions
+                # behind, and running_set_changed (the batch-run
+                # compaction site) will not run again until new work
+                # arms the pump.
+                compact = getattr(self.backend, "maybe_compact", None)
+                if compact is not None:
+                    compact()
+                return False
         cap = min(t_evt, self.horizon)
         if frontier is not None and not self.backend.virtual_time:
             cap = min(cap, frontier)   # wall clock: don't block past it
@@ -956,8 +966,22 @@ class EngineCore:
 
     def _dispatch(self) -> None:
         now = self.backend.now_ms()
-        for lane in self.sched.free_lanes():
-            inst = self.sched.next_for_lane(lane[0], now)
+        sched = self.sched
+        # only contexts whose queue holds work can yield a dispatch, and
+        # popping never refills another queue, so lanes of cold contexts
+        # are skipped up front (their pop would return None anyway).
+        # Sorting the filtered subset preserves the historic sorted-lane
+        # dispatch order among the lanes that matter.
+        hot = getattr(sched, "hot_queues", None)
+        if hot is not None:
+            if not hot:
+                return
+            lanes = sorted(ln for ln in sched.lanes.free_set()
+                           if ln[0] in hot)
+        else:                          # custom scheduler without the index
+            lanes = sched.free_lanes()
+        for lane in lanes:
+            inst = sched.next_for_lane(lane[0], now)
             if inst is None:
                 continue
             inst.start_ms = now

@@ -24,24 +24,31 @@ from ..core.scheduler import DarisScheduler
 from .arrivals import PeriodicArrival
 from .backend import SimBackend
 from .engine_core import EngineCore, FaultPlan
+from .epoch import EpochSimBackend
 
 __all__ = ["SimEngine", "FaultPlan"]
 
 
 class SimEngine:
     """Thin deprecated wrapper: EngineCore + SimBackend with the historic
-    constructor signature. Prefer ``repro.api.DarisServer``."""
+    constructor signature. Prefer ``repro.api.DarisServer`` — which also
+    exposes the engine switch as ``ServerConfig.engine("heap"|"epoch")``;
+    the ``engine`` kwarg here mirrors it for legacy call sites."""
 
     def __init__(self, sched: DarisScheduler, horizon_ms: float = 20_000.0,
                  seed: int = 0, noise_sigma: float = 0.06,
                  fault_plan: Optional[FaultPlan] = None,
-                 phase_offsets: bool = True):
+                 phase_offsets: bool = True, engine: str = "heap"):
         warnings.warn(
             "SimEngine is deprecated; build a server via repro.api."
             "ServerConfig.sim() instead", DeprecationWarning, stacklevel=2)
+        if engine not in ("heap", "epoch"):
+            raise ValueError(f"unknown engine {engine!r}: expected "
+                             f"'heap' or 'epoch'")
+        backend_cls = EpochSimBackend if engine == "epoch" else SimBackend
         phase = "random" if phase_offsets else 0.0
         self.core = EngineCore(
-            sched, SimBackend(noise_sigma=noise_sigma),
+            sched, backend_cls(noise_sigma=noise_sigma),
             horizon_ms=horizon_ms, seed=seed, fault_plan=fault_plan,
             arrivals={t.index: PeriodicArrival(phase_ms=phase)
                       for t in sched.tasks})

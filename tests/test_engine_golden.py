@@ -1,10 +1,18 @@
 """Golden-snapshot determinism tests for the sim event engine.
 
-The fixture ``tests/golden/engine_golden.json`` was captured from the
-pre-vectorization engine (PR 2 head). These tests assert that the current
-engine reproduces those runs BIT-IDENTICALLY — counts exactly, response
-times by SHA-256 over their IEEE-754 hex forms — across all three
-policies (MPS, STR, MPS+STR), with dynamic batching on and off.
+The ten ``mps_/str_/mpsstr_`` entries of the fixture
+``tests/golden/engine_golden.json`` were captured from the
+pre-vectorization engine (PR 2 head); the ``cluster_``/``chaos_``
+entries were captured from the heap engine at the point the epoch
+engine landed. These tests assert that the current engine reproduces
+those runs BIT-IDENTICALLY — counts exactly, response times by SHA-256
+over their IEEE-754 hex forms — across all three policies (MPS, STR,
+MPS+STR), with dynamic batching on and off, plus a heterogeneous
+cluster and a chaos (faults + brownout + watchdog) run.
+
+``tests/test_epoch_engine.py`` replays every fixture through the
+array-programmed epoch engine and asserts the same digests — the
+twin-path bit-identity contract.
 
 Regenerate (only when a *deliberate* semantic change is made, never to
 paper over a perf refactor):
@@ -23,38 +31,58 @@ GOLDEN = pathlib.Path(__file__).resolve().parent / "golden" / "engine_golden.jso
 
 
 def _scenarios():
+    """name -> builder returning an UNBUILT ServerConfig, so callers can
+    select the sim engine (``.engine("heap"|"epoch")``) before build."""
+    from repro.api import Brownout, ServerConfig
     from repro.core.scheduler import SchedulerConfig
     from repro.core.batching import BatchPolicy
+    from repro.serving.profiles import device
     from repro.serving.requests import table2_taskset
+    from benchmarks.common import make_server
 
     def cfg(nc, ns, os_, batched):
         pol = BatchPolicy(max_batch=4) if batched else None
         return SchedulerConfig(n_contexts=nc, n_streams=ns,
                                oversubscription=os_, batch_policy=pol)
 
+    def mk(specs, c, horizon):
+        return make_server(specs, c, horizon_ms=horizon, seed=0)
+
     out = {}
     for batched in (False, True):
         tag = "batch" if batched else "plain"
         out[f"mps_unet_4x1_os4_{tag}"] = (
-            lambda b=batched: (table2_taskset("unet"), cfg(4, 1, 4.0, b), 1200.0))
+            lambda b=batched: mk(table2_taskset("unet"), cfg(4, 1, 4.0, b), 1200.0))
         out[f"str_unet_1x4_{tag}"] = (
-            lambda b=batched: (table2_taskset("unet"), cfg(1, 4, 1.0, b), 1200.0))
+            lambda b=batched: mk(table2_taskset("unet"), cfg(1, 4, 1.0, b), 1200.0))
         out[f"mpsstr_unet_2x2_os2_{tag}"] = (
-            lambda b=batched: (table2_taskset("unet"), cfg(2, 2, 2.0, b), 1200.0))
+            lambda b=batched: mk(table2_taskset("unet"), cfg(2, 2, 2.0, b), 1200.0))
         out[f"mps_rn18_6x1_os6_{tag}"] = (
-            lambda b=batched: (table2_taskset("resnet18"), cfg(6, 1, 6.0, b), 700.0))
+            lambda b=batched: mk(table2_taskset("resnet18"), cfg(6, 1, 6.0, b), 700.0))
         out[f"mpsstr_rn18_3x3_os3_{tag}"] = (
-            lambda b=batched: (table2_taskset("resnet18"), cfg(3, 3, 3.0, b), 500.0))
+            lambda b=batched: mk(table2_taskset("resnet18"), cfg(3, 3, 3.0, b), 500.0))
+    # heterogeneous cluster (fig13-shaped): global admission + placement
+    out["cluster_rn18_2gpu"] = lambda: (
+        ServerConfig.cluster(2, device_models=["a100", "v100"])
+        .tasks(table2_taskset("resnet18"))
+        .contexts(3).streams(1).oversubscribe(3.0)
+        .device(device()).horizon_ms(600.0).seed(0))
+    # chaos (fig14-shaped): faults + stalls + mid-run brownout with the
+    # stage watchdog armed — pins the kill/retry/rate-shift hot paths
+    out["chaos_rn18_4x1_os4"] = lambda: (
+        mk(table2_taskset("resnet18"), cfg(4, 1, 4.0, False), 600.0)
+        .chaos(seed=3, stage_fault_rate=0.02, stall_rate=0.05,
+               stall_ms=3.0, watchdog_kappa=6.0,
+               brownouts=(Brownout(150.0, 330.0, device=0,
+                                   slow_factor=2.0),)))
     return out
 
 
-def _capture(build) -> dict:
+def _capture(build, engine: str = "heap") -> dict:
     """Run one scenario and reduce its RunMetrics to a bit-exact digest."""
     from repro.core.task import HP, LP
-    from benchmarks.common import make_server
 
-    specs, cfg, horizon = build()
-    server = make_server(specs, cfg, horizon_ms=horizon, seed=0).build()
+    server = build().engine(engine).build()
     m = server.run()
 
     def float_digest(xs):

@@ -1,0 +1,260 @@
+"""Twin-path bit-identity tests for the array-programmed epoch engine.
+
+The epoch engine (``repro.runtime.epoch.EpochSimBackend``) keeps per-lane
+hot state in preallocated NumPy arrays and advances the simulation in
+vectorized epochs; the heap engine (``SimBackend``) is the bit-exact
+reference. These tests pin the twin-path contract:
+
+* every golden fixture in ``tests/golden/engine_golden.json`` (including
+  the cluster and chaos fixtures) reproduces BIT-IDENTICALLY through the
+  epoch engine — counts exactly, response times by SHA-256 over IEEE-754
+  hex forms;
+* the contract survives the scheduler sanitizer and a fleet-shaped
+  trace-replay cluster run (the epoch engine's target workload);
+* the jitted JAX contention+ETA kernel returns the same bits as
+  ``ContentionModel.rates_seq`` at every lane count, so sweeping the
+  ``DARIS_EPOCH_KERNEL_MIN`` dispatch threshold cannot change results;
+* the prediction-heap compaction hook fires on the serving pump's idle
+  pause (churny cancel traffic must not accrete stale predictions);
+* the dispatch hot-queue index tracks queue occupancy exactly.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+import pytest
+
+from test_engine_golden import GOLDEN, _capture, _scenarios
+
+
+def _kernel():
+    from repro.kernels import contention_eta
+    return contention_eta
+
+
+def _kernel_available() -> bool:
+    try:
+        return _kernel().available()
+    except Exception:
+        return False
+
+
+# ------------------------------------------------------------------ goldens
+@pytest.mark.parametrize("name", sorted(_scenarios()))
+def test_epoch_matches_golden(name):
+    golden = json.loads(GOLDEN.read_text())
+    assert name in golden, f"{name} missing from fixture; --regen?"
+    got = _capture(_scenarios()[name], engine="epoch")
+    assert got == golden[name]
+
+
+def test_epoch_matches_heap_under_sanitizer():
+    """DSAN invariant checks must pass identically on both engines (the
+    sanitizer reads scheduler state the backends feed differently)."""
+    build = _scenarios()["chaos_rn18_4x1_os4"]
+    heap = _capture(lambda: build().sanitize(2), engine="heap")
+    epoch = _capture(lambda: build().sanitize(2), engine="epoch")
+    assert epoch == heap
+
+
+def test_epoch_matches_heap_fleet_trace():
+    """Fleet-shaped run: multi-device cluster replaying an arrival trace
+    — the workload the epoch engine exists for."""
+    import numpy as np
+    from benchmarks.perf_engine import _diurnal_trace
+    from repro.api import ServerConfig, TraceArrival
+    from repro.core.task import LP, StageProfile, TaskSpec
+    from repro.serving.profiles import device
+
+    def build():
+        n_dev, per_dev, h = 8, 2, 400.0
+        specs = [TaskSpec(name=f"svc{i:02d}", period_ms=24.0, priority=LP,
+                          stages=[StageProfile(name=f"svc{i:02d}/s0",
+                                               t_alone_ms=2.0,
+                                               n_sat=20.0, mem_frac=0.3),
+                                  StageProfile(name=f"svc{i:02d}/s1",
+                                               t_alone_ms=2.0,
+                                               n_sat=20.0, mem_frac=0.3)])
+                 for i in range(n_dev * per_dev)]
+        cfg = (ServerConfig.cluster(n_dev).tasks(specs)
+               .contexts(2).streams(1).oversubscribe(2.0)
+               .device(device()).horizon_ms(h).seed(0))
+        for i, s in enumerate(specs):
+            rng = np.random.default_rng(9000 + i)
+            cfg.arrival(s.name,
+                        TraceArrival(_diurnal_trace(rng, 1.0 / 24.0, h)))
+        return cfg
+
+    heap = _capture(build, engine="heap")
+    epoch = _capture(build, engine="epoch")
+    assert epoch == heap
+    assert sum(int(v) for v in heap["completed"].values()) > 0
+
+
+# ------------------------------------------------------------------- kernel
+pytestmark_kernel = pytest.mark.skipif(
+    not _kernel_available(), reason="JAX contention kernel unavailable")
+
+
+@pytestmark_kernel
+@pytest.mark.parametrize("m", [1, 2, 3, 7, 17, 64, 255, 1000])
+def test_kernel_rates_bit_exact(m):
+    """The jitted kernel must return the same 64 bits per lane as the
+    sequential reference at every lane count (panel padding included)."""
+    import numpy as np
+    from repro.runtime.contention import ContentionModel
+    from repro.serving.profiles import device
+
+    rng = np.random.default_rng(1234 + m)
+    cm = ContentionModel(device())
+    u = (rng.uniform(0.2, 4.0, m)).tolist()
+    ns = (rng.uniform(5.0, 40.0, m)).tolist()
+    mf = (rng.uniform(0.05, 0.9, m)).tolist()
+    ref = cm.rates_seq(list(u), list(ns), list(mf))
+    got = _kernel().rates(cm.device, u, ns, mf)
+    assert len(got) == m
+    for g, r in zip(got, ref):
+        assert g == r, (g.hex(), r.hex())
+
+
+@pytestmark_kernel
+def test_kernel_rates_bit_exact_hetero_device():
+    """Device parameters are traced (not jit-time constants): a second
+    device model must not recompile into different float sequences."""
+    import dataclasses
+
+    import numpy as np
+    from repro.runtime.contention import ContentionModel
+    from repro.serving.profiles import device
+
+    rng = np.random.default_rng(77)
+    dev = dataclasses.replace(device(), n_units=40,
+                              bubble=0.17, l2_pressure=0.013)
+    cm = ContentionModel(dev)
+    m = 33
+    u = rng.uniform(0.2, 4.0, m).tolist()
+    ns = rng.uniform(5.0, 40.0, m).tolist()
+    mf = rng.uniform(0.05, 0.9, m).tolist()
+    assert _kernel().rates(dev, u, ns, mf) == cm.rates_seq(
+        list(u), list(ns), list(mf))
+
+
+@pytestmark_kernel
+def test_kernel_fused_eta_bit_exact():
+    """fused() = rates + the ETA arithmetic the epoch engine would do."""
+    import numpy as np
+    from repro.runtime.contention import ContentionModel
+    from repro.serving.profiles import device
+
+    rng = np.random.default_rng(5)
+    cm = ContentionModel(device())
+    m, now = 129, 123.456
+    u = rng.uniform(0.2, 4.0, m).tolist()
+    ns = rng.uniform(5.0, 40.0, m).tolist()
+    mf = rng.uniform(0.05, 0.9, m).tolist()
+    rem = rng.uniform(0.1, 8.0, m).tolist()
+    rates, etas = _kernel().fused(cm.device, now, u, ns, mf, rem)
+    ref = cm.rates_seq(list(u), list(ns), list(mf))
+    assert list(rates) == ref
+    for e, rm, rt in zip(etas, rem, ref):
+        assert e == now + rm / rt
+
+
+@pytestmark_kernel
+@pytest.mark.parametrize("threshold", [1, 3, 17])
+def test_kernel_threshold_sweep_bit_identical(threshold, monkeypatch):
+    """Property: results are invariant to WHERE the NumPy/kernel dispatch
+    threshold sits. Forcing tiny thresholds routes every rate-group
+    through the jitted kernel; the run must still match the golden
+    fixture bit for bit."""
+    monkeypatch.setenv("DARIS_EPOCH_KERNEL_MIN", str(threshold))
+    golden = json.loads(GOLDEN.read_text())
+    name = "mpsstr_rn18_3x3_os3_plain"
+    got = _capture(_scenarios()[name], engine="epoch")
+    assert got == golden[name]
+
+
+# ------------------------------------------- serving pump heap compaction
+def test_serving_pump_compacts_prediction_heap():
+    """Churny cancel traffic on an idling serving pump must not accrete
+    stale finish predictions: the pause path calls maybe_compact (the
+    batch-run compaction site, running_set_changed, never fires while
+    the daemon idles)."""
+    from repro.api import ManualArrival, ServerConfig
+    from repro.serving.profiles import device
+    from repro.serving.requests import table2_taskset
+
+    spec = table2_taskset("resnet18")[0]
+    server = (ServerConfig().tasks([spec]).arrival(spec.name,
+                                                   ManualArrival())
+              .contexts(2).streams(1).oversubscribe(2.0)
+              .device(device()).horizon_ms(1e9).seed(0).build())
+    server.begin_serving()
+    t = 0.0
+    for i in range(300):
+        h = server.request(spec.name, at_ms=t)
+        if i % 2:
+            server.cancel(h)
+        t += 2.0
+        server.pump(frontier_ms=t)
+    server.pump(frontier_ms=t + 1e6)      # drain, then idle pause
+    b = server.core.backend
+    assert server.serving_idle()
+    assert len(b._heap) <= max(b._COMPACT_MIN, 2 * len(b.running)), (
+        f"stale predictions accreted: heap={len(b._heap)} "
+        f"running={len(b.running)}")
+    server.end_serving(until_idle=False)
+
+
+# ------------------------------------------------- dispatch hot-queue index
+def test_stage_queue_hot_index_tracks_occupancy():
+    """register_hot keeps the key in the shared set exactly while the
+    queue holds work — push/pop/remove/drain all maintain it."""
+    from repro.core.stage_queue import QueueConfig, StageQueue
+    from repro.core.task import (HP, Job, StageInstance, StageProfile,
+                                 Task, TaskSpec)
+
+    spec = TaskSpec(name="t", period_ms=30.0, priority=HP,
+                    stages=[StageProfile("t/s0", 1.0, 40.0, 0.4)])
+    task = Task(spec=spec, index=0)
+
+    def inst(vdl):
+        job = Job(task=task, release_ms=0.0)
+        return StageInstance(job=job, enqueue_ms=0.0,
+                             virtual_deadline_ms=vdl)
+
+    hot: set = set()
+    q = StageQueue(QueueConfig())
+    a, b = inst(1.0), inst(2.0)
+    q.push(a)
+    q.register_hot("k", hot)              # late registration syncs state
+    assert hot == {"k"}
+    assert q.pop() is a and hot == set()
+    q.push(a)
+    q.push(b)
+    assert hot == {"k"}
+    assert q.remove(a) and hot == {"k"}   # b still queued
+    assert q.remove(b) and hot == set()
+    q.push(a)
+    q.drain()
+    assert hot == set()
+    empty = StageQueue(QueueConfig())
+    empty.register_hot("e", hot)
+    assert hot == set()
+
+
+def test_scheduler_hot_queues_after_run():
+    """End-to-end: after a full run every queue's hot membership matches
+    its occupancy (the engine dispatch loop trusts this)."""
+    build = _scenarios()["mps_rn18_6x1_os6_plain"]
+    server = build().engine("epoch").build()
+    server.run()
+    sched = server.scheduler
+    for k, q in sched.queues.items():
+        assert (k in sched.hot_queues) == (len(q) > 0)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"] + sys.argv[1:]))
